@@ -1,0 +1,61 @@
+//! Design-space exploration (paper §5): compare L2 cache sizes with the
+//! reference DES and with SimNet, reporting *relative* accuracy — the
+//! metric architects actually use when no hardware exists to validate
+//! against.
+//!
+//! Usage: cargo run --release --example design_space [-- <n-per-bench>]
+
+use std::path::Path;
+
+use simnet::coordinator::simulate_sequential;
+use simnet::des::{simulate, SimConfig};
+use simnet::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
+use simnet::stats::{speedup_pct, Table};
+use simnet::trace::TraceRecord;
+use simnet::workload::find;
+
+const BENCHES: [&str; 3] = ["mcf", "xalancbmk", "lbm"];
+const L2_KB: [u64; 4] = [256, 512, 1024, 4096];
+
+fn main() -> anyhow::Result<()> {
+    let n: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20_000);
+    let mut predictor: Box<dyn LatencyPredictor> =
+        match MlPredictor::load(Path::new("artifacts"), "c3", None) {
+            Ok(p) => Box::new(p),
+            Err(_) => {
+                println!("(artifacts missing; using analytical TablePredictor)");
+                Box::new(TablePredictor::new(32))
+            }
+        };
+
+    println!("=== L2 size exploration: {} instructions x {:?} ===\n", n, BENCHES);
+    let mut table = Table::new(&["l2", "des_cycles", "sim_cycles", "des_speedup", "sim_speedup"]);
+    let mut base: Option<(u64, u64)> = None;
+    for kb in L2_KB {
+        let mut cfg = SimConfig::default_o3();
+        cfg.l2.size = kb << 10;
+        let mut des_total = 0u64;
+        let mut sim_total = 0u64;
+        for bench in BENCHES {
+            let b = find(bench).unwrap();
+            let mut recs = Vec::new();
+            let des = simulate(&cfg, b.workload(1).stream(), n, |e| {
+                recs.push(TraceRecord::from(e));
+            });
+            let out = simulate_sequential(&recs, &cfg, predictor.as_mut(), 0)?;
+            des_total += des.cycles;
+            sim_total += out.cycles;
+        }
+        let (bd, bs) = *base.get_or_insert((des_total, sim_total));
+        table.row(vec![
+            format!("{kb}KB"),
+            des_total.to_string(),
+            sim_total.to_string(),
+            format!("{:+.2}%", speedup_pct(bd, des_total)),
+            format!("{:+.2}%", speedup_pct(bs, sim_total)),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("\nThe two speedup columns should track each other (relative accuracy).");
+    Ok(())
+}

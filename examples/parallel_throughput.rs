@@ -1,0 +1,65 @@
+//! Parallel-simulation throughput demo (paper §3.3 / Figures 8-9): how
+//! sub-trace batching and worker streams turn an inherently sequential
+//! prediction chain into accelerator-sized batches.
+//!
+//! Usage: cargo run --release --example parallel_throughput [-- <n>]
+
+use std::path::Path;
+
+use simnet::coordinator::pool::PoolPredictor;
+use simnet::coordinator::{simulate_parallel, simulate_pool, PoolOptions};
+use simnet::des::{simulate, SimConfig};
+use simnet::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
+use simnet::stats::Table;
+use simnet::trace::TraceRecord;
+use simnet::workload::find;
+
+fn main() -> anyhow::Result<()> {
+    let n: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(50_000);
+    let cfg = SimConfig::default_o3();
+    let b = find("xz").unwrap();
+    let mut recs = Vec::new();
+    let t0 = std::time::Instant::now();
+    simulate(&cfg, b.workload(1).stream(), n, |e| recs.push(TraceRecord::from(e)));
+    let des_mips = n as f64 / t0.elapsed().as_secs_f64() / 1e6;
+
+    let artifacts = Path::new("artifacts");
+    let have_artifacts = artifacts.join("c3.export").exists();
+    let mut predictor: Box<dyn LatencyPredictor> = if have_artifacts {
+        Box::new(MlPredictor::load(artifacts, "c3", None)?)
+    } else {
+        println!("(artifacts missing; using analytical TablePredictor)");
+        Box::new(TablePredictor::new(32))
+    };
+
+    println!("=== sub-trace scaling (single worker) ===");
+    let mut t = Table::new(&["subtraces", "MIPS", "cpi"]);
+    for subs in [1usize, 8, 64, 256, 1024] {
+        let out = simulate_parallel(&recs, &cfg, predictor.as_mut(), subs, 0)?;
+        t.row(vec![subs.to_string(), format!("{:.3}", out.mips()), format!("{:.3}", out.cpi())]);
+    }
+    print!("{}", t.render());
+
+    println!("\n=== worker scaling (256 sub-traces each) ===");
+    let pool_pred = if have_artifacts {
+        PoolPredictor::Ml { artifacts: artifacts.to_path_buf(), model: "c3".into(), weights: None }
+    } else {
+        PoolPredictor::Table { seq: 32 }
+    };
+    let mut t = Table::new(&["workers", "MIPS", "speedup_vs_des"]);
+    for w in [1usize, 2, 4] {
+        let out = simulate_pool(
+            &recs,
+            &cfg,
+            &PoolOptions { workers: w, subtraces: 256 * w, predictor: pool_pred.clone(), window: 0 },
+        )?;
+        t.row(vec![
+            w.to_string(),
+            format!("{:.3}", out.mips()),
+            format!("{:.2}x", out.mips() / des_mips),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\ndes reference: {des_mips:.3} MIPS");
+    Ok(())
+}

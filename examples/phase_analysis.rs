@@ -1,0 +1,69 @@
+//! Phase-level CPI analysis (paper Figure 6): windowed CPI curves from the
+//! DES and from SimNet side by side, as terminal sparklines.
+//!
+//! Usage: cargo run --release --example phase_analysis [-- <bench> <n> <window>]
+
+use std::path::Path;
+
+use simnet::coordinator::simulate_sequential;
+use simnet::des::{simulate, SimConfig};
+use simnet::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
+use simnet::stats::render_cpi_series;
+use simnet::trace::TraceRecord;
+use simnet::workload::find;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let bench = args.first().map(|s| s.as_str()).unwrap_or("bwaves"); // phased benchmark
+    let n: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(60_000);
+    let window: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1_000);
+
+    let cfg = SimConfig::default_o3();
+    let b = find(bench).expect("unknown benchmark");
+    let mut recs = Vec::new();
+    simulate(&cfg, b.workload(1).stream(), n, |e| recs.push(TraceRecord::from(e)));
+
+    // DES windowed CPI from the per-instruction fetch latencies.
+    let mut des_windows = Vec::new();
+    let (mut acc, mut cnt) = (0u64, 0u64);
+    for r in &recs {
+        acc += r.f_lat as u64;
+        cnt += 1;
+        if cnt == window {
+            des_windows.push((cnt, acc));
+            acc = 0;
+            cnt = 0;
+        }
+    }
+
+    let mut predictor: Box<dyn LatencyPredictor> =
+        match MlPredictor::load(Path::new("artifacts"), "c3", None) {
+            Ok(p) => Box::new(p),
+            Err(_) => Box::new(TablePredictor::new(32)),
+        };
+    let out = simulate_sequential(&recs, &cfg, predictor.as_mut(), window)?;
+
+    println!("=== {bench}: CPI per {window}-instruction window ===\n");
+    print!("{}", render_cpi_series("des   ", &des_windows));
+    print!("{}", render_cpi_series("simnet", &out.windows));
+
+    // Phase-tracking score: correlation of the two window series.
+    let d: Vec<f64> =
+        des_windows.iter().map(|(n, c)| *c as f64 / (*n).max(1) as f64).collect();
+    let s: Vec<f64> = out.windows.iter().map(|(n, c)| *c as f64 / (*n).max(1) as f64).collect();
+    let k = d.len().min(s.len());
+    let (dm, sm) = (mean(&d[..k]), mean(&s[..k]));
+    let cov: f64 = (0..k).map(|i| (d[i] - dm) * (s[i] - sm)).sum::<f64>() / k as f64;
+    let (dv, sv) = (var(&d[..k], dm), var(&s[..k], sm));
+    let corr = cov / (dv.sqrt() * sv.sqrt()).max(1e-12);
+    println!("\nwindow-CPI correlation (des vs simnet): {corr:.3}");
+    Ok(())
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
+
+fn var(xs: &[f64], m: f64) -> f64 {
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len().max(1) as f64
+}

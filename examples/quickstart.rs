@@ -1,0 +1,85 @@
+//! Quickstart — the end-to-end driver.
+//!
+//! Exercises the full three-layer stack on a real small workload:
+//!
+//! 1. synthesize a benchmark's dynamic instruction stream (workload gen),
+//! 2. run the reference DES over it (the gem5-substitute teacher),
+//! 3. ML-simulate the same trace with the AOT-compiled Pallas/JAX model
+//!    through the rust PJRT runtime — sequentially and sub-trace-parallel,
+//! 4. report the headline metrics: CPI error vs the DES and simulation
+//!    throughput (MIPS), i.e. the paper's accuracy/performance trade.
+//!
+//! Usage: cargo run --release --example quickstart [-- <bench> <n> <model>]
+//! Falls back to the analytical TablePredictor when `artifacts/` has not
+//! been built yet (run `make artifacts` for the real model).
+
+use std::path::Path;
+
+use simnet::coordinator::{simulate_parallel, simulate_sequential};
+use simnet::des::{simulate, SimConfig};
+use simnet::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
+use simnet::stats::cpi_error;
+use simnet::trace::TraceRecord;
+use simnet::workload::find;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let bench = args.first().map(|s| s.as_str()).unwrap_or("xalancbmk");
+    let n: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(30_000);
+    let model = args.get(2).map(|s| s.as_str()).unwrap_or("c3");
+    let artifacts = Path::new("artifacts");
+
+    println!("=== SimNet quickstart: {bench}, {n} instructions ===\n");
+
+    // 1+2. Workload -> reference DES (teacher + ground truth).
+    let cfg = SimConfig::default_o3();
+    let b = find(bench).expect("unknown benchmark; try `repro list-benches`");
+    let mut records = Vec::new();
+    let t0 = std::time::Instant::now();
+    let des = simulate(&cfg, b.workload(1).stream(), n, |e| {
+        records.push(TraceRecord::from(e));
+    });
+    let des_wall = t0.elapsed().as_secs_f64();
+    println!(
+        "[des]  cpi={:.3}  mispredicts={}  l1d_misses={}  ({:.2} MIPS)",
+        des.cpi(),
+        des.mispredicts,
+        des.l1d_miss,
+        n as f64 / des_wall / 1e6
+    );
+
+    // 3. ML simulation through the AOT artifact (PJRT), if built.
+    let mut predictor: Box<dyn LatencyPredictor> =
+        match MlPredictor::load(artifacts, model, None) {
+            Ok(p) => {
+                println!("[ml]   loaded AOT model '{model}' from artifacts/");
+                Box::new(p)
+            }
+            Err(e) => {
+                println!("[ml]   artifacts not available ({e}); using TablePredictor");
+                Box::new(TablePredictor::new(32))
+            }
+        };
+
+    let seq = simulate_sequential(&records, &cfg, predictor.as_mut(), 0)?;
+    println!(
+        "[ml]   sequential: cpi={:.3}  err={:.2}%  ({:.3} MIPS)",
+        seq.cpi(),
+        cpi_error(seq.cpi(), des.cpi()) * 100.0,
+        seq.mips()
+    );
+
+    for subs in [16usize, 64, 256] {
+        let par = simulate_parallel(&records, &cfg, predictor.as_mut(), subs, 0)?;
+        println!(
+            "[ml]   parallel x{subs:<4}: cpi={:.3}  err={:.2}%  ({:.3} MIPS, {:.1}x vs sequential)",
+            par.cpi(),
+            cpi_error(par.cpi(), des.cpi()) * 100.0,
+            par.mips(),
+            par.mips() / seq.mips().max(1e-12)
+        );
+    }
+
+    println!("\nDone. See `repro report` / `repro sweep` for the paper's full tables.");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+"""AOT export: lower each model's Pallas-kernel forward pass to HLO text.
+
+The interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+One artifact per (model, batch size): `artifacts/<model>_b<B>.hlo.txt`.
+The executable's arguments are [weights..., x] in `param_specs` order, so
+the rust runtime can load any `.smw` whose tensor order matches — weights
+are runtime inputs, never baked constants, which is what lets the §5
+config studies retrain without re-exporting.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--models c3,rb] [--seq 32]
+"""
+
+import argparse
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .smw import write_smw
+
+DEFAULT_BATCHES = (1, 8, 64, 256)
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_model(model_name, seq, out_dir, batches=DEFAULT_BATCHES, quiet=False):
+    """Lower `model_name` at each batch size; write HLO text + init .smw."""
+    os.makedirs(out_dir, exist_ok=True)
+    specs = M.param_specs(model_name, seq)
+    names = [n for n, _ in specs]
+
+    def fwd(*args):
+        ws = dict(zip(names, args[:-1]))
+        x = args[-1]
+        return (M.apply(model_name, ws, x, use_pallas=True),)
+
+    written = []
+    for b in batches:
+        arg_shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+        arg_shapes.append(jax.ShapeDtypeStruct((b, seq, M.NUM_FEATURES), jnp.float32))
+        lowered = jax.jit(fwd).lower(*arg_shapes)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{model_name}_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(path)
+        if not quiet:
+            print(f"[aot] {model_name} b={b}: {len(text)} chars -> {path}")
+
+    # Untrained init weights so the runtime can execute before training.
+    init_path = os.path.join(out_dir, f"{model_name}.init.smw")
+    params = M.init_params(model_name, seq)
+    write_smw(init_path, [(n, np.asarray(params[n])) for n in names])
+
+    # Export manifest for the rust runtime (plain text, no JSON dep).
+    with open(os.path.join(out_dir, f"{model_name}.export"), "w") as f:
+        f.write(f"model {model_name}\nseq_len {seq}\n")
+        f.write("batches " + " ".join(str(b) for b in batches) + "\n")
+        f.write("weights " + " ".join(names) + "\n")
+    return written
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="c3,rb,fc3,lstm2,ithemal_lstm2")
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--batches", default=",".join(str(b) for b in DEFAULT_BATCHES))
+    args = ap.parse_args()
+    batches = tuple(int(b) for b in args.batches.split(","))
+    for m in args.models.split(","):
+        export_model(m.strip(), args.seq, args.out, batches)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Reader for the `.smd` ML dataset format produced by `repro build-dataset`.
+
+Layout (little-endian, see rust/src/trace/mod.rs):
+    magic "SMD1" | u32 seq_len | u32 nfeat | u64 nsamples
+    nsamples x [seq_len * nfeat f32 features, 3 f32 labels]
+
+Samples are exposed as a numpy memmap so multi-hundred-MB datasets never
+need to be resident: training gathers batches by index.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"SMD1"
+HEADER = 20
+NUM_LABELS = 3
+
+
+class Dataset:
+    """Memory-mapped (features, labels) sample store with a 90/5/5 split
+    (paper §2.4: 90% training, 5% validation, 5% testing)."""
+
+    def __init__(self, path):
+        with open(path, "rb") as f:
+            head = f.read(HEADER)
+        assert head[:4] == MAGIC, f"{path} is not an .smd dataset"
+        self.seq_len, self.nfeat = struct.unpack("<II", head[4:12])
+        (self.n,) = struct.unpack("<Q", head[12:20])
+        row = self.seq_len * self.nfeat + NUM_LABELS
+        self._mm = np.memmap(path, dtype="<f4", mode="r", offset=HEADER, shape=(self.n, row))
+        # Deterministic shuffled split.
+        rng = np.random.default_rng(0xDA7A)
+        self._perm = rng.permutation(self.n)
+        n_train = int(self.n * 0.9)
+        n_val = int(self.n * 0.05)
+        self._splits = {
+            "train": self._perm[:n_train],
+            "val": self._perm[n_train : n_train + n_val],
+            "test": self._perm[n_train + n_val :],
+        }
+
+    def split_size(self, split):
+        return len(self._splits[split])
+
+    def batch(self, split, idx, batch_size):
+        """Batch `idx` of `split`: (features (B, seq, nfeat), labels (B, 3))."""
+        ids = self._splits[split][idx * batch_size : (idx + 1) * batch_size]
+        rows = self._mm[np.sort(ids)]
+        feats = rows[:, : self.seq_len * self.nfeat].reshape(-1, self.seq_len, self.nfeat)
+        labels = rows[:, self.seq_len * self.nfeat :]
+        return np.ascontiguousarray(feats), np.ascontiguousarray(labels)
+
+    def batches(self, split, batch_size, limit=None):
+        n = self.split_size(split) // batch_size
+        if limit:
+            n = min(n, limit)
+        for i in range(n):
+            yield self.batch(split, i, batch_size)

@@ -1,0 +1,108 @@
+"""Pallas kernel: the hierarchical k=2/s=2 convolution (paper §2.3).
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper runs this
+convolution through TensorRT on A100 tensor cores (im2col + WMMA tiles).
+On TPU the same layer is better expressed as a *pairs-matmul*: because the
+kernel size equals the stride (2), the convolution is exactly
+
+    y[b, l, :] = relu(concat(x[b, 2l, :], x[b, 2l+1, :]) @ W + bias)
+
+i.e. one dense (B * L/2, 2C) x (2C, C2) matmul — a single MXU-shaped
+contraction per layer with no gather/im2col, no halo exchange. The
+BlockSpec tiles the batch dimension so each grid step works on a
+(BLOCK_B, L, C) panel resident in VMEM, with the full weight panel
+broadcast to every step — the HBM<->VMEM schedule that threadblocks
+expressed on the GPU.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs under the rust runtime. Real-TPU perf is *estimated* from
+the VMEM footprint / MXU utilization in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: chosen so a (BLOCK_B, L, C) input panel + (2C, C2) weights +
+# (BLOCK_B, L/2, C2) output stay well under ~4 MiB of VMEM for every layer
+# geometry in the model zoo (see vmem_bytes()).
+BLOCK_B = 32
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One grid step: pairs-matmul over a VMEM-resident batch tile."""
+    x = x_ref[...]  # (bb, L, C)
+    bb, L, C = x.shape
+    pairs = x.reshape(bb, L // 2, 2 * C)
+    y = jax.lax.dot_general(
+        pairs,
+        w_ref[...],
+        dimension_numbers=(((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = jnp.maximum(y + b_ref[...], 0.0)
+
+
+def conv1d_k2s2(x, w, b, *, block_b=BLOCK_B):
+    """Pallas pairs-matmul convolution; matches `ref.conv1d_k2s2_ref`.
+
+    Args:
+      x: (B, L, C), L even; B padded internally to a multiple of block_b.
+      w: (2 * C, C2); b: (C2,).
+    Returns:
+      (B, L // 2, C2).
+    """
+    B, L, C = x.shape
+    C2 = w.shape[1]
+    assert L % 2 == 0, f"sequence length {L} must be even"
+    assert w.shape[0] == 2 * C, f"weight rows {w.shape[0]} != 2*C={2 * C}"
+    bb = min(block_b, B)
+    pad = (-B) % bb
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+    padded_b = x.shape[0]
+    out = pl.pallas_call(
+        _conv_kernel,
+        grid=(padded_b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, L, C), lambda i: (i, 0, 0)),
+            pl.BlockSpec((2 * C, C2), lambda i: (0, 0)),
+            pl.BlockSpec((C2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, L // 2, C2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_b, L // 2, C2), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+    return out[:B]
+
+
+def vmem_bytes(block_b, L, C, C2):
+    """Estimated VMEM working set of one grid step, in bytes (f32).
+
+    Used by DESIGN.md §Perf to check each layer stays under the ~16 MiB
+    VMEM budget of a TPU core (target: <= 4 MiB so double-buffering fits).
+    """
+    x_tile = block_b * L * C * 4
+    w_tile = 2 * C * C2 * 4
+    o_tile = block_b * (L // 2) * C2 * 4
+    return x_tile + w_tile + o_tile
+
+
+def mxu_utilization(L, C, C2):
+    """Fraction of MXU (128x128) lanes used by the pairs-matmul shapes.
+
+    The contraction is (rows, 2C) @ (2C, C2): utilization is limited by how
+    well 2C and C2 fill the 128-wide systolic dimensions.
+    """
+    k = min(2 * C, 128) / 128.0
+    n = min(C2, 128) / 128.0
+    return k * n
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def conv1d_k2s2_jit(x, w, b, block_b=BLOCK_B):
+    """jit wrapper used by tests."""
+    return conv1d_k2s2(x, w, b, block_b=block_b)

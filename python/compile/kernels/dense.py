@@ -1,0 +1,78 @@
+"""Pallas kernel: fused dense layer (matmul + bias + optional ReLU).
+
+Used for the fully connected tail of every model (paper Fig. 2: "FC
+layers") and for the FC2/FC3 baselines. Tiled over the batch dimension
+like conv1d; the weight panel is broadcast to every grid step. The hidden
+sizes in the model zoo (<= 1024) keep a full (D, H) weight panel + a
+(BLOCK_B, D) activation tile comfortably inside VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 64
+
+
+def _dense_kernel_relu(x_ref, w_ref, b_ref, o_ref):
+    y = jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = jnp.maximum(y + b_ref[...], 0.0)
+
+
+def _dense_kernel_linear(x_ref, w_ref, b_ref, o_ref):
+    y = jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = y + b_ref[...]
+
+
+def dense(x, w, b, relu=True, *, block_b=BLOCK_B):
+    """Pallas fused dense layer; matches `ref.dense_ref`.
+
+    Args:
+      x: (B, D); w: (D, H); b: (H,).
+    Returns:
+      (B, H).
+    """
+    B, D = x.shape
+    H = w.shape[1]
+    assert w.shape[0] == D, f"weight rows {w.shape[0]} != D={D}"
+    bb = min(block_b, B)
+    pad = (-B) % bb
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    padded_b = x.shape[0]
+    kernel = _dense_kernel_relu if relu else _dense_kernel_linear
+    out = pl.pallas_call(
+        kernel,
+        grid=(padded_b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, D), lambda i: (i, 0)),
+            pl.BlockSpec((D, H), lambda i: (0, 0)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, H), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_b, H), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+    return out[:B]
+
+
+def vmem_bytes(block_b, D, H):
+    """Estimated VMEM working set of one grid step (f32 bytes)."""
+    return (block_b * D + D * H + block_b * H) * 4
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "block_b"))
+def dense_jit(x, w, b, relu=True, block_b=BLOCK_B):
+    return dense(x, w, b, relu=relu, block_b=block_b)

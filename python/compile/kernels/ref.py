@@ -1,0 +1,50 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness baseline: every Pallas kernel in this
+package must match its `*_ref` twin bit-for-bit (up to float tolerance)
+under pytest. Training also runs through these functions (they are plain
+differentiable jnp), while AOT export runs through the Pallas versions —
+the pytest equivalence is what licenses that swap.
+"""
+
+import jax.numpy as jnp
+
+
+def conv1d_k2s2_ref(x, w, b):
+    """Hierarchical convolution layer, kernel size 2, stride 2 (paper §2.3).
+
+    SimNet's CNN design principles: non-overlapping inputs, kernel and
+    stride fixed at 2, so each layer halves the sequence and each context
+    instruction's influence is integrated exactly once.
+
+    Args:
+      x: (B, L, C) input sequence (L even).
+      w: (2 * C, C2) fused pair weights.
+      b: (C2,) bias.
+    Returns:
+      (B, L // 2, C2) activations after ReLU.
+    """
+    B, L, C = x.shape
+    pairs = x.reshape(B, L // 2, 2 * C)
+    y = jnp.einsum("blc,cd->bld", pairs, w) + b
+    return jnp.maximum(y, 0.0)
+
+
+def dense_ref(x, w, b, relu=True):
+    """Fully connected layer: (B, D) @ (D, H) + b, optional ReLU."""
+    y = x @ w + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def residual_block_ref(x, w1, b1, w2, b2):
+    """Width-preserving residual block (paper Fig. 2 bottom, RB models).
+
+    Two per-position transforms with a skip connection, EfficientNet style
+    but without squeeze-excite:  y = relu(x + W2 @ relu(W1 @ x)).
+
+    Args:
+      x: (B, L, C); w1, w2: (C, C); b1, b2: (C,).
+    """
+    h = jnp.maximum(jnp.einsum("blc,cd->bld", x, w1) + b1, 0.0)
+    h = jnp.einsum("blc,cd->bld", h, w2) + b2
+    return jnp.maximum(x + h, 0.0)

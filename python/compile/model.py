@@ -1,0 +1,297 @@
+"""L2: the SimNet latency-predictor model zoo (paper §2.3, Table 4).
+
+Models (names match Table 4 rows):
+  fc2, fc3        fully connected baselines
+  c1, c3          conventional CNNs (kernel 2, stride 2 hierarchy)
+  rb              residual-block CNN (the paper's RB7, EfficientNet-style)
+  lstm2           sequence LSTM (SimNet-featured)
+  ithemal_lstm2   same architecture, Ithemal-style fixed-window features
+                  (the feature difference lives on the rust side)
+  tx2             small Transformer encoder (the paper's TX6, scaled)
+
+Every model maps a (B, SEQ, 50) feature tensor to a (B, 33) hybrid head:
+for each of the three latencies (fetch, execution, store) it emits 10
+class logits (cycles 0..8 plus a ">8" class) and 1 regression value in
+LAT_SCALE units (paper §2.3 "From Output to Latency").
+
+`apply(..., use_pallas=True)` routes the convolution/dense hot-spots
+through the Pallas kernels (what gets AOT-exported); `use_pallas=False`
+uses the pure-jnp references (differentiable, used for training). pytest
+asserts both paths agree.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv1d, dense as dense_k, ref
+
+# Feature contract shared with rust/src/features/mod.rs.
+NUM_FEATURES = 50
+# Hybrid head: classes 0..8 + ">8" per latency type.
+NUM_CLASSES = 10
+HEAD_OUT = 3 * (NUM_CLASSES + 1)
+# Latency normalization (rust features::LAT_SCALE).
+LAT_SCALE = 256.0
+
+MODELS = ("fc2", "fc3", "c1", "c3", "rb", "lstm2", "ithemal_lstm2", "tx2")
+
+# ----------------------------------------------------------------------
+# Parameter construction
+# ----------------------------------------------------------------------
+
+
+def _glorot(rng, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = np.sqrt(2.0 / (fan_in + fan_out))
+    return rng.normal(0.0, scale, size=shape).astype(np.float32)
+
+
+def _conv_spec(seq, chans):
+    """(name, shape) params for a k2s2 conv stack over `chans` widths."""
+    specs = []
+    c_in = NUM_FEATURES
+    length = seq
+    for i, c_out in enumerate(chans):
+        specs.append((f"conv{i}/w", (2 * c_in, c_out)))
+        specs.append((f"conv{i}/b", (c_out,)))
+        c_in = c_out
+        length //= 2
+    return specs, c_in * length
+
+
+def param_specs(model, seq):
+    """Ordered (name, shape) list for a model; order == HLO arg order."""
+    if model == "fc2":
+        d = seq * NUM_FEATURES
+        return [
+            ("fc0/w", (d, 256)), ("fc0/b", (256,)),
+            ("out/w", (256, HEAD_OUT)), ("out/b", (HEAD_OUT,)),
+        ]
+    if model == "fc3":
+        d = seq * NUM_FEATURES
+        return [
+            ("fc0/w", (d, 512)), ("fc0/b", (512,)),
+            ("fc1/w", (512, 256)), ("fc1/b", (256,)),
+            ("out/w", (256, HEAD_OUT)), ("out/b", (HEAD_OUT,)),
+        ]
+    if model == "c1":
+        specs, flat = _conv_spec(seq, [64])
+        return specs + [
+            ("fc0/w", (flat, 256)), ("fc0/b", (256,)),
+            ("out/w", (256, HEAD_OUT)), ("out/b", (HEAD_OUT,)),
+        ]
+    if model == "c3":
+        specs, flat = _conv_spec(seq, [64, 96, 128])
+        return specs + [
+            ("fc0/w", (flat, 256)), ("fc0/b", (256,)),
+            ("out/w", (256, HEAD_OUT)), ("out/b", (HEAD_OUT,)),
+        ]
+    if model == "rb":
+        # 7 learned stages: conv64, res64, conv96, res96, conv128, res128,
+        # then the FC tail — the paper's RB7 shape at our scale.
+        specs = []
+        c_in = NUM_FEATURES
+        length = seq
+        for i, c_out in enumerate([64, 96, 128]):
+            specs += [(f"conv{i}/w", (2 * c_in, c_out)), (f"conv{i}/b", (c_out,))]
+            length //= 2
+            specs += [
+                (f"res{i}/w1", (c_out, c_out)), (f"res{i}/b1", (c_out,)),
+                (f"res{i}/w2", (c_out, c_out)), (f"res{i}/b2", (c_out,)),
+            ]
+            c_in = c_out
+        flat = c_in * length
+        return specs + [
+            ("fc0/w", (flat, 256)), ("fc0/b", (256,)),
+            ("out/w", (256, HEAD_OUT)), ("out/b", (HEAD_OUT,)),
+        ]
+    if model in ("lstm2", "ithemal_lstm2"):
+        h = 128
+        specs = []
+        d = NUM_FEATURES
+        for layer in range(2):
+            specs += [
+                (f"lstm{layer}/wx", (d, 4 * h)),
+                (f"lstm{layer}/wh", (h, 4 * h)),
+                (f"lstm{layer}/b", (4 * h,)),
+            ]
+            d = h
+        return specs + [("out/w", (h, HEAD_OUT)), ("out/b", (HEAD_OUT,))]
+    if model == "tx2":
+        d = 64
+        specs = [("embed/w", (NUM_FEATURES, d)), ("embed/b", (d,))]
+        for layer in range(2):
+            specs += [
+                (f"attn{layer}/wq", (d, d)), (f"attn{layer}/wk", (d, d)),
+                (f"attn{layer}/wv", (d, d)), (f"attn{layer}/wo", (d, d)),
+                (f"ffn{layer}/w1", (d, 128)), (f"ffn{layer}/b1", (128,)),
+                (f"ffn{layer}/w2", (128, d)), (f"ffn{layer}/b2", (d,)),
+            ]
+        return specs + [("out/w", (d, HEAD_OUT)), ("out/b", (HEAD_OUT,))]
+    raise ValueError(f"unknown model {model!r}")
+
+
+def init_params(model, seq, seed=0):
+    """Deterministic parameter init; returns an ordered dict name -> array."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_specs(model, seq):
+        if name.endswith("/b") or name.endswith("/b1") or name.endswith("/b2"):
+            params[name] = np.zeros(shape, dtype=np.float32)
+        else:
+            params[name] = _glorot(rng, shape)
+    return params
+
+
+# ----------------------------------------------------------------------
+# Forward passes
+# ----------------------------------------------------------------------
+
+
+def _conv_layer(x, w, b, use_pallas):
+    if use_pallas:
+        return conv1d.conv1d_k2s2(x, w, b)
+    return ref.conv1d_k2s2_ref(x, w, b)
+
+
+def _dense_layer(x, w, b, relu, use_pallas):
+    if use_pallas:
+        return dense_k.dense(x, w, b, relu=relu)
+    return ref.dense_ref(x, w, b, relu=relu)
+
+
+def _lstm_layer(x, wx, wh, b):
+    """Single LSTM layer over (B, T, D) -> (B, T, H), plain jnp."""
+    B, T, _ = x.shape
+    h_dim = wh.shape[0]
+
+    def cell(carry, xt):
+        h, c = carry
+        z = xt @ wx + h @ wh + b
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+        g = jnp.tanh(g)
+        c = f * c + i * g
+        h = o * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((B, h_dim)), jnp.zeros((B, h_dim)))
+    # Scan over time: x transposed to (T, B, D).
+    (_, _), hs = jax.lax.scan(cell, init, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def apply(model, params, x, use_pallas=False):
+    """Forward pass: x (B, SEQ, 50) -> (B, 33) hybrid head outputs."""
+    p = params
+    if model in ("fc2", "fc3"):
+        B = x.shape[0]
+        h = x.reshape(B, -1)
+        h = _dense_layer(h, p["fc0/w"], p["fc0/b"], True, use_pallas)
+        if model == "fc3":
+            h = _dense_layer(h, p["fc1/w"], p["fc1/b"], True, use_pallas)
+        return _dense_layer(h, p["out/w"], p["out/b"], False, use_pallas)
+
+    if model in ("c1", "c3"):
+        chans = 1 if model == "c1" else 3
+        h = x
+        for i in range(chans):
+            h = _conv_layer(h, p[f"conv{i}/w"], p[f"conv{i}/b"], use_pallas)
+        B = h.shape[0]
+        h = h.reshape(B, -1)
+        h = _dense_layer(h, p["fc0/w"], p["fc0/b"], True, use_pallas)
+        return _dense_layer(h, p["out/w"], p["out/b"], False, use_pallas)
+
+    if model == "rb":
+        h = x
+        for i in range(3):
+            h = _conv_layer(h, p[f"conv{i}/w"], p[f"conv{i}/b"], use_pallas)
+            h = ref.residual_block_ref(
+                h, p[f"res{i}/w1"], p[f"res{i}/b1"], p[f"res{i}/w2"], p[f"res{i}/b2"]
+            )
+        B = h.shape[0]
+        h = h.reshape(B, -1)
+        h = _dense_layer(h, p["fc0/w"], p["fc0/b"], True, use_pallas)
+        return _dense_layer(h, p["out/w"], p["out/b"], False, use_pallas)
+
+    if model in ("lstm2", "ithemal_lstm2"):
+        # Feed oldest -> newest so the recurrent state ends on the current
+        # instruction (slot 0 is the current one in the rust encoding).
+        h = x[:, ::-1, :]
+        for layer in range(2):
+            h = _lstm_layer(
+                h, p[f"lstm{layer}/wx"], p[f"lstm{layer}/wh"], p[f"lstm{layer}/b"]
+            )
+        last = h[:, -1, :]
+        return _dense_layer(last, p["out/w"], p["out/b"], False, use_pallas)
+
+    if model == "tx2":
+        d = p["embed/w"].shape[1]
+        h = jnp.einsum("blf,fd->bld", x, p["embed/w"]) + p["embed/b"]
+        for layer in range(2):
+            q = jnp.einsum("bld,de->ble", h, p[f"attn{layer}/wq"])
+            k = jnp.einsum("bld,de->ble", h, p[f"attn{layer}/wk"])
+            v = jnp.einsum("bld,de->ble", h, p[f"attn{layer}/wv"])
+            a = jax.nn.softmax(jnp.einsum("ble,bme->blm", q, k) / np.sqrt(d), axis=-1)
+            att = jnp.einsum("blm,bme->ble", a, v)
+            h = h + jnp.einsum("ble,ed->bld", att, p[f"attn{layer}/wo"])
+            f = jnp.maximum(
+                jnp.einsum("bld,dh->blh", h, p[f"ffn{layer}/w1"]) + p[f"ffn{layer}/b1"], 0.0
+            )
+            h = h + jnp.einsum("blh,hd->bld", f, p[f"ffn{layer}/w2"]) + p[f"ffn{layer}/b2"]
+        cur = h[:, 0, :]  # the to-be-predicted instruction's token
+        return _dense_layer(cur, p["out/w"], p["out/b"], False, use_pallas)
+
+    raise ValueError(f"unknown model {model!r}")
+
+
+# ----------------------------------------------------------------------
+# Hybrid head decode + analytic compute intensity
+# ----------------------------------------------------------------------
+
+
+def decode_latency(outputs):
+    """Vectorized hybrid decode (paper §2.3): per latency type, take the
+    argmax class; classes 0..8 mean that many cycles, class 9 (">8") falls
+    back to the regression output. Returns (B, 3) float latencies.
+
+    The rust runtime implements the identical rule in predictor/mod.rs.
+    """
+    outs = []
+    for t in range(3):
+        base = t * (NUM_CLASSES + 1)
+        logits = outputs[:, base : base + NUM_CLASSES]
+        reg = outputs[:, base + NUM_CLASSES] * LAT_SCALE
+        cls = jnp.argmax(logits, axis=-1)
+        lat = jnp.where(cls < NUM_CLASSES - 1, cls.astype(jnp.float32), jnp.maximum(reg, 9.0))
+        outs.append(lat)
+    return jnp.stack(outs, axis=-1)
+
+
+def flops(model, seq):
+    """Millions of multiplies per single-instruction inference (Table 4's
+    "computation intensity" column), computed analytically from shapes."""
+    total = 0
+    for name, shape in param_specs(model, seq):
+        if name.endswith("/b") or name.endswith("/b1") or name.endswith("/b2"):
+            continue
+        if name.startswith("conv"):
+            c2 = shape[1]
+            # applied at every output position of its layer
+            layer = int(name[4])
+            positions = seq // (2 ** (layer + 1))
+            total += shape[0] * c2 * positions
+        elif name.startswith("res"):
+            layer = int(name[3])
+            positions = seq // (2 ** (layer + 1))
+            total += shape[0] * shape[1] * positions
+        elif name.startswith("lstm"):
+            total += shape[0] * shape[1] * seq
+        elif name.startswith(("attn", "ffn", "embed")):
+            total += shape[0] * shape[1] * seq
+        else:  # fc
+            total += shape[0] * shape[1]
+    if model == "tx2":
+        total += 2 * 2 * seq * seq * 64  # attention scores + weighted sum
+    return total / 1e6

@@ -1,0 +1,43 @@
+"""Python side of the `.smw` weight-tensor container.
+
+Mirror of rust/src/tensor/mod.rs — keep the two in sync.
+"""
+
+import struct
+
+MAGIC = b"SMW1"
+
+
+def write_smw(path, tensors):
+    """Write an ordered list of (name, np.float32 array) pairs."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            data = arr.astype("<f4", copy=False)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", data.ndim))
+            for d in data.shape:
+                f.write(struct.pack("<I", d))
+            f.write(data.tobytes(order="C"))
+
+
+def read_smw(path):
+    """Read back an ordered list of (name, np.float32 array) pairs."""
+    import numpy as np
+
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"{path} is not an .smw file"
+        (count,) = struct.unpack("<I", f.read(4))
+        out = []
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            shape = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(shape)) if ndim else 1
+            arr = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(shape)
+            out.append((name, arr))
+        return out

@@ -1,0 +1,198 @@
+"""Training loop for the latency-predictor model zoo (paper §2.4).
+
+Standard supervised training on `.smd` datasets produced by
+`repro build-dataset`. The objective follows the paper: cross-entropy on
+the per-latency class heads (cycles 0..8 + ">8") plus squared error on the
+regression heads, Adam, lr 1e-3, no weight decay. A `--output reg`
+variant trains the regression heads only (the Table 4 "reg" rows).
+
+Runs once at build time (never on the simulation path) and writes the
+trained weights to `artifacts/<model>.smw` plus a small text meta file the
+rust runtime parses.
+
+Usage:
+    python -m compile.train --dataset ../artifacts/train.smd --model c3 \
+        --epochs 4 --out ../artifacts
+"""
+
+import argparse
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .dataset import Dataset
+from .smw import write_smw
+
+
+def hybrid_loss(outputs, labels, mode="hyb"):
+    """Loss over the 33-way head for labels (B, 3) raw cycles."""
+    total = 0.0
+    for t in range(3):
+        base = t * (M.NUM_CLASSES + 1)
+        logits = outputs[:, base : base + M.NUM_CLASSES]
+        reg = outputs[:, base + M.NUM_CLASSES]
+        lat = labels[:, t]
+        cls = jnp.minimum(lat, M.NUM_CLASSES - 1).astype(jnp.int32)
+        reg_target = lat / M.LAT_SCALE
+        mse = jnp.mean((reg - reg_target) ** 2)
+        if mode == "reg":
+            total = total + mse
+        else:
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            ce = -jnp.mean(jnp.take_along_axis(logp, cls[:, None], axis=1))
+            total = total + ce + mse
+    return total
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat = {k: m[k] / (1 - b1**t) for k in params}
+    vhat = {k: v[k] / (1 - b2**t) for k in params}
+    new = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps) for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def prediction_error(outputs, labels, mode="hyb"):
+    """Paper §2.5 error metric per latency type: |pred - y| / (y + 1)."""
+    if mode == "reg":
+        # regression decode only
+        pred = jnp.stack(
+            [
+                jnp.maximum(outputs[:, t * (M.NUM_CLASSES + 1) + M.NUM_CLASSES], 0.0)
+                * M.LAT_SCALE
+                for t in range(3)
+            ],
+            axis=-1,
+        )
+    else:
+        pred = M.decode_latency(outputs)
+    return jnp.mean(jnp.abs(pred - labels) / (labels + 1.0), axis=0)
+
+
+def train(
+    dataset_path,
+    model_name,
+    out_dir,
+    epochs=4,
+    batch_size=256,
+    lr=1e-3,
+    seed=0,
+    mode="hyb",
+    max_steps=0,
+    cfg_tag="",
+    quiet=False,
+):
+    """Train one model; returns (params, test_errors (3,), history)."""
+    ds = Dataset(dataset_path)
+    seq = ds.seq_len
+    params = {k: jnp.asarray(v) for k, v in M.init_params(model_name, seq, seed).items()}
+
+    def loss_fn(p, x, y):
+        out = M.apply(model_name, p, x, use_pallas=False)
+        return hybrid_loss(out, y, mode)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    apply_jit = jax.jit(lambda p, x: M.apply(model_name, p, x, use_pallas=False))
+
+    opt = adam_init(params)
+    steps_per_epoch = max(1, ds.split_size("train") // batch_size)
+    if max_steps:
+        steps_per_epoch = min(steps_per_epoch, max_steps)
+    history = []
+    best_val = float("inf")
+    best_params = params
+    t0 = time.time()
+    for epoch in range(epochs):
+        for i in range(steps_per_epoch):
+            x, y = ds.batch("train", i, batch_size)
+            loss, grads = grad_fn(params, jnp.asarray(x), jnp.asarray(y))
+            params, opt = adam_update(params, grads, opt, lr=lr)
+        # Validation (paper: val set selects the best checkpoint).
+        vloss = 0.0
+        vn = 0
+        for x, y in ds.batches("val", batch_size, limit=20):
+            vloss += float(loss_fn(params, jnp.asarray(x), jnp.asarray(y)))
+            vn += 1
+        vloss /= max(vn, 1)
+        history.append(vloss)
+        if vloss < best_val:
+            best_val = vloss
+            best_params = params
+        if not quiet:
+            print(
+                f"[train] {model_name} epoch {epoch + 1}/{epochs} "
+                f"val_loss={vloss:.4f} ({time.time() - t0:.0f}s)"
+            )
+    params = best_params
+
+    # Test-set prediction error (Table 4 middle columns).
+    errs = np.zeros(3)
+    n = 0
+    for x, y in ds.batches("test", batch_size, limit=40):
+        out = apply_jit(params, jnp.asarray(x))
+        errs += np.asarray(prediction_error(out, jnp.asarray(y), mode))
+        n += 1
+    errs /= max(n, 1)
+
+    train_seconds = time.time() - t0
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{model_name}{cfg_tag}"
+        names = [name for name, _ in M.param_specs(model_name, seq)]
+        write_smw(
+            os.path.join(out_dir, f"{tag}.smw"),
+            [(name, np.asarray(params[name])) for name in names],
+        )
+        with open(os.path.join(out_dir, f"{tag}.meta"), "w") as f:
+            f.write(f"model {model_name}\nseq_len {seq}\nmode {mode}\n")
+            f.write(f"fetch_err {errs[0]:.6f}\nexec_err {errs[1]:.6f}\nstore_err {errs[2]:.6f}\n")
+            f.write(f"mflops {M.flops(model_name, seq):.3f}\n")
+            f.write(f"train_seconds {train_seconds:.1f}\n")
+        if not quiet:
+            print(
+                f"[train] {tag}: fetch/exec/store err = "
+                f"{errs[0]:.3f}/{errs[1]:.3f}/{errs[2]:.3f} -> {out_dir}/{tag}.smw"
+            )
+    return params, errs, history
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", required=True)
+    ap.add_argument("--model", default="c3", choices=M.MODELS)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--output", dest="mode", default="hyb", choices=["hyb", "reg"])
+    ap.add_argument("--max-steps", type=int, default=0, help="cap steps/epoch (CI)")
+    ap.add_argument("--cfg-tag", default="", help="suffix for config studies, e.g. _rob")
+    args = ap.parse_args()
+    train(
+        args.dataset,
+        args.model,
+        args.out,
+        epochs=args.epochs,
+        batch_size=args.batch_size,
+        lr=args.lr,
+        seed=args.seed,
+        mode=args.mode,
+        max_steps=args.max_steps,
+        cfg_tag=args.cfg_tag,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the core correctness signal for the AOT path: the artifact the
+rust runtime executes is lowered through these kernels, while training
+runs through the refs — they must agree. Hypothesis sweeps shapes/dtypes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv1d, dense, ref
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _arr(rng, shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ----------------------------------------------------------------------
+# conv1d_k2s2
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 9),
+    half_l=st.integers(1, 16),
+    c=st.integers(1, 64),
+    c2=st.integers(1, 64),
+    seed=st.integers(0, 2**16),
+)
+def test_conv_matches_ref_sweep(b, half_l, c, c2, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (b, 2 * half_l, c))
+    w = _arr(rng, (2 * c, c2))
+    bias = _arr(rng, (c2,))
+    got = conv1d.conv1d_k2s2(x, w, bias)
+    want = ref.conv1d_k2s2_ref(x, w, bias)
+    assert got.shape == (b, half_l, c2)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("block_b", [1, 2, 32, 100])
+def test_conv_block_size_invariance(block_b):
+    """Any batch tiling must produce identical results (padding is sliced
+    away)."""
+    rng = np.random.default_rng(7)
+    x = _arr(rng, (13, 8, 50))
+    w = _arr(rng, (100, 64))
+    b = _arr(rng, (64,))
+    got = conv1d.conv1d_k2s2(x, w, b, block_b=block_b)
+    want = ref.conv1d_k2s2_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_conv_relu_clamps_negative():
+    x = -jnp.ones((2, 4, 3))
+    w = jnp.ones((6, 5))
+    b = jnp.zeros((5,))
+    out = conv1d.conv1d_k2s2(x, w, b)
+    assert float(jnp.max(out)) == 0.0
+
+
+def test_conv_rejects_odd_length():
+    with pytest.raises(AssertionError):
+        conv1d.conv1d_k2s2(jnp.zeros((1, 3, 4)), jnp.zeros((8, 2)), jnp.zeros((2,)))
+
+
+def test_conv_vmem_budget_for_model_zoo_shapes():
+    """Every conv geometry used by the zoo fits the 4 MiB VMEM target."""
+    for (l, c, c2) in [(32, 50, 64), (16, 64, 96), (8, 96, 128), (64, 50, 64), (32, 64, 96), (16, 96, 128)]:
+        assert conv1d.vmem_bytes(conv1d.BLOCK_B, l, c, c2) < 4 << 20
+
+
+# ----------------------------------------------------------------------
+# dense
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 70),
+    d=st.integers(1, 128),
+    h=st.integers(1, 64),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_matches_ref_sweep(b, d, h, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (b, d))
+    w = _arr(rng, (d, h))
+    bias = _arr(rng, (h,))
+    got = dense.dense(x, w, bias, relu=relu)
+    want = ref.dense_ref(x, w, bias, relu=relu)
+    assert got.shape == (b, h)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_dense_linear_preserves_sign():
+    x = jnp.array([[-2.0, 1.0]])
+    w = jnp.eye(2)
+    b = jnp.zeros((2,))
+    out = dense.dense(x, w, b, relu=False)
+    np.testing.assert_allclose(out, x, rtol=0, atol=0)
+
+
+# ----------------------------------------------------------------------
+# residual block (ref only; exercised through the rb model)
+# ----------------------------------------------------------------------
+
+
+def test_residual_identity_at_zero_weights():
+    rng = np.random.default_rng(3)
+    x = jnp.abs(_arr(rng, (2, 4, 8)))  # positive so the final relu is identity
+    z = jnp.zeros((8, 8))
+    zb = jnp.zeros((8,))
+    out = ref.residual_block_ref(x, z, zb, z, zb)
+    np.testing.assert_allclose(out, x, rtol=0, atol=0)

@@ -1,0 +1,97 @@
+"""L2 correctness: model zoo shapes, Pallas/ref path equivalence, the
+hybrid latency decode, and the analytic compute-intensity accounting."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+def _x(b=4, seq=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(b, seq, M.NUM_FEATURES)).astype(np.float32))
+
+
+@pytest.mark.parametrize("name", M.MODELS)
+def test_output_shape(name):
+    p = M.init_params(name, 32)
+    out = M.apply(name, p, _x())
+    assert out.shape == (4, M.HEAD_OUT)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+@pytest.mark.parametrize("name", M.MODELS)
+def test_pallas_path_matches_ref_path(name):
+    p = M.init_params(name, 32)
+    x = _x(seed=42)
+    a = M.apply(name, p, x, use_pallas=False)
+    b = M.apply(name, p, x, use_pallas=True)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("seq", [16, 32, 64])
+def test_seq_lengths_supported(seq):
+    for name in ("c3", "rb"):
+        p = M.init_params(name, seq)
+        out = M.apply(name, p, _x(seq=seq))
+        assert out.shape == (4, M.HEAD_OUT)
+
+
+def test_init_deterministic():
+    a = M.init_params("c3", 32, seed=1)
+    b = M.init_params("c3", 32, seed=1)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_decode_latency_class_vs_regression():
+    # Construct outputs where head F picks class 5 and head E picks ">8"
+    # with regression 100/LAT_SCALE; head S picks class 0.
+    out = np.full((1, M.HEAD_OUT), -10.0, dtype=np.float32)
+    out[0, 5] = 10.0  # F class 5
+    out[0, 10] = 0.0  # F regression (ignored)
+    base_e = M.NUM_CLASSES + 1
+    out[0, base_e + 9] = 10.0  # E class ">8"
+    out[0, base_e + 10] = 100.0 / M.LAT_SCALE
+    base_s = 2 * (M.NUM_CLASSES + 1)
+    out[0, base_s + 0] = 10.0  # S class 0
+    lat = np.asarray(M.decode_latency(jnp.asarray(out)))
+    assert lat[0, 0] == 5.0
+    assert abs(lat[0, 1] - 100.0) < 1e-4
+    assert lat[0, 2] == 0.0
+
+
+def test_decode_latency_regression_floor():
+    # ">8" class with a tiny regression must still decode to >= 9 cycles
+    # (the class already asserts the latency exceeds 8).
+    out = np.full((1, M.HEAD_OUT), -10.0, dtype=np.float32)
+    out[0, 9] = 10.0  # F ">8"
+    out[0, 10] = 0.001
+    lat = np.asarray(M.decode_latency(jnp.asarray(out)))
+    assert lat[0, 0] >= 9.0
+
+
+def test_flops_ordering_matches_paper():
+    """Table 4: FC < CNN ordering of intensity, LSTM/TX well above CNNs."""
+    seq = 32
+    f = {m: M.flops(m, seq) for m in M.MODELS}
+    assert f["c1"] < f["c3"] <= f["rb"]
+    assert f["c3"] < f["lstm2"]
+    assert f["c3"] < f["tx2"]
+
+
+def test_param_specs_order_is_stable():
+    names1 = [n for n, _ in M.param_specs("rb", 32)]
+    names2 = [n for n, _ in M.param_specs("rb", 32)]
+    assert names1 == names2
+    assert names1[0] == "conv0/w" and names1[-1] == "out/b"
+
+
+def test_batch_consistency():
+    """Per-sample outputs must not depend on batch composition."""
+    p = M.init_params("c3", 32)
+    x = _x(b=8, seed=9)
+    full = np.asarray(M.apply("c3", p, x))
+    single = np.asarray(M.apply("c3", p, x[2:3]))
+    np.testing.assert_allclose(full[2:3], single, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,30 @@
+//! Bench: reference-DES throughput (the paper's gem5 baseline line in
+//! Figures 9/10) for both Table 2 configurations, across representative
+//! benchmarks.
+
+mod common;
+
+use simnet::des::{simulate, SimConfig};
+use simnet::stats::Table;
+use simnet::workload::find;
+
+fn main() {
+    let n = common::bench_n(200_000);
+    common::hr(&format!("DES throughput ({n} instructions/benchmark)"));
+    let mut t = Table::new(&["config", "benchmark", "cpi", "MIPS"]);
+    for cfg in [SimConfig::default_o3(), SimConfig::a64fx()] {
+        for bench in ["perlbench", "mcf", "lbm", "exchange2"] {
+            let b = find(bench).unwrap();
+            let t0 = std::time::Instant::now();
+            let stats = simulate(&cfg, b.workload(1).stream(), n, |_| {});
+            let wall = t0.elapsed().as_secs_f64();
+            t.row(vec![
+                cfg.name.to_string(),
+                bench.to_string(),
+                format!("{:.3}", stats.cpi()),
+                format!("{:.3}", n as f64 / wall / 1e6),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,40 @@
+//! Bench: Figure 10 (overall throughput incl. training amortization) and
+//! Figure 11 (feature attribution).
+
+mod common;
+
+use simnet::coordinator::simulate_parallel;
+use simnet::des::SimConfig;
+use simnet::reports::{attribution, des_trace, figs, table4, PredictorChoice, REFERENCE_SEED};
+use simnet::workload::find;
+
+fn main() {
+    let n = common::bench_n(24_000);
+    let cfg = SimConfig::default_o3();
+    common::hr("Figure 10 (training amortization)");
+    let models: Vec<String> = vec!["c3".into(), "rb".into()];
+    let b = find("xz").unwrap();
+    let t0 = std::time::Instant::now();
+    let (recs, _) = des_trace(&cfg, &b, n, REFERENCE_SEED);
+    let des_mips = n as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    let mut sim_mips = Vec::new();
+    for m in &models {
+        let choice = PredictorChoice::ml(&common::artifacts(), &table4::export_name(m));
+        if let Ok(mut p) = choice.build() {
+            if let Ok(out) = simulate_parallel(&recs, &cfg, p.as_mut(), 64, 0) {
+                sim_mips.push((m.clone(), out.mips()));
+            }
+        }
+    }
+    match figs::fig10(&common::artifacts(), &models, &cfg, &sim_mips, des_mips) {
+        Ok(r) => print!("{r}"),
+        Err(e) => eprintln!("fig10 failed: {e}"),
+    }
+    common::hr("Figure 11 (feature attribution)");
+    let choice = common::choice_or_fallback("c3");
+    let benches: Vec<String> = vec!["gcc".into(), "mcf".into()];
+    match attribution::attribution(&cfg, &choice, 192, Some(&benches)) {
+        Ok(attr) => print!("{}", attribution::render(&attr)),
+        Err(e) => eprintln!("attribution failed: {e}"),
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench: Figure 5 (per-benchmark CPI, DES vs models) and Figure 6
+//! (phase-level CPI curves).
+
+mod common;
+
+use simnet::des::SimConfig;
+use simnet::reports::figs;
+
+fn main() {
+    let n = common::bench_n(20_000);
+    let cfg = SimConfig::default_o3();
+    let choices = vec![common::choice_or_fallback("c3"), common::choice_or_fallback("rb")];
+    common::hr(&format!("Figure 5 ({n} instructions/benchmark)"));
+    match figs::fig5(&cfg, &choices, n, 3_000, None) {
+        Ok(r) => print!("{r}"),
+        Err(e) => eprintln!("fig5 failed: {e}"),
+    }
+    common::hr("Figure 6 (phase CPI, 4 representative benchmarks)");
+    let benches: Vec<String> =
+        ["bwaves", "xalancbmk", "cam4", "povray"].iter().map(|s| s.to_string()).collect();
+    match figs::fig6(&cfg, &choices[..1], n, n / 40, Some(&benches)) {
+        Ok(r) => print!("{r}"),
+        Err(e) => eprintln!("fig6 failed: {e}"),
+    }
+}

@@ -1,0 +1,29 @@
+//! Bench: Figure 7 (parallel error vs sub-trace size), Figure 8
+//! (throughput vs #sub-traces), Figure 9 (worker scaling + power).
+
+mod common;
+
+use simnet::des::SimConfig;
+use simnet::reports::sweeps;
+
+fn main() {
+    let n = common::bench_n(24_000);
+    let cfg = SimConfig::default_o3();
+    let choice = common::choice_or_fallback("c3");
+    let benches: Vec<String> = ["gcc", "mcf", "lbm"].iter().map(|s| s.to_string()).collect();
+    common::hr("Figure 7 (parallel error vs sub-trace size)");
+    match sweeps::fig7(&cfg, &choice, n, &[750, 1_500, 3_000, 6_000, 12_000], Some(&benches)) {
+        Ok(r) => print!("{r}"),
+        Err(e) => eprintln!("fig7 failed: {e}"),
+    }
+    common::hr("Figure 8 (throughput vs #sub-traces)");
+    match sweeps::fig8(&cfg, &choice, n, &[1, 4, 16, 64, 256, 1024], "xz") {
+        Ok(r) => print!("{r}"),
+        Err(e) => eprintln!("fig8 failed: {e}"),
+    }
+    common::hr("Figure 9 (worker scaling + power efficiency)");
+    match sweeps::fig9(&cfg, &choice, n, &[1, 2, 4, 8], 512, "xz") {
+        Ok(r) => print!("{r}"),
+        Err(e) => eprintln!("fig9 failed: {e}"),
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: Table 4 — per-model prediction error, compute intensity, and
+//! benchmark simulation error (train avg / sim avg / all avg) vs the DES.
+
+mod common;
+
+use simnet::des::SimConfig;
+use simnet::reports::table4;
+
+fn main() {
+    let n = common::bench_n(20_000);
+    common::hr(&format!("Table 4 ({n} instructions/benchmark)"));
+    let models: Vec<String> = ["fc3", "c3", "c3_reg", "rb", "lstm2", "ithemal_lstm2"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let cfg = SimConfig::default_o3();
+    match table4::run(&common::artifacts(), &models, &cfg, n, 3_000) {
+        Ok(report) => print!("{report}"),
+        Err(e) => eprintln!("table4 failed: {e}"),
+    }
+}

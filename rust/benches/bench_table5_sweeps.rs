@@ -1,0 +1,34 @@
+//! Bench: Table 5 (branch-predictor study) and the §5 L2-size and
+//! ROB-size explorations.
+
+mod common;
+
+use simnet::des::SimConfig;
+use simnet::reports::sweeps;
+
+fn main() {
+    let n = common::bench_n(32_000);
+    let cfg = SimConfig::default_o3();
+    let choice = common::choice_or_fallback("c3");
+    let benches: Vec<String> =
+        ["perlbench", "xalancbmk", "deepsjeng", "specrand_i"].iter().map(|s| s.to_string()).collect();
+    common::hr("Table 5 (branch predictors)");
+    match sweeps::table5(&cfg, &choice, n, Some(&benches)) {
+        Ok(r) => print!("{r}"),
+        Err(e) => eprintln!("table5 failed: {e}"),
+    }
+    common::hr("L2 size exploration (§5)");
+    // L2 capacity only matters once a benchmark loops over a >256KB warm
+    // set, so this sweep uses the L2-resident workloads and longer runs.
+    let l2n = n * 6;
+    let mem_benches: Vec<String> = vec!["omnetpp".into(), "xz".into(), "gcc".into()];
+    match sweeps::l2_sweep(&cfg, &choice, l2n, &[256, 512, 1024, 2048, 4096], Some(&mem_benches)) {
+        Ok(r) => print!("{r}"),
+        Err(e) => eprintln!("l2 sweep failed: {e}"),
+    }
+    common::hr("ROB size exploration (§5)");
+    match sweeps::rob_sweep(&cfg, &choice, n, &[40, 80, 120], Some(&benches)) {
+        Ok(r) => print!("{r}"),
+        Err(e) => eprintln!("rob sweep failed: {e}"),
+    }
+}

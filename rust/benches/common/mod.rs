@@ -1,0 +1,40 @@
+//! Shared helpers for the bench harnesses (criterion is not vendored in
+//! this image, so each bench is a plain `harness = false` binary that
+//! prints its report table — one bench per paper table/figure).
+
+use std::path::PathBuf;
+
+use simnet::reports::PredictorChoice;
+
+/// Artifacts dir (env override: SIMNET_ARTIFACTS).
+pub fn artifacts() -> PathBuf {
+    std::env::var("SIMNET_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// ML predictor choice if the model's artifacts exist, else the analytical
+/// fallback (so `cargo bench` always runs).
+#[allow(dead_code)]
+pub fn choice_or_fallback(model: &str) -> PredictorChoice {
+    let dir = artifacts();
+    if dir.join(format!("{model}.export")).exists() {
+        PredictorChoice::Ml {
+            artifacts: dir.clone(),
+            model: model.to_string(),
+            weights: Some(dir.join(format!("{model}.smw"))).filter(|p: &PathBuf| p.exists()),
+        }
+    } else {
+        eprintln!("[bench] artifacts for '{model}' missing — falling back to TablePredictor");
+        PredictorChoice::Table { seq: 32 }
+    }
+}
+
+/// Bench scale from env (SIMNET_BENCH_N), default n.
+pub fn bench_n(default: u64) -> u64 {
+    std::env::var("SIMNET_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn hr(title: &str) {
+    println!("\n{}\n{}", title, "=".repeat(title.len()));
+}

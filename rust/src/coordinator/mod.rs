@@ -1,0 +1,149 @@
+//! The SimNet simulator proper (paper §3): instruction-centric simulation
+//! driven by the ML latency predictor.
+//!
+//! * [`sequential`] — the reference single-stream simulator (§3.2):
+//!   predict → push into context queues → advance `curTick` by F.
+//! * [`parallel`] — the sub-trace parallel simulator (§3.3): the trace is
+//!   split into equally sized contiguous sub-traces, each simulated
+//!   sequentially with its own context/clock, with the per-step
+//!   predictions of all sub-traces batched into single accelerator calls.
+//! * [`pool`] — the multi-worker orchestration standing in for the paper's
+//!   multi-GPU scaling: sub-traces are sharded across OS threads, each
+//!   owning its own PJRT executable (one "device stream" per worker).
+
+pub mod parallel;
+pub mod pool;
+pub mod sequential;
+
+pub use parallel::{simulate_parallel, simulate_parallel_cfg};
+pub use pool::{simulate_pool, PoolOptions};
+pub use sequential::simulate_sequential;
+
+/// Result of an ML-simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct SimOutcome {
+    pub instructions: u64,
+    /// Predicted program cycles (Eq. 1: sum of F plus drain).
+    pub cycles: u64,
+    /// (instructions, cycles) per window, for phase-level CPI curves
+    /// (Figure 6). Windows follow original trace order.
+    pub windows: Vec<(u64, u64)>,
+    /// Wall-clock seconds spent simulating (excludes artifact compile).
+    pub wall_seconds: f64,
+    /// Total predictor invocations (= instructions simulated).
+    pub inferences: u64,
+}
+
+impl SimOutcome {
+    pub fn cpi(&self) -> f64 {
+        if self.instructions == 0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.instructions as f64
+        }
+    }
+
+    /// Simulation throughput in million instructions per second.
+    pub fn mips(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            self.instructions as f64 / self.wall_seconds / 1e6
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::{simulate, SimConfig};
+    use crate::predictor::TablePredictor;
+    use crate::trace::TraceRecord;
+    use crate::workload::find;
+
+    fn make_records(bench: &str, n: u64) -> (Vec<TraceRecord>, crate::des::DesStats) {
+        let cfg = SimConfig::default_o3();
+        let b = find(bench).unwrap();
+        let mut recs = Vec::new();
+        let stats = simulate(&cfg, b.workload(0).stream(), n, |e| {
+            recs.push(TraceRecord::from(e));
+        });
+        (recs, stats)
+    }
+
+    /// An "oracle" run: feed the DES ground-truth latencies through the
+    /// simulator loop. This validates Eq. 1 end-to-end: with perfect
+    /// latency predictions the ML simulator must land within the drain
+    /// slack of the DES cycle count.
+    #[test]
+    fn oracle_latencies_reproduce_des_cycles() {
+        let cfg = SimConfig::default_o3();
+        let (recs, stats) = make_records("gcc", 20_000);
+        let mut tracker = crate::features::ContextTracker::new(&cfg);
+        for r in &recs {
+            tracker.push(&r.inst, &r.hist, r.f_lat, r.e_lat, r.s_lat);
+        }
+        let cycles = tracker.cur_tick + tracker.drain();
+        let ratio = cycles as f64 / stats.cycles as f64;
+        assert!(
+            (0.95..=1.05).contains(&ratio),
+            "oracle replay off: {cycles} vs {} (ratio {ratio:.3})",
+            stats.cycles
+        );
+    }
+
+    #[test]
+    fn sequential_runs_and_is_deterministic() {
+        let cfg = SimConfig::default_o3();
+        let (recs, _) = make_records("namd", 5_000);
+        let mut p1 = TablePredictor::new(16);
+        let a = simulate_sequential(&recs, &cfg, &mut p1, 1000).unwrap();
+        let mut p2 = TablePredictor::new(16);
+        let b = simulate_sequential(&recs, &cfg, &mut p2, 1000).unwrap();
+        assert_eq!(a.instructions, 5_000);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.windows.len(), 5);
+        assert!(a.cpi() > 0.1 && a.cpi() < 100.0, "cpi={}", a.cpi());
+    }
+
+    #[test]
+    fn parallel_matches_sequential_on_large_subtraces() {
+        // With 1 sub-trace, parallel must equal sequential exactly.
+        let cfg = SimConfig::default_o3();
+        let (recs, _) = make_records("leela", 4_000);
+        let mut p1 = TablePredictor::new(16);
+        let seq = simulate_sequential(&recs, &cfg, &mut p1, 0).unwrap();
+        let mut p2 = TablePredictor::new(16);
+        let par1 = simulate_parallel(&recs, &cfg, &mut p2, 1, 0).unwrap();
+        assert_eq!(seq.cycles, par1.cycles);
+        // With several sub-traces the totals differ only by boundary
+        // effects (cold context at each sub-trace start).
+        let mut p4 = TablePredictor::new(16);
+        let par4 = simulate_parallel(&recs, &cfg, &mut p4, 4, 0).unwrap();
+        assert_eq!(par4.instructions, 4_000);
+        let ratio = par4.cycles as f64 / seq.cycles as f64;
+        assert!((0.8..=1.25).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn parallel_subtrace_count_exceeding_len_clamps() {
+        let cfg = SimConfig::default_o3();
+        let (recs, _) = make_records("xz", 100);
+        let mut p = TablePredictor::new(16);
+        let out = simulate_parallel(&recs, &cfg, &mut p, 1000, 0).unwrap();
+        assert_eq!(out.instructions, 100);
+    }
+
+    #[test]
+    fn windows_partition_instructions() {
+        let cfg = SimConfig::default_o3();
+        let (recs, _) = make_records("mcf", 7_500);
+        let mut p = TablePredictor::new(16);
+        let out = simulate_sequential(&recs, &cfg, &mut p, 2000).unwrap();
+        let total: u64 = out.windows.iter().map(|(n, _)| n).sum();
+        assert_eq!(total, 7_500);
+        let cyc: u64 = out.windows.iter().map(|(_, c)| c).sum();
+        // Window cycles exclude the final drain only.
+        assert!(cyc <= out.cycles && out.cycles - cyc < 100_000);
+    }
+}

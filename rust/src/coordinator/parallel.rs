@@ -1,0 +1,128 @@
+//! Sub-trace parallel ML simulation (paper §3.3, Figure 4).
+//!
+//! The input trace is partitioned into `num_subtraces` equally sized
+//! *contiguous* sub-traces. Each sub-trace is simulated sequentially
+//! against its own context queues and clock, but every simulation step
+//! gathers the next instruction of all still-active sub-traces into ONE
+//! batched predictor call — this is what turns the inherently sequential
+//! prediction chain into accelerator-sized batches. Total time is the sum
+//! of the per-sub-trace clocks; the loss of cross-boundary context is the
+//! accuracy cost Figure 7 studies.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::des::SimConfig;
+use crate::features::{ContextTracker, NUM_FEATURES};
+use crate::predictor::LatencyPredictor;
+use crate::trace::TraceRecord;
+
+use super::SimOutcome;
+
+struct SubTrace<'a> {
+    records: &'a [TraceRecord],
+    pos: usize,
+    tracker: ContextTracker,
+    /// Windowed CPI bookkeeping (concatenated in trace order afterwards).
+    windows: Vec<(u64, u64)>,
+    window_insts: u64,
+    window_start: u64,
+}
+
+/// Simulate with `num_subtraces`-way sub-trace parallelism. `window` > 0
+/// emits CPI-series windows (in original trace order).
+pub fn simulate_parallel(
+    records: &[TraceRecord],
+    cfg: &SimConfig,
+    predictor: &mut dyn LatencyPredictor,
+    num_subtraces: usize,
+    window: u64,
+) -> Result<SimOutcome> {
+    simulate_parallel_cfg(records, cfg, predictor, num_subtraces, window, 0.0)
+}
+
+/// [`simulate_parallel`] with the configuration feature set on every
+/// context tracker (the §5 ROB study feeds the ROB size here).
+pub fn simulate_parallel_cfg(
+    records: &[TraceRecord],
+    cfg: &SimConfig,
+    predictor: &mut dyn LatencyPredictor,
+    num_subtraces: usize,
+    window: u64,
+    cfg_feature: f32,
+) -> Result<SimOutcome> {
+    let n = records.len();
+    let s = num_subtraces.clamp(1, n.max(1));
+    let chunk = n.div_ceil(s);
+    let seq = predictor.seq_len();
+    let width = seq * NUM_FEATURES;
+    let mode = predictor.context_mode();
+
+    let mut subs: Vec<SubTrace> = records
+        .chunks(chunk)
+        .map(|c| {
+            let mut tracker = ContextTracker::with_mode(cfg, mode);
+            tracker.cfg_feature = cfg_feature;
+            SubTrace {
+            records: c,
+            pos: 0,
+            tracker,
+            windows: Vec::new(),
+            window_insts: 0,
+            window_start: 0,
+        }})
+        .collect();
+
+    let mut batch = vec![0.0f32; subs.len() * width];
+    let mut active: Vec<usize> = (0..subs.len()).collect();
+    let mut out = SimOutcome::default();
+    let t0 = Instant::now();
+
+    while !active.is_empty() {
+        // Gather: encode the next instruction of every active sub-trace.
+        for (k, &si) in active.iter().enumerate() {
+            let sub = &subs[si];
+            let rec = &sub.records[sub.pos];
+            sub.tracker.encode_input(
+                &rec.inst,
+                &rec.hist,
+                seq,
+                &mut batch[k * width..(k + 1) * width],
+            );
+        }
+        // One batched inference across sub-traces.
+        let preds = predictor.predict(&batch, active.len())?;
+        // Scatter: apply predictions, advance cursors.
+        for (k, &si) in active.iter().enumerate() {
+            let sub = &mut subs[si];
+            let rec = &sub.records[sub.pos];
+            let (f, e, s_lat) = preds[k];
+            let s_lat = if rec.inst.is_store() { s_lat.max(e + 1) } else { 0 };
+            sub.tracker.push(&rec.inst, &rec.hist, f, e.max(1), s_lat);
+            sub.pos += 1;
+            out.instructions += 1;
+            sub.window_insts += 1;
+            if window > 0 && sub.window_insts == window {
+                sub.windows.push((sub.window_insts, sub.tracker.cur_tick - sub.window_start));
+                sub.window_start = sub.tracker.cur_tick;
+                sub.window_insts = 0;
+            }
+        }
+        active.retain(|&si| subs[si].pos < subs[si].records.len());
+    }
+
+    // Total cycles = sum of per-sub-trace clocks (paper: "we sum up their
+    // curTicks to get the total execution time").
+    for sub in &mut subs {
+        if window > 0 && sub.window_insts > 0 {
+            sub.windows.push((sub.window_insts, sub.tracker.cur_tick - sub.window_start));
+        }
+        sub.tracker.drain();
+        out.cycles += sub.tracker.cur_tick;
+        out.windows.extend(sub.windows.drain(..));
+    }
+    out.inferences = out.instructions;
+    out.wall_seconds = t0.elapsed().as_secs_f64();
+    Ok(out)
+}

@@ -1,0 +1,58 @@
+//! Sequential ML simulation (paper §3.2).
+//!
+//! One instruction at a time: encode (current + context) → predict
+//! (F, E, S) → push into the context queues → `curTick += F`. The final
+//! drain adds the paper's `Delta` from Eq. 1.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::des::SimConfig;
+use crate::features::{ContextTracker, NUM_FEATURES};
+use crate::predictor::LatencyPredictor;
+use crate::trace::TraceRecord;
+
+use super::SimOutcome;
+
+/// Simulate `records` sequentially with `predictor`. `window` > 0 emits a
+/// CPI series entry every `window` instructions (Figure 6).
+pub fn simulate_sequential(
+    records: &[TraceRecord],
+    cfg: &SimConfig,
+    predictor: &mut dyn LatencyPredictor,
+    window: u64,
+) -> Result<SimOutcome> {
+    let seq = predictor.seq_len();
+    let mut tracker = ContextTracker::with_mode(cfg, predictor.context_mode());
+    let mut buf = vec![0.0f32; seq * NUM_FEATURES];
+    let mut out = SimOutcome::default();
+    let mut window_insts = 0u64;
+    let mut window_start_tick = 0u64;
+    let t0 = Instant::now();
+
+    for rec in records {
+        tracker.encode_input(&rec.inst, &rec.hist, seq, &mut buf);
+        let (f, e, s) = predictor.predict(&buf, 1)?[0];
+        // Stores must have a store latency at least covering execution;
+        // non-stores must not linger in the memory write queue.
+        let s = if rec.inst.is_store() { s.max(e + 1) } else { 0 };
+        tracker.push(&rec.inst, &rec.hist, f, e.max(1), s);
+        out.instructions += 1;
+        window_insts += 1;
+        if window > 0 && window_insts == window {
+            out.windows.push((window_insts, tracker.cur_tick - window_start_tick));
+            window_start_tick = tracker.cur_tick;
+            window_insts = 0;
+        }
+    }
+    if window > 0 && window_insts > 0 {
+        out.windows.push((window_insts, tracker.cur_tick - window_start_tick));
+    }
+    let drain = tracker.drain();
+    out.cycles = tracker.cur_tick;
+    let _ = drain;
+    out.inferences = out.instructions;
+    out.wall_seconds = t0.elapsed().as_secs_f64();
+    Ok(out)
+}

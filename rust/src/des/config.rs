@@ -1,0 +1,242 @@
+//! Simulated processor configurations (paper Table 2).
+
+/// Parameters of one cache level (tag behaviour + timing).
+#[derive(Debug, Clone)]
+pub struct CacheParams {
+    /// Total size in bytes.
+    pub size: u64,
+    /// Associativity (ways).
+    pub ways: usize,
+    /// Line size in bytes.
+    pub line: u64,
+    /// Number of MSHRs (outstanding misses).
+    pub mshrs: usize,
+    /// Access (hit) latency in cycles.
+    pub hit_latency: u32,
+}
+
+impl CacheParams {
+    pub fn sets(&self) -> usize {
+        (self.size / self.line) as usize / self.ways
+    }
+}
+
+/// Parameters of a 2-stage TLB (paper: "2-stage TLBs, 1KB TLB caches").
+#[derive(Debug, Clone)]
+pub struct TlbParams {
+    /// First-stage TLB entries (fully busy path).
+    pub l1_entries: usize,
+    /// Second-stage TLB entries.
+    pub l2_entries: usize,
+    /// Associativity of both stages.
+    pub ways: usize,
+    /// MSHRs for walks in flight.
+    pub mshrs: usize,
+    /// Latency of an L2-TLB hit.
+    pub l2_latency: u32,
+    /// Latency per page-walk memory access that misses walk caches.
+    pub walk_latency: u32,
+}
+
+/// Branch-predictor choice (Table 5 studies BiMode_l and TAGE-SC-L; we
+/// implement bimode, a large bimode, and a TAGE-lite).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BpChoice {
+    /// Baseline bi-mode predictor.
+    BiMode,
+    /// Large bi-mode (4x tables) — paper Table 5 "BiMode_l".
+    BiModeLarge,
+    /// TAGE-like tagged geometric-history predictor — stands in for
+    /// TAGE-SC-L.
+    TageLite,
+}
+
+/// Stride prefetcher parameters (A64FX L1D has an 8-degree one).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefetchParams {
+    pub enabled: bool,
+    /// Number of lines fetched ahead on a detected stride.
+    pub degree: u32,
+}
+
+/// Full simulated-processor configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub name: &'static str,
+    // ---- core ----
+    /// Instructions fetched per cycle.
+    pub fetch_width: u32,
+    /// Out-of-order issue width.
+    pub issue_width: u32,
+    /// In-order commit width.
+    pub commit_width: u32,
+    /// Issue-queue entries.
+    pub iq_entries: usize,
+    /// Reorder-buffer entries.
+    pub rob_entries: usize,
+    /// Load-queue entries.
+    pub lq_entries: usize,
+    /// Store-queue entries.
+    pub sq_entries: usize,
+    /// Functional-unit counts indexed by `FuClass as usize` (None excluded).
+    pub fu_counts: [u32; 8],
+    /// Frontend redirect penalty after a resolved misprediction (cycles).
+    pub redirect_penalty: u32,
+    /// Pipeline depth from fetch to dispatch (decode/rename stages).
+    pub frontend_depth: u32,
+    // ---- memory system ----
+    pub l1i: CacheParams,
+    pub l1d: CacheParams,
+    pub l2: CacheParams,
+    /// Main-memory access latency (cycles).
+    pub mem_latency: u32,
+    pub itlb: TlbParams,
+    pub dtlb: TlbParams,
+    pub l1d_prefetch: PrefetchParams,
+    // ---- branch prediction ----
+    pub bp: BpChoice,
+    /// Branch-target-buffer entries.
+    pub btb_entries: usize,
+    /// Return-address-stack entries.
+    pub ras_entries: usize,
+}
+
+impl SimConfig {
+    /// The paper's "Default O3CPU" column of Table 2: 3-wide fetch, 8-wide
+    /// issue/commit, bi-mode, 32-entry IQ, 40-entry ROB, 16-entry LQ/SQ,
+    /// 48KB L1I, 32KB L1D (5 cycles), 1MB L2 (29 cycles).
+    pub fn default_o3() -> Self {
+        SimConfig {
+            name: "default_o3",
+            fetch_width: 3,
+            issue_width: 8,
+            commit_width: 8,
+            iq_entries: 32,
+            rob_entries: 40,
+            lq_entries: 16,
+            sq_entries: 16,
+            // IntAlu, IntMulDiv, FpAlu, FpMulDiv, Simd, LoadPort, StorePort, Branch
+            fu_counts: [4, 1, 2, 1, 2, 2, 1, 1],
+            redirect_penalty: 5,
+            frontend_depth: 4,
+            l1i: CacheParams { size: 48 << 10, ways: 3, line: 64, mshrs: 4, hit_latency: 1 },
+            l1d: CacheParams { size: 32 << 10, ways: 2, line: 64, mshrs: 16, hit_latency: 5 },
+            l2: CacheParams { size: 1 << 20, ways: 16, line: 64, mshrs: 32, hit_latency: 29 },
+            mem_latency: 140,
+            itlb: TlbParams {
+                l1_entries: 48,
+                l2_entries: 128,
+                ways: 8,
+                mshrs: 6,
+                l2_latency: 8,
+                walk_latency: 40,
+            },
+            dtlb: TlbParams {
+                l1_entries: 48,
+                l2_entries: 128,
+                ways: 8,
+                mshrs: 6,
+                l2_latency: 8,
+                walk_latency: 40,
+            },
+            l1d_prefetch: PrefetchParams { enabled: false, degree: 0 },
+            bp: BpChoice::BiMode,
+            btb_entries: 4096,
+            ras_entries: 16,
+        }
+    }
+
+    /// The paper's A64FX-like column of Table 2: 8-wide fetch, 4-wide
+    /// issue/commit, 48-entry IQ, 128-entry ROB, 40/24 LQ/SQ, 64KB L1s
+    /// (8-cycle L1D), 8MB L2 (111 cycles), 8-degree stride prefetcher.
+    pub fn a64fx() -> Self {
+        SimConfig {
+            name: "a64fx",
+            fetch_width: 8,
+            issue_width: 4,
+            commit_width: 4,
+            iq_entries: 48,
+            rob_entries: 128,
+            lq_entries: 40,
+            sq_entries: 24,
+            fu_counts: [2, 1, 2, 2, 2, 2, 2, 1],
+            redirect_penalty: 7,
+            frontend_depth: 5,
+            l1i: CacheParams { size: 64 << 10, ways: 4, line: 256, mshrs: 8, hit_latency: 2 },
+            l1d: CacheParams { size: 64 << 10, ways: 4, line: 256, mshrs: 21, hit_latency: 8 },
+            l2: CacheParams { size: 8 << 20, ways: 16, line: 256, mshrs: 64, hit_latency: 111 },
+            mem_latency: 220,
+            itlb: TlbParams {
+                l1_entries: 32,
+                l2_entries: 128,
+                ways: 4,
+                mshrs: 6,
+                l2_latency: 10,
+                walk_latency: 60,
+            },
+            dtlb: TlbParams {
+                l1_entries: 32,
+                l2_entries: 128,
+                ways: 4,
+                mshrs: 6,
+                l2_latency: 10,
+                walk_latency: 60,
+            },
+            l1d_prefetch: PrefetchParams { enabled: true, degree: 8 },
+            bp: BpChoice::BiMode,
+            btb_entries: 4096,
+            ras_entries: 32,
+        }
+    }
+
+    /// Maximum number of context instructions a processor of this size can
+    /// hold: frontend buffer + ROB + SQ (paper: 110 for the default O3CPU).
+    pub fn max_context(&self) -> usize {
+        self.rob_entries + self.sq_entries + (self.fetch_width * self.frontend_depth) as usize
+    }
+
+    /// Latency for an access satisfied at `level` (1 = L1, 2 = L2, 3 = mem)
+    /// for the given L1 cache.
+    pub fn level_latency(&self, l1: &CacheParams, level: u8) -> u32 {
+        match level {
+            1 => l1.hit_latency,
+            2 => l1.hit_latency + self.l2.hit_latency,
+            _ => l1.hit_latency + self.l2.hit_latency + self.mem_latency,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_sane() {
+        for cfg in [SimConfig::default_o3(), SimConfig::a64fx()] {
+            assert!(cfg.rob_entries >= cfg.iq_entries);
+            assert!(cfg.l2.size > cfg.l1d.size);
+            assert!(cfg.l1d.sets() > 0 && cfg.l1i.sets() > 0 && cfg.l2.sets() > 0);
+            assert!(cfg.max_context() > cfg.rob_entries);
+        }
+    }
+
+    #[test]
+    fn o3_matches_paper_table2() {
+        let c = SimConfig::default_o3();
+        assert_eq!(c.fetch_width, 3);
+        assert_eq!(c.rob_entries, 40);
+        assert_eq!(c.iq_entries, 32);
+        assert_eq!(c.lq_entries, 16);
+        assert_eq!(c.sq_entries, 16);
+        assert_eq!(c.l1d.hit_latency, 5);
+        assert_eq!(c.l2.hit_latency, 29);
+    }
+
+    #[test]
+    fn level_latency_monotonic() {
+        let c = SimConfig::default_o3();
+        let l1 = c.l1d.clone();
+        assert!(c.level_latency(&l1, 1) < c.level_latency(&l1, 2));
+        assert!(c.level_latency(&l1, 2) < c.level_latency(&l1, 3));
+    }
+}

@@ -1,0 +1,674 @@
+//! The out-of-order CPU timing model.
+//!
+//! Each dynamic instruction flows through the model exactly once; every
+//! pipeline event time (fetch, dispatch, issue, complete, commit, store
+//! writeback) is computed analytically from resource-availability rings.
+//! This keeps the simulator O(1) per instruction while modelling:
+//!
+//! * fetch bandwidth, I-cache/ITLB stalls, taken-branch fetch breaks,
+//!   misprediction redirect bubbles, serializing drains,
+//! * a finite fetch/decode buffer that backpressures fetch when dispatch
+//!   stalls (this is what makes fetch latency — the paper's `F` — reflect
+//!   backend congestion),
+//! * ROB/IQ/LQ/SQ occupancy, issue bandwidth, per-class functional units
+//!   (pipelined and unpipelined),
+//! * operand readiness via a register ready-time scoreboard,
+//! * D-cache/DTLB latencies with MSHR-limited misses and store-to-load
+//!   forwarding,
+//! * in-order commit bandwidth and post-commit store writeback.
+
+use super::config::SimConfig;
+use crate::history::{HistoryInfo, HistorySim};
+use crate::isa::{FuClass, Inst, OpClass, NUM_REGS, REG_NONE};
+
+/// One retired instruction with its labels — what gets written to traces.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecutedInst {
+    pub inst: Inst,
+    pub hist: HistoryInfo,
+    /// Absolute cycle the instruction was fetched.
+    pub fetch_cycle: u64,
+    /// Fetch latency `F`: cycles since the previous instruction's fetch.
+    pub f_lat: u32,
+    /// Execution latency `E`: fetch -> ready to retire from ROB.
+    pub e_lat: u32,
+    /// Store latency `S`: fetch -> memory write complete (stores only; 0
+    /// otherwise).
+    pub s_lat: u32,
+}
+
+/// Aggregate run statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DesStats {
+    pub instructions: u64,
+    /// Total cycles until the last instruction fully left the machine.
+    pub cycles: u64,
+    pub mispredicts: u64,
+    pub l1d_miss: u64,
+    pub mem_accesses: u64,
+}
+
+impl DesStats {
+    pub fn cpi(&self) -> f64 {
+        if self.instructions == 0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.instructions as f64
+        }
+    }
+
+    pub fn ipc(&self) -> f64 {
+        let c = self.cpi();
+        if c == 0.0 {
+            0.0
+        } else {
+            1.0 / c
+        }
+    }
+}
+
+/// Capacity-limited resource: slot `i mod cap` is reusable once its previous
+/// occupant releases it. Allocation order == release recording order, which
+/// holds for every queue we model (ROB/IQ/LQ/SQ/fetch buffer are all
+/// allocated in program order and released in a program-order-derived time).
+struct SlotRing {
+    free_at: Vec<u64>,
+    idx: usize,
+}
+
+impl SlotRing {
+    fn new(cap: usize) -> Self {
+        SlotRing { free_at: vec![0; cap.max(1)], idx: 0 }
+    }
+
+    /// Earliest time an allocation wanted at `want` can happen.
+    #[inline]
+    fn earliest(&self, want: u64) -> u64 {
+        want.max(self.free_at[self.idx])
+    }
+
+    /// Record the release time of the slot just allocated and advance.
+    #[inline]
+    fn commit(&mut self, release: u64) {
+        self.free_at[self.idx] = release;
+        self.idx = (self.idx + 1) % self.free_at.len();
+    }
+}
+
+/// Bandwidth limiter: at most `width` events per cycle.
+struct BandwidthRing {
+    last: Vec<u64>,
+    idx: usize,
+}
+
+impl BandwidthRing {
+    fn new(width: u32) -> Self {
+        BandwidthRing { last: vec![0; width.max(1) as usize], idx: 0 }
+    }
+
+    /// Allocate an event no earlier than `want`; returns the granted cycle.
+    #[inline]
+    fn alloc(&mut self, want: u64) -> u64 {
+        let t = want.max(self.last[self.idx] + 1);
+        self.last[self.idx] = t;
+        self.idx = (self.idx + 1) % self.last.len();
+        t
+    }
+}
+
+/// Functional-unit pool for one class.
+struct FuPool {
+    busy_until: Vec<u64>,
+}
+
+impl FuPool {
+    fn new(count: u32) -> Self {
+        FuPool { busy_until: vec![0; count.max(1) as usize] }
+    }
+
+    /// Acquire a unit at `want`; occupies it for `occupy` cycles (1 for
+    /// pipelined units, the full latency for unpipelined ones).
+    fn acquire(&mut self, want: u64, occupy: u64) -> u64 {
+        let (i, &free) =
+            self.busy_until.iter().enumerate().min_by_key(|(_, &t)| t).unwrap();
+        let start = want.max(free);
+        self.busy_until[i] = start + occupy;
+        start
+    }
+}
+
+/// MSHR-limited miss path: at most `cap` outstanding misses.
+struct MshrQueue {
+    inflight: Vec<u64>,
+    cap: usize,
+}
+
+impl MshrQueue {
+    fn new(cap: usize) -> Self {
+        MshrQueue { inflight: Vec::with_capacity(cap.max(1)), cap: cap.max(1) }
+    }
+
+    /// Start a miss at `want` lasting `latency`; returns its actual start
+    /// (delayed if all MSHRs are busy).
+    fn access(&mut self, want: u64, latency: u64) -> u64 {
+        // Retire finished misses.
+        self.inflight.retain(|&t| t > want);
+        let start = if self.inflight.len() < self.cap {
+            want
+        } else {
+            let min = *self.inflight.iter().min().unwrap();
+            let i = self.inflight.iter().position(|&t| t == min).unwrap();
+            self.inflight.swap_remove(i);
+            want.max(min)
+        };
+        self.inflight.push(start + latency);
+        start
+    }
+}
+
+/// Store-queue entry kept for store-to-load forwarding.
+#[derive(Debug, Clone, Copy)]
+struct SqEntry {
+    addr: u64,
+    size: u8,
+    /// When the store's data is available for forwarding.
+    data_ready: u64,
+    /// When the store leaves the SQ (memory write complete).
+    write_complete: u64,
+}
+
+/// The CPU model. Feed instructions in program order via [`DesCpu::step`].
+pub struct DesCpu {
+    cfg: SimConfig,
+    hist: HistorySim,
+    // frontend
+    fetch_bw: BandwidthRing,
+    frontend_buf: SlotRing,
+    /// Floor on the next fetch (redirects, serialization, taken branches).
+    fetch_floor: u64,
+    last_fetch: u64,
+    last_fetch_line: u64,
+    // backend resources
+    rob: SlotRing,
+    iq: SlotRing,
+    lq: SlotRing,
+    sq: SlotRing,
+    issue_bw: BandwidthRing,
+    commit_bw: BandwidthRing,
+    fus: [FuPool; 8],
+    l1d_mshr: MshrQueue,
+    l1i_mshr: MshrQueue,
+    // state
+    reg_ready: [u64; NUM_REGS],
+    sq_entries: Vec<SqEntry>,
+    /// In-order commit front: commit times are non-decreasing.
+    last_commit: u64,
+    /// Completion time of the latest memory op (for barriers).
+    last_mem_complete: u64,
+    /// Memory ops may not issue before this (set by barriers).
+    barrier_floor: u64,
+    /// Max completion time over all instructions (for serializing ops).
+    max_complete: u64,
+    /// Machine-drain time: when the last instruction fully left.
+    end_time: u64,
+    stats: DesStats,
+}
+
+impl DesCpu {
+    pub fn new(cfg: &SimConfig) -> Self {
+        DesCpu {
+            hist: HistorySim::new(cfg),
+            fetch_bw: BandwidthRing::new(cfg.fetch_width),
+            frontend_buf: SlotRing::new((cfg.fetch_width * cfg.frontend_depth * 2) as usize),
+            fetch_floor: 0,
+            last_fetch: 0,
+            last_fetch_line: u64::MAX,
+            rob: SlotRing::new(cfg.rob_entries),
+            iq: SlotRing::new(cfg.iq_entries),
+            lq: SlotRing::new(cfg.lq_entries),
+            sq: SlotRing::new(cfg.sq_entries),
+            issue_bw: BandwidthRing::new(cfg.issue_width),
+            commit_bw: BandwidthRing::new(cfg.commit_width),
+            fus: cfg.fu_counts.map(FuPool::new),
+            l1d_mshr: MshrQueue::new(cfg.l1d.mshrs),
+            l1i_mshr: MshrQueue::new(cfg.l1i.mshrs),
+            reg_ready: [0; NUM_REGS],
+            sq_entries: Vec::new(),
+            last_commit: 0,
+            last_mem_complete: 0,
+            barrier_floor: 0,
+            max_complete: 0,
+            end_time: 0,
+            stats: DesStats::default(),
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// TLB penalty in cycles given a translation result encoded as the
+    /// history sim reports it.
+    fn tlb_penalty(l2_latency: u32, walk_latency: u32, level: u8, walk: &[bool; 3]) -> u64 {
+        match level {
+            0 => 0,
+            1 => l2_latency as u64,
+            _ => {
+                let mut pen = l2_latency as u64;
+                for &miss in walk {
+                    pen += if miss { walk_latency as u64 } else { 4 };
+                }
+                pen
+            }
+        }
+    }
+
+    /// Advance the model by one instruction; returns its timing record.
+    pub fn step(&mut self, inst: &Inst) -> ExecutedInst {
+        let cfg = self.cfg.clone();
+        let hist = self.hist.process(inst);
+        self.stats.instructions += 1;
+        self.stats.mispredicts += hist.mispredict as u64;
+        if inst.op.is_mem() {
+            self.stats.mem_accesses += 1;
+            self.stats.l1d_miss += (hist.data_level > 1) as u64;
+        }
+
+        // ------------------------------------------------------------
+        // FETCH
+        // ------------------------------------------------------------
+        let mut want = self.fetch_floor;
+        // Finite frontend buffer: can't fetch further ahead of dispatch.
+        want = self.frontend_buf.earliest(want);
+        // I-cache / ITLB stalls apply when a new line is touched.
+        let line = inst.fetch_line();
+        if line != self.last_fetch_line {
+            let itlb_pen = Self::tlb_penalty(
+                cfg.itlb.l2_latency,
+                cfg.itlb.walk_latency,
+                // fetch_walk flags are only set on a full walk; recover the
+                // TLB level from them plus the fetch level heuristically:
+                // the history sim stores walk misses only for full walks.
+                if hist.fetch_walk.iter().any(|&m| m) { 2 } else { 0 },
+                &hist.fetch_walk,
+            );
+            let line_lat = if hist.fetch_level > 1 {
+                let miss_lat = (cfg.level_latency(&cfg.l1i, hist.fetch_level)
+                    - cfg.l1i.hit_latency) as u64;
+                let start = self.l1i_mshr.access(want + itlb_pen, miss_lat);
+                start + miss_lat - want
+            } else {
+                itlb_pen
+            };
+            want += line_lat;
+            self.last_fetch_line = line;
+        }
+        let fetch = self.fetch_bw.alloc(want.max(self.last_fetch));
+        let f_lat = (fetch - self.last_fetch) as u32;
+        self.last_fetch = fetch;
+
+        // Taken control flow ends the fetch group: next fetch is at least
+        // the following cycle (no fetching across a taken branch).
+        if inst.is_control() && inst.taken {
+            self.fetch_floor = self.fetch_floor.max(fetch + 1);
+        }
+
+        // ------------------------------------------------------------
+        // DISPATCH (rename + ROB/IQ/LQ/SQ allocation)
+        // ------------------------------------------------------------
+        let mut dispatch = fetch + cfg.frontend_depth as u64;
+        dispatch = self.rob.earliest(dispatch);
+        dispatch = self.iq.earliest(dispatch);
+        if inst.is_load() {
+            dispatch = self.lq.earliest(dispatch);
+        }
+        if inst.is_store() {
+            dispatch = self.sq.earliest(dispatch);
+        }
+
+        // ------------------------------------------------------------
+        // ISSUE (operands + FU + issue bandwidth)
+        // ------------------------------------------------------------
+        let mut ready = dispatch + 1;
+        for &r in &inst.srcs {
+            if r != REG_NONE {
+                ready = ready.max(self.reg_ready[r as usize]);
+            }
+        }
+        if inst.op.is_mem() {
+            ready = ready.max(self.barrier_floor);
+        }
+        let fu = inst.op.fu_class();
+        let exec_lat = inst.op.exec_latency() as u64;
+        let start = if fu != FuClass::None {
+            let occupy = if inst.op.fu_pipelined() { 1 } else { exec_lat };
+            self.fus[fu as usize].acquire(ready, occupy)
+        } else {
+            ready
+        };
+        let issue = self.issue_bw.alloc(start);
+
+        // ------------------------------------------------------------
+        // EXECUTE / COMPLETE
+        // ------------------------------------------------------------
+        let dtlb_pen = if inst.op.is_mem() {
+            Self::tlb_penalty(
+                cfg.dtlb.l2_latency,
+                cfg.dtlb.walk_latency,
+                if hist.data_walk.iter().any(|&m| m) { 2 } else { 0 },
+                &hist.data_walk,
+            )
+        } else {
+            0
+        };
+        let complete = match inst.op {
+            OpClass::Load => {
+                let addr_ready = issue + 1 + dtlb_pen;
+                // Store-to-load forwarding: youngest older store to the
+                // same (8B-aligned) address still in the SQ.
+                let fwd = self
+                    .sq_entries
+                    .iter()
+                    .rev()
+                    .find(|s| {
+                        s.write_complete > addr_ready && (s.addr >> 3) == (inst.mem_addr >> 3)
+                    })
+                    .map(|s| s.data_ready);
+                if let Some(data_ready) = fwd {
+                    addr_ready.max(data_ready) + 1
+                } else if hist.data_level > 1 {
+                    let miss_lat =
+                        (cfg.level_latency(&cfg.l1d, hist.data_level) - cfg.l1d.hit_latency) as u64;
+                    let begin = self.l1d_mshr.access(addr_ready, miss_lat);
+                    begin + cfg.l1d.hit_latency as u64 + miss_lat
+                } else {
+                    addr_ready + cfg.l1d.hit_latency as u64
+                }
+            }
+            OpClass::Store => issue + 1 + dtlb_pen, // address+data staged; write is post-commit
+            OpClass::MemBarrier => (issue + 1).max(self.last_mem_complete),
+            OpClass::Serialize => (issue + 1).max(self.max_complete),
+            _ => issue + exec_lat,
+        };
+        self.max_complete = self.max_complete.max(complete);
+        if inst.op.is_mem() {
+            self.last_mem_complete = self.last_mem_complete.max(complete);
+        }
+        if inst.op.is_barrier() {
+            self.barrier_floor = self.barrier_floor.max(complete);
+        }
+        for &r in &inst.dsts {
+            if r != REG_NONE {
+                self.reg_ready[r as usize] = complete;
+            }
+        }
+
+        // ------------------------------------------------------------
+        // COMMIT (in order) and post-commit store writeback
+        // ------------------------------------------------------------
+        let commit = self.commit_bw.alloc((complete + 1).max(self.last_commit));
+        self.last_commit = commit;
+
+        // Redirect the frontend on a mispredicted control op: fetch resumes
+        // once the branch resolves (complete) plus the redirect penalty.
+        if hist.mispredict {
+            self.fetch_floor =
+                self.fetch_floor.max(complete + cfg.redirect_penalty as u64);
+            // The frontend restarts at a new line.
+            self.last_fetch_line = u64::MAX;
+        }
+        // Serializing instructions drain: nothing fetches until they commit.
+        if inst.op.is_serializing() {
+            self.fetch_floor = self.fetch_floor.max(commit + 1);
+        }
+
+        let mut s_lat = 0u32;
+        let mut leave = commit;
+        if inst.is_store() {
+            // Post-commit write through the SQ; pays the D-cache level
+            // latency (MSHR-limited on misses).
+            let write_lat = if hist.data_level > 1 {
+                let miss_lat =
+                    (cfg.level_latency(&cfg.l1d, hist.data_level) - cfg.l1d.hit_latency) as u64;
+                let begin = self.l1d_mshr.access(commit, miss_lat);
+                (begin - commit) + cfg.l1d.hit_latency as u64 + miss_lat
+            } else {
+                cfg.l1d.hit_latency as u64
+            };
+            let write_complete = commit + 1 + write_lat;
+            leave = write_complete;
+            s_lat = (write_complete - fetch) as u32;
+            if self.sq_entries.len() >= cfg.sq_entries {
+                self.sq_entries.remove(0);
+            }
+            self.sq_entries.push(SqEntry {
+                addr: inst.mem_addr,
+                size: inst.mem_size,
+                data_ready: complete,
+                write_complete,
+            });
+        }
+
+        // Release resources in allocation order.
+        self.frontend_buf.commit(dispatch);
+        self.rob.commit(commit);
+        self.iq.commit(issue + 1);
+        if inst.is_load() {
+            self.lq.commit(complete + 1);
+        }
+        if inst.is_store() {
+            self.sq.commit(leave);
+        }
+
+        self.end_time = self.end_time.max(leave);
+        ExecutedInst {
+            inst: *inst,
+            hist,
+            fetch_cycle: fetch,
+            f_lat,
+            e_lat: (complete - fetch) as u32,
+            s_lat,
+        }
+    }
+
+    /// Finish the run and return statistics (total time includes the drain
+    /// of in-flight instructions — the paper's `Delta` in Eq. 1).
+    pub fn finish(mut self) -> DesStats {
+        self.stats.cycles = self.end_time;
+        self.stats
+    }
+
+    /// Borrow the embedded history simulator (for feature consistency
+    /// checks in tests).
+    pub fn history(&self) -> &HistorySim {
+        &self.hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::OpClass;
+
+    fn cpu() -> DesCpu {
+        DesCpu::new(&SimConfig::default_o3())
+    }
+
+    fn alu(dst: i8, src: i8) -> Inst {
+        let mut i = Inst { pc: 0x1000, op: OpClass::IntAlu, ..Default::default() };
+        i.dsts[0] = dst;
+        i.srcs[0] = src;
+        i
+    }
+
+    #[test]
+    fn dependent_chain_serializes() {
+        let mut c = cpu();
+        // r1 <- r0; r2 <- r1; r3 <- r2 ... each must wait for the previous.
+        let mut completes = Vec::new();
+        for k in 0..8i8 {
+            let mut i = alu(k + 1, k);
+            i.pc = 0x1000 + 4 * k as u64;
+            let e = c.step(&i);
+            completes.push(e.fetch_cycle + e.e_lat as u64);
+        }
+        for w in completes.windows(2) {
+            assert!(w[1] > w[0], "dependent op completed no later: {completes:?}");
+        }
+    }
+
+    #[test]
+    fn independent_ops_overlap() {
+        let mut c = cpu();
+        let mut e_lats = Vec::new();
+        for k in 0..8i8 {
+            let mut i = alu(k + 1, 0); // all read r0, write distinct regs
+            i.pc = 0x1000 + 4 * k as u64;
+            e_lats.push(c.step(&i).e_lat);
+        }
+        // Independent ALU ops should have similar E (no chain growth).
+        let spread = e_lats.iter().max().unwrap() - e_lats.iter().min().unwrap();
+        assert!(spread <= 4, "independent ops serialized: {e_lats:?}");
+    }
+
+    #[test]
+    fn div_longer_than_alu() {
+        let mut c = cpu();
+        let a = c.step(&alu(1, 0)).e_lat;
+        let mut d = alu(2, 0);
+        d.pc = 0x1004;
+        d.op = OpClass::IntDiv;
+        let dv = c.step(&d).e_lat;
+        assert!(dv > a + 5, "div {dv} vs alu {a}");
+    }
+
+    #[test]
+    fn cold_load_pays_memory_latency() {
+        let mut c = cpu();
+        let mut ld = Inst {
+            pc: 0x2000,
+            op: OpClass::Load,
+            mem_addr: 0x5000_0000,
+            mem_size: 8,
+            ..Default::default()
+        };
+        ld.dsts[0] = 1;
+        let e = c.step(&ld);
+        let cfg = SimConfig::default_o3();
+        assert!(
+            e.e_lat as u32 >= cfg.mem_latency,
+            "cold load E {} < mem latency {}",
+            e.e_lat,
+            cfg.mem_latency
+        );
+        // Warm load to the same line is far cheaper.
+        let mut ld2 = ld;
+        ld2.pc = 0x2004;
+        ld2.mem_addr = 0x5000_0008;
+        let e2 = c.step(&ld2);
+        assert!(e2.e_lat < e.e_lat / 2, "warm {} vs cold {}", e2.e_lat, e.e_lat);
+    }
+
+    #[test]
+    fn store_to_load_forwarding_beats_cache() {
+        let mut c = cpu();
+        // Store to addr, then immediately load it back: the load should
+        // forward (fast) despite the line being cold in cache for the load.
+        let mut st = Inst {
+            pc: 0x3000,
+            op: OpClass::Store,
+            mem_addr: 0x6000_0000,
+            mem_size: 8,
+            ..Default::default()
+        };
+        st.srcs[0] = 1;
+        c.step(&st);
+        let mut ld = Inst {
+            pc: 0x3004,
+            op: OpClass::Load,
+            mem_addr: 0x6000_0000,
+            mem_size: 8,
+            ..Default::default()
+        };
+        ld.dsts[0] = 2;
+        let e = c.step(&ld);
+        let cfg = SimConfig::default_o3();
+        assert!(
+            (e.e_lat as u32) < cfg.mem_latency,
+            "forwarded load paid memory latency: {}",
+            e.e_lat
+        );
+    }
+
+    #[test]
+    fn store_has_s_latency() {
+        let mut c = cpu();
+        let mut st = Inst {
+            pc: 0x4000,
+            op: OpClass::Store,
+            mem_addr: 0x7000_0000,
+            mem_size: 8,
+            ..Default::default()
+        };
+        st.srcs[0] = 1;
+        let e = c.step(&st);
+        assert!(e.s_lat > e.e_lat);
+    }
+
+    #[test]
+    fn fetch_latency_monotone_time() {
+        let mut c = cpu();
+        let mut last_fetch = 0;
+        for k in 0..100u64 {
+            let mut i = alu(1, 0);
+            i.pc = 0x1000 + 4 * (k % 16);
+            let e = c.step(&i);
+            assert!(e.fetch_cycle >= last_fetch);
+            assert_eq!(e.fetch_cycle - last_fetch, e.f_lat as u64);
+            last_fetch = e.fetch_cycle;
+        }
+    }
+
+    #[test]
+    fn mispredicted_branch_creates_fetch_bubble() {
+        let mut c = cpu();
+        // Warm up with ALU ops, then a cold indirect branch (guaranteed BTB
+        // miss -> mispredict) followed by another op: the op after the
+        // branch must see a large F.
+        for k in 0..6i8 {
+            let mut i = alu(1, 0);
+            i.pc = 0x100 + 4 * k as u64;
+            c.step(&i);
+        }
+        let br = Inst {
+            pc: 0x200,
+            op: OpClass::IndirectBranch,
+            target: 0x9000,
+            taken: true,
+            ..Default::default()
+        };
+        let eb = c.step(&br);
+        assert!(eb.hist.mispredict, "cold indirect must mispredict");
+        let mut after = alu(2, 0);
+        after.pc = 0x9000;
+        let ea = c.step(&after);
+        assert!(
+            ea.f_lat as u32 >= SimConfig::default_o3().redirect_penalty,
+            "no bubble after mispredict: F={}",
+            ea.f_lat
+        );
+    }
+
+    #[test]
+    fn serializing_op_drains() {
+        let mut c = cpu();
+        for k in 0..4i8 {
+            let mut i = alu(1, 0);
+            i.pc = 0x100 + 4 * k as u64;
+            c.step(&i);
+        }
+        let ser = Inst { pc: 0x300, op: OpClass::Serialize, ..Default::default() };
+        c.step(&ser);
+        let mut after = alu(2, 0);
+        after.pc = 0x304;
+        let ea = c.step(&after);
+        assert!(ea.f_lat > 2, "serialize did not stall fetch: F={}", ea.f_lat);
+    }
+}

@@ -1,0 +1,151 @@
+//! Reference discrete-event simulator — the "gem5" of this repo.
+//!
+//! A cycle-level model of an out-of-order superscalar CPU (paper Table 2):
+//! wide fetch limited by I-cache/ITLB behaviour and branch mispredictions,
+//! register renaming via a ready-time scoreboard, an issue queue with
+//! per-class functional units, load/store queues with store-to-load
+//! forwarding, MSHR-limited caches, in-order commit, and post-commit store
+//! writeback through the store queue.
+//!
+//! The model is *event-driven per instruction* (every stage time is
+//! computed analytically as the instruction flows through), which makes it
+//! O(1) per instruction while still producing the paper's three label
+//! latencies per instruction:
+//!
+//! * `F` fetch latency — cycles between the previous instruction's fetch
+//!   and this one's (Eq. 1's summand),
+//! * `E` execution latency — fetch until ready-to-retire from the ROB,
+//! * `S` store latency — fetch until the post-commit memory write
+//!   completes (ready-to-retire from the SQ).
+//!
+//! Cache/TLB/branch *outcomes* come from the shared [`crate::history`]
+//! simulator so that trace features and DES timing always agree.
+
+pub mod config;
+mod core;
+
+pub use self::core::{DesCpu, DesStats, ExecutedInst};
+pub use config::{BpChoice, CacheParams, PrefetchParams, SimConfig, TlbParams};
+
+use crate::isa::Inst;
+
+/// Run the DES over `n` instructions from `stream`, invoking `sink` for
+/// every retired instruction. Returns the run statistics.
+pub fn simulate<I, F>(cfg: &SimConfig, stream: I, n: u64, mut sink: F) -> DesStats
+where
+    I: Iterator<Item = Inst>,
+    F: FnMut(&ExecutedInst),
+{
+    let mut cpu = DesCpu::new(cfg);
+    for inst in stream.take(n as usize) {
+        let exec = cpu.step(&inst);
+        sink(&exec);
+    }
+    cpu.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{find, suite};
+
+    #[test]
+    fn cpi_in_reasonable_band_for_all_benchmarks() {
+        let cfg = SimConfig::default_o3();
+        for b in suite() {
+            let wl = b.workload(0);
+            let stats = simulate(&cfg, wl.stream(), 20_000, |_| {});
+            let cpi = stats.cpi();
+            assert!(
+                (0.3..40.0).contains(&cpi),
+                "{}: implausible CPI {cpi}",
+                b.name
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = SimConfig::default_o3();
+        let b = find("mcf").unwrap();
+        let s1 = simulate(&cfg, b.workload(0).stream(), 30_000, |_| {});
+        let s2 = simulate(&cfg, b.workload(0).stream(), 30_000, |_| {});
+        assert_eq!(s1.cycles, s2.cycles);
+        assert_eq!(s1.instructions, s2.instructions);
+    }
+
+    #[test]
+    fn memory_bound_slower_than_compute_bound() {
+        let cfg = SimConfig::default_o3();
+        let cpi = |name: &str| {
+            let b = find(name).unwrap();
+            simulate(&cfg, b.workload(0).stream(), 100_000, |_| {}).cpi()
+        };
+        let mcf = cpi("mcf"); // pointer chaser, 32MB working set
+        let exchange2 = cpi("exchange2"); // small-footprint int compute
+        assert!(
+            mcf > exchange2 * 1.3,
+            "mcf={mcf:.2} should be well above exchange2={exchange2:.2}"
+        );
+    }
+
+    #[test]
+    fn eq1_holds_sum_of_fetch_latencies() {
+        // Paper Eq. 1: total time = sum(F_i) + Delta, where Delta is the
+        // drain time of the last instructions.
+        let cfg = SimConfig::default_o3();
+        let b = find("gcc").unwrap();
+        let mut sum_f: u64 = 0;
+        let stats = simulate(&cfg, b.workload(0).stream(), 50_000, |e| {
+            sum_f += e.f_lat as u64;
+        });
+        assert!(stats.cycles >= sum_f, "cycles {} < sum F {}", stats.cycles, sum_f);
+        let delta = stats.cycles - sum_f;
+        // Drain is bounded by the worst-case lifetime of one window of
+        // instructions, far below the total for 50k instructions.
+        assert!(
+            (delta as f64) < 0.05 * stats.cycles as f64,
+            "delta {delta} too large vs {}",
+            stats.cycles
+        );
+    }
+
+    #[test]
+    fn latency_invariants_per_instruction() {
+        let cfg = SimConfig::default_o3();
+        let b = find("xalancbmk").unwrap();
+        simulate(&cfg, b.workload(0).stream(), 50_000, |e| {
+            assert!(e.e_lat >= 1, "E must be positive");
+            if e.inst.op.is_store() {
+                assert!(e.s_lat >= e.e_lat, "store S {} < E {}", e.s_lat, e.e_lat);
+            } else {
+                assert_eq!(e.s_lat, 0, "non-store has S latency");
+            }
+        });
+    }
+
+    #[test]
+    fn a64fx_config_runs() {
+        let cfg = SimConfig::a64fx();
+        let b = find("bwaves").unwrap();
+        let stats = simulate(&cfg, b.workload(0).stream(), 30_000, |_| {});
+        assert!(stats.cpi() > 0.2 && stats.cpi() < 60.0, "cpi={}", stats.cpi());
+    }
+
+    #[test]
+    fn bigger_rob_not_slower() {
+        let base = SimConfig::default_o3();
+        let mut big = SimConfig::default_o3();
+        big.rob_entries = 120;
+        big.iq_entries = 96;
+        big.lq_entries = 48;
+        big.sq_entries = 48;
+        let b = find("namd").unwrap();
+        let c_base = simulate(&base, b.workload(0).stream(), 80_000, |_| {}).cycles;
+        let c_big = simulate(&big, b.workload(0).stream(), 80_000, |_| {}).cycles;
+        assert!(
+            c_big as f64 <= c_base as f64 * 1.02,
+            "bigger window slower: {c_big} vs {c_base}"
+        );
+    }
+}

@@ -1,0 +1,526 @@
+//! The 50-feature instruction encoding and context-instruction tracking
+//! (paper Table 1 and §3.2 "Context Management").
+//!
+//! Every instruction is encoded as [`NUM_FEATURES`] = 50 floats. The model
+//! input is a sequence of `seq_len` instruction slots: slot 0 is the
+//! to-be-predicted instruction, slots 1.. are its *context instructions* —
+//! the instructions still inside the processor — youngest first, zero
+//! padded. The [`ContextTracker`] maintains the two FIFO queues the paper
+//! describes (processor queue ≈ frontend+ROB, memory write queue ≈ SQ) and
+//! is shared verbatim between dataset generation (with DES-true latencies)
+//! and ML simulation (with predicted latencies), which guarantees
+//! train/inference feature consistency.
+
+use std::collections::VecDeque;
+
+use crate::des::config::SimConfig;
+use crate::history::HistoryInfo;
+use crate::isa::{Inst, MAX_DST_REGS, MAX_SRC_REGS, REG_NONE};
+
+/// Features per instruction slot (paper: 50).
+pub const NUM_FEATURES: usize = 50;
+
+/// Latency normalization divisor: latencies are fed to the model as
+/// `latency / LAT_SCALE` and predicted back the same way.
+pub const LAT_SCALE: f32 = 256.0;
+
+// Feature layout within one 50-float slot:
+//   [0..13)  operation features
+//   [13..27) register indices (8 src + 6 dst)
+//   [27..34) fetch-side history (mispredict, level, 3 walk, 2 wb)
+//   [34..41) data-side history (level, 3 walk, 3 wb)
+//   [41..44) residence / execution / store latency (context only)
+//   [44..49) memory-dependency flags vs the current instruction
+//   [49]     configuration feature (ROB size for the §5 ROB study)
+pub const OP_BASE: usize = 0;
+pub const REG_BASE: usize = 13;
+pub const FETCH_HIST_BASE: usize = 27;
+pub const DATA_HIST_BASE: usize = 34;
+pub const LAT_BASE: usize = 41;
+pub const DEP_BASE: usize = 44;
+pub const CFG_FEATURE: usize = 49;
+
+/// Human-readable names for attribution reports (Figure 11).
+pub fn feature_name(i: usize) -> String {
+    match i {
+        0 => "op_code".into(),
+        1 => "fu_class".into(),
+        2 => "op_latency_class".into(),
+        3 => "is_load".into(),
+        4 => "is_store".into(),
+        5 => "is_cond_branch".into(),
+        6 => "is_uncond_direct".into(),
+        7 => "is_indirect".into(),
+        8 => "is_call".into(),
+        9 => "is_ret".into(),
+        10 => "is_membar".into(),
+        11 => "is_serializing".into(),
+        12 => "mem_size".into(),
+        13..=20 => format!("src_reg{}", i - 13),
+        21..=26 => format!("dst_reg{}", i - 21),
+        27 => "mispredict".into(),
+        28 => "fetch_level".into(),
+        29..=31 => format!("fetch_walk{}", i - 29),
+        32..=33 => format!("fetch_wb{}", i - 32),
+        34 => "data_level".into(),
+        35..=37 => format!("data_walk{}", i - 35),
+        38..=40 => format!("data_wb{}", i - 38),
+        41 => "residence_lat".into(),
+        42 => "execution_lat".into(),
+        43 => "store_lat".into(),
+        44 => "dep_same_fetch_line".into(),
+        45 => "dep_same_addr".into(),
+        46 => "dep_same_line".into(),
+        47 => "dep_same_page".into(),
+        48 => "dep_raw_store_load".into(),
+        49 => "cfg_rob_size".into(),
+        _ => format!("feature{i}"),
+    }
+}
+
+/// Coarse feature groups used by the Figure 11 attribution report.
+pub fn feature_group(i: usize) -> &'static str {
+    match i {
+        0..=12 => "operation",
+        13..=26 => "register",
+        27..=40 => "memory", // history-context results (cache/TLB/BP)
+        41..=43 => "latency",
+        44..=48 => "memory",
+        _ => "operation",
+    }
+}
+
+/// Encode the static + history features of `inst` into `out[..41]`.
+/// Latency, dependency, and config slots are left untouched.
+fn encode_static(inst: &Inst, hist: &HistoryInfo, out: &mut [f32]) {
+    use crate::isa::OpClass;
+    let op = inst.op;
+    out[OP_BASE] = op.code() as f32 / 18.0;
+    out[OP_BASE + 1] = op.fu_class() as u8 as f32 / 8.0;
+    out[OP_BASE + 2] = op.exec_latency() as f32 / 20.0;
+    out[OP_BASE + 3] = op.is_load() as u8 as f32;
+    out[OP_BASE + 4] = op.is_store() as u8 as f32;
+    out[OP_BASE + 5] = op.is_cond_branch() as u8 as f32;
+    out[OP_BASE + 6] = matches!(op, OpClass::Jump | OpClass::Call) as u8 as f32;
+    out[OP_BASE + 7] = op.is_indirect() as u8 as f32;
+    out[OP_BASE + 8] = (op == OpClass::Call) as u8 as f32;
+    out[OP_BASE + 9] = (op == OpClass::Ret) as u8 as f32;
+    out[OP_BASE + 10] = op.is_barrier() as u8 as f32;
+    out[OP_BASE + 11] = op.is_serializing() as u8 as f32;
+    out[OP_BASE + 12] = inst.mem_size as f32 / 16.0;
+    for (k, &r) in inst.srcs.iter().enumerate().take(MAX_SRC_REGS) {
+        out[REG_BASE + k] = if r == REG_NONE { 0.0 } else { (r + 1) as f32 / 64.0 };
+    }
+    for (k, &r) in inst.dsts.iter().enumerate().take(MAX_DST_REGS) {
+        out[REG_BASE + 8 + k] = if r == REG_NONE { 0.0 } else { (r + 1) as f32 / 64.0 };
+    }
+    out[FETCH_HIST_BASE] = hist.mispredict as u8 as f32;
+    out[FETCH_HIST_BASE + 1] = hist.fetch_level as f32 / 3.0;
+    for k in 0..3 {
+        out[FETCH_HIST_BASE + 2 + k] = hist.fetch_walk[k] as u8 as f32;
+    }
+    out[FETCH_HIST_BASE + 5] = hist.fetch_wb[0] as u8 as f32;
+    out[FETCH_HIST_BASE + 6] = hist.fetch_wb[1] as u8 as f32;
+    out[DATA_HIST_BASE] = hist.data_level as f32 / 3.0;
+    for k in 0..3 {
+        out[DATA_HIST_BASE + 1 + k] = hist.data_walk[k] as u8 as f32;
+    }
+    for k in 0..3 {
+        out[DATA_HIST_BASE + 4 + k] = hist.data_wb[k] as u8 as f32;
+    }
+}
+
+/// A context instruction held in the tracker queues.
+#[derive(Debug, Clone, Copy)]
+struct CtxInst {
+    /// Pre-encoded static + history features (first 41 slots).
+    feats: [f32; LAT_BASE],
+    /// Cycles spent in the processor so far.
+    residence: u32,
+    /// Predicted/actual execution latency.
+    exec_lat: u32,
+    /// Predicted/actual store latency (stores only).
+    store_lat: u32,
+    is_store: bool,
+    // identity for dependency flags
+    fetch_line: u64,
+    mem_addr: u64,
+    is_load: bool,
+}
+
+/// How context instructions are selected (paper §2.5, "Comparison with
+/// Ithemal").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ContextMode {
+    /// SimNet: only instructions still inside the processor (selected by
+    /// the clock/retirement model), with their latency features.
+    #[default]
+    SimNet,
+    /// Ithemal-style: a fixed window of the most recent instructions,
+    /// retired or not, with latency features zeroed. (We keep the SimNet
+    /// history/dependency features — the paper's "enhanced" Ithemal.)
+    Ithemal,
+}
+
+/// The paper's two context FIFOs plus the clock bookkeeping of §3.2.
+pub struct ContextTracker {
+    processor_q: VecDeque<CtxInst>,
+    memwrite_q: VecDeque<CtxInst>,
+    /// Maximum instructions the processor can hold (bounds processor_q).
+    proc_capacity: usize,
+    sq_capacity: usize,
+    retire_width: u32,
+    mode: ContextMode,
+    /// Current simulated time (paper's `curTick`).
+    pub cur_tick: u64,
+    /// Extra config feature value broadcast into every slot (ROB study).
+    pub cfg_feature: f32,
+}
+
+impl ContextTracker {
+    pub fn new(cfg: &SimConfig) -> Self {
+        Self::with_mode(cfg, ContextMode::SimNet)
+    }
+
+    pub fn with_mode(cfg: &SimConfig, mode: ContextMode) -> Self {
+        ContextTracker {
+            processor_q: VecDeque::with_capacity(cfg.max_context()),
+            memwrite_q: VecDeque::with_capacity(cfg.sq_entries),
+            proc_capacity: match mode {
+                ContextMode::SimNet => {
+                    cfg.rob_entries + (cfg.fetch_width * cfg.frontend_depth * 2) as usize
+                }
+                // Fixed window: large enough for any export seq_len.
+                ContextMode::Ithemal => 256,
+            },
+            sq_capacity: cfg.sq_entries,
+            retire_width: cfg.commit_width,
+            mode,
+            cur_tick: 0,
+            cfg_feature: 0.0,
+        }
+    }
+
+    /// Number of live context instructions.
+    pub fn len(&self) -> usize {
+        self.processor_q.len() + self.memwrite_q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Encode the model input for `inst` into `out` (length
+    /// `seq_len * NUM_FEATURES`, slot 0 = current instruction, slots 1.. =
+    /// context youngest-first). The buffer may be reused across calls —
+    /// every slot is fully written or explicitly cleared.
+    pub fn encode_input(&self, inst: &Inst, hist: &HistoryInfo, seq_len: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), seq_len * NUM_FEATURES);
+        // Slot 0: the to-be-predicted instruction.
+        out[..NUM_FEATURES].fill(0.0);
+        encode_static(inst, hist, &mut out[..LAT_BASE]);
+        out[CFG_FEATURE] = self.cfg_feature;
+
+        let cur_line = inst.fetch_line();
+        let cur_is_mem = inst.op.is_mem();
+        let cur_addr = inst.mem_addr;
+        let cur_is_load = inst.is_load();
+
+        // Slots 1..: context instructions, youngest first: processor queue
+        // back-to-front, then memory write queue back-to-front.
+        let mut slot = 1;
+        for c in self.processor_q.iter().rev().chain(self.memwrite_q.iter().rev()) {
+            if slot >= seq_len {
+                break;
+            }
+            let o = &mut out[slot * NUM_FEATURES..(slot + 1) * NUM_FEATURES];
+            o[..LAT_BASE].copy_from_slice(&c.feats);
+            o[LAT_BASE] = c.residence as f32 / LAT_SCALE;
+            o[LAT_BASE + 1] = c.exec_lat as f32 / LAT_SCALE;
+            o[LAT_BASE + 2] = c.store_lat as f32 / LAT_SCALE;
+            o[DEP_BASE] = (c.fetch_line == cur_line) as u8 as f32;
+            if cur_is_mem && c.mem_addr != u64::MAX {
+                let same_addr = (c.mem_addr >> 3) == (cur_addr >> 3);
+                o[DEP_BASE + 1] = same_addr as u8 as f32;
+                o[DEP_BASE + 2] = ((c.mem_addr >> 6) == (cur_addr >> 6)) as u8 as f32;
+                o[DEP_BASE + 3] = ((c.mem_addr >> 12) == (cur_addr >> 12)) as u8 as f32;
+                o[DEP_BASE + 4] = (same_addr && c.is_store && cur_is_load) as u8 as f32;
+            } else {
+                o[DEP_BASE + 1] = 0.0;
+                o[DEP_BASE + 2] = 0.0;
+                o[DEP_BASE + 3] = 0.0;
+                o[DEP_BASE + 4] = 0.0;
+            }
+            o[CFG_FEATURE] = self.cfg_feature;
+            slot += 1;
+        }
+        // Clear remaining slots (the buffer may be reused between calls).
+        out[slot * NUM_FEATURES..].fill(0.0);
+    }
+
+    /// Insert `inst` with its (predicted or ground-truth) latencies and
+    /// advance the clock by its fetch latency, retiring whatever completes
+    /// (paper §3.2 "Clock Management").
+    pub fn push(&mut self, inst: &Inst, hist: &HistoryInfo, f: u32, e: u32, s: u32) {
+        if self.mode == ContextMode::Ithemal {
+            // Fixed recency window: no clock, no retirement, no latency
+            // features — the instruction stream order is the only signal.
+            self.cur_tick += f as u64;
+            let mut feats = [0.0f32; LAT_BASE];
+            encode_static(inst, hist, &mut feats);
+            self.processor_q.push_back(CtxInst {
+                feats,
+                residence: 0,
+                exec_lat: 0,
+                store_lat: 0,
+                is_store: inst.is_store(),
+                fetch_line: inst.fetch_line(),
+                mem_addr: if inst.op.is_mem() { inst.mem_addr } else { u64::MAX },
+                is_load: inst.is_load(),
+            });
+            if self.processor_q.len() > self.proc_capacity {
+                self.processor_q.pop_front();
+            }
+            return;
+        }
+        // Advance time: residence of everything in flight grows by F.
+        if f > 0 {
+            self.cur_tick += f as u64;
+            for c in self.processor_q.iter_mut() {
+                c.residence = c.residence.saturating_add(f);
+            }
+            for c in self.memwrite_q.iter_mut() {
+                c.residence = c.residence.saturating_add(f);
+            }
+        }
+        self.retire(f);
+
+        let mut feats = [0.0f32; LAT_BASE];
+        encode_static(inst, hist, &mut feats);
+        let is_store = inst.is_store();
+        self.processor_q.push_back(CtxInst {
+            feats,
+            residence: 0,
+            exec_lat: e,
+            store_lat: s,
+            is_store,
+            fetch_line: inst.fetch_line(),
+            mem_addr: if inst.op.is_mem() { inst.mem_addr } else { u64::MAX },
+            is_load: inst.is_load(),
+        });
+        // Hard capacity: the oldest instruction must leave once the
+        // processor is full (mirrors finite ROB+frontend).
+        while self.processor_q.len() > self.proc_capacity {
+            self.force_retire_head();
+        }
+    }
+
+    /// Retire completed instructions: in order from the processor queue
+    /// head (bounded by retire bandwidth × elapsed cycles), and any number
+    /// from the memory write queue.
+    fn retire(&mut self, elapsed: u32) {
+        let max_retire = (self.retire_width as u64 * elapsed.max(1) as u64) as usize;
+        let mut retired = 0;
+        while retired < max_retire {
+            match self.processor_q.front() {
+                Some(head) if head.residence >= head.exec_lat => {
+                    self.force_retire_head();
+                    retired += 1;
+                }
+                _ => break,
+            }
+        }
+        // Memory write queue retires freely from its tail.
+        self.memwrite_q.retain(|c| c.residence < c.store_lat);
+    }
+
+    fn force_retire_head(&mut self) {
+        if let Some(head) = self.processor_q.pop_front() {
+            if head.is_store && head.residence < head.store_lat {
+                if self.memwrite_q.len() == self.sq_capacity {
+                    self.memwrite_q.pop_front();
+                }
+                self.memwrite_q.push_back(head);
+            }
+        }
+    }
+
+    /// Drain: advance time until everything has left the machine; returns
+    /// the drain cycles (the paper's `Delta` in Eq. 1).
+    pub fn drain(&mut self) -> u64 {
+        let mut delta = 0u64;
+        while !self.is_empty() {
+            let step = self
+                .processor_q
+                .front()
+                .map(|h| h.exec_lat.saturating_sub(h.residence).max(1))
+                .unwrap_or_else(|| {
+                    self.memwrite_q
+                        .iter()
+                        .map(|c| c.store_lat.saturating_sub(c.residence).max(1))
+                        .min()
+                        .unwrap_or(1)
+                });
+            for c in self.processor_q.iter_mut() {
+                c.residence = c.residence.saturating_add(step);
+            }
+            for c in self.memwrite_q.iter_mut() {
+                c.residence = c.residence.saturating_add(step);
+            }
+            delta += step as u64;
+            self.retire(step);
+        }
+        self.cur_tick += delta;
+        delta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::OpClass;
+
+    fn cfg() -> SimConfig {
+        SimConfig::default_o3()
+    }
+
+    fn inst(pc: u64) -> Inst {
+        Inst { pc, op: OpClass::IntAlu, ..Default::default() }
+    }
+
+    fn hist() -> HistoryInfo {
+        HistoryInfo { fetch_level: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn encode_shape_and_slot0() {
+        let t = ContextTracker::new(&cfg());
+        let mut buf = vec![0.0f32; 64 * NUM_FEATURES];
+        let i = inst(0x1000);
+        t.encode_input(&i, &hist(), 64, &mut buf);
+        // Slot 0 carries op features; latency slots are zero.
+        assert!(buf[OP_BASE + 2] > 0.0);
+        assert_eq!(buf[LAT_BASE], 0.0);
+        // No context yet: slot 1 is all zero.
+        assert!(buf[NUM_FEATURES..2 * NUM_FEATURES].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn context_appears_youngest_first() {
+        let mut t = ContextTracker::new(&cfg());
+        let mut a = inst(0x1000);
+        a.op = OpClass::IntMult;
+        t.push(&a, &hist(), 1, 100, 0);
+        let mut b = inst(0x2000);
+        b.op = OpClass::FloatDiv;
+        t.push(&b, &hist(), 1, 100, 0);
+        let mut buf = vec![0.0f32; 8 * NUM_FEATURES];
+        t.encode_input(&inst(0x3000), &hist(), 8, &mut buf);
+        // Slot 1 = youngest = b (FloatDiv), slot 2 = a (IntMult).
+        let code1 = buf[NUM_FEATURES + OP_BASE];
+        let code2 = buf[2 * NUM_FEATURES + OP_BASE];
+        assert!((code1 - OpClass::FloatDiv.code() as f32 / 18.0).abs() < 1e-6);
+        assert!((code2 - OpClass::IntMult.code() as f32 / 18.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn residence_advances_and_retires() {
+        let mut t = ContextTracker::new(&cfg());
+        t.push(&inst(0x1000), &hist(), 0, 5, 0);
+        assert_eq!(t.len(), 1);
+        // Fetch the next instruction 10 cycles later: first retires.
+        t.push(&inst(0x1004), &hist(), 10, 5, 0);
+        assert_eq!(t.len(), 1, "completed instruction should have retired");
+    }
+
+    #[test]
+    fn in_order_retirement_blocks_younger() {
+        let mut t = ContextTracker::new(&cfg());
+        // Head is slow (exec 100), next is fast (exec 1).
+        t.push(&inst(0x1000), &hist(), 0, 100, 0);
+        t.push(&inst(0x1004), &hist(), 1, 1, 0);
+        t.push(&inst(0x1008), &hist(), 10, 1, 0);
+        // The fast one behind the slow head must still be present.
+        assert_eq!(t.len(), 3, "younger retired before older head");
+    }
+
+    #[test]
+    fn stores_move_to_memwrite_queue() {
+        let mut t = ContextTracker::new(&cfg());
+        let mut st = inst(0x1000);
+        st.op = OpClass::Store;
+        st.mem_addr = 0x5000;
+        st.mem_size = 8;
+        t.push(&st, &hist(), 0, 2, 50);
+        t.push(&inst(0x1004), &hist(), 5, 1, 0); // advance 5: store retires from proc q
+        assert_eq!(t.len(), 2, "store should be in memwrite queue + new inst");
+        t.push(&inst(0x1008), &hist(), 60, 1, 0); // advance past store latency
+        assert_eq!(t.len(), 1, "store should have left the memwrite queue");
+    }
+
+    #[test]
+    fn dependency_flags_set() {
+        let mut t = ContextTracker::new(&cfg());
+        let mut st = inst(0x1000);
+        st.op = OpClass::Store;
+        st.mem_addr = 0x8000;
+        st.mem_size = 8;
+        t.push(&st, &hist(), 0, 100, 120);
+        let mut ld = inst(0x1004);
+        ld.op = OpClass::Load;
+        ld.mem_addr = 0x8000;
+        ld.mem_size = 8;
+        let mut buf = vec![0.0f32; 4 * NUM_FEATURES];
+        t.encode_input(&ld, &hist(), 4, &mut buf);
+        let slot1 = &buf[NUM_FEATURES..2 * NUM_FEATURES];
+        assert_eq!(slot1[DEP_BASE], 1.0, "same fetch line");
+        assert_eq!(slot1[DEP_BASE + 1], 1.0, "same addr");
+        assert_eq!(slot1[DEP_BASE + 2], 1.0, "same line");
+        assert_eq!(slot1[DEP_BASE + 3], 1.0, "same page");
+        assert_eq!(slot1[DEP_BASE + 4], 1.0, "raw store->load");
+    }
+
+    #[test]
+    fn capacity_bounded() {
+        let c = cfg();
+        let mut t = ContextTracker::new(&c);
+        for k in 0..500 {
+            t.push(&inst(0x1000 + 4 * k), &hist(), 0, 10_000, 0);
+        }
+        assert!(t.len() <= c.max_context() + c.sq_entries);
+    }
+
+    #[test]
+    fn drain_empties_everything() {
+        let mut t = ContextTracker::new(&cfg());
+        for k in 0..20 {
+            let mut i = inst(0x1000 + 4 * k);
+            if k % 3 == 0 {
+                i.op = OpClass::Store;
+                i.mem_addr = 0x9000 + 8 * k;
+                i.mem_size = 8;
+            }
+            t.push(&i, &hist(), 1, 20 + k as u32, 40 + k as u32);
+        }
+        let delta = t.drain();
+        assert!(t.is_empty());
+        assert!(delta > 0);
+    }
+
+    #[test]
+    fn truncation_keeps_youngest() {
+        let c = cfg();
+        let mut t = ContextTracker::new(&c);
+        for k in 0..80 {
+            let mut i = inst(0x1000 + 4 * k);
+            i.op = if k == 79 { OpClass::FloatSqrt } else { OpClass::IntAlu };
+            t.push(&i, &hist(), 0, 10_000, 0);
+        }
+        let mut buf = vec![0.0f32; 8 * NUM_FEATURES];
+        t.encode_input(&inst(0x5000), &hist(), 8, &mut buf);
+        // Slot 1 must be the youngest pushed (FloatSqrt), even though the
+        // queue holds more instructions than fit in 8 slots.
+        let code1 = buf[NUM_FEATURES + OP_BASE];
+        assert!((code1 - OpClass::FloatSqrt.code() as f32 / 18.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,194 @@
+//! Set-associative LRU tag array — the lookup-table core of history-context
+//! simulation (paper §2.2: "obtaining these intermediate results mostly
+//! involves table lookups (e.g., cache tag array)").
+//!
+//! Only tags, LRU order, and dirty bits are kept: no data, no MSHRs, no
+//! pipeline — those timing effects are the ML model's job.
+
+/// Outcome of a tag-array access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TagAccess {
+    /// Did the line hit?
+    pub hit: bool,
+    /// Did the fill evict a dirty line (i.e. cause a writeback)?
+    pub writeback: bool,
+}
+
+/// One set-associative, true-LRU tag array with dirty bits.
+#[derive(Debug, Clone)]
+pub struct TagArray {
+    sets: usize,
+    ways: usize,
+    /// Per-way tags; `u64::MAX` = invalid. Layout: `[set * ways + way]`.
+    tags: Vec<u64>,
+    /// LRU stamps (bigger = more recent).
+    stamps: Vec<u64>,
+    dirty: Vec<bool>,
+    tick: u64,
+    line_shift: u32,
+    // statistics
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl TagArray {
+    /// Build from geometry. `line` is the block size in bytes used to
+    /// derive the tag from an address.
+    pub fn new(sets: usize, ways: usize, line: u64) -> Self {
+        assert!(sets > 0 && ways > 0 && line.is_power_of_two());
+        TagArray {
+            sets,
+            ways,
+            tags: vec![u64::MAX; sets * ways],
+            stamps: vec![0; sets * ways],
+            dirty: vec![false; sets * ways],
+            tick: 0,
+            line_shift: line.trailing_zeros(),
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    #[inline]
+    fn index(&self, addr: u64) -> (usize, u64) {
+        let block = addr >> self.line_shift;
+        ((block as usize) % self.sets, block)
+    }
+
+    /// Access `addr`; on miss the line is filled (allocate-on-miss),
+    /// evicting LRU. `write` marks the line dirty.
+    pub fn access(&mut self, addr: u64, write: bool) -> TagAccess {
+        self.tick += 1;
+        let (set, tag) = self.index(addr);
+        let base = set * self.ways;
+        let ways = &mut self.tags[base..base + self.ways];
+        // Hit path.
+        if let Some(w) = ways.iter().position(|&t| t == tag) {
+            self.stamps[base + w] = self.tick;
+            self.dirty[base + w] |= write;
+            self.hits += 1;
+            return TagAccess { hit: true, writeback: false };
+        }
+        // Miss: fill into invalid or LRU way.
+        self.misses += 1;
+        let victim = (0..self.ways)
+            .min_by_key(|&w| {
+                if self.tags[base + w] == u64::MAX {
+                    0
+                } else {
+                    self.stamps[base + w] + 1
+                }
+            })
+            .unwrap();
+        let evicted_dirty = self.tags[base + victim] != u64::MAX && self.dirty[base + victim];
+        if evicted_dirty {
+            self.writebacks += 1;
+        }
+        self.tags[base + victim] = tag;
+        self.stamps[base + victim] = self.tick;
+        self.dirty[base + victim] = write;
+        TagAccess { hit: false, writeback: evicted_dirty }
+    }
+
+    /// Probe without filling (used by prefetch checks).
+    pub fn probe(&self, addr: u64) -> bool {
+        let (set, tag) = self.index(addr);
+        let base = set * self.ways;
+        self.tags[base..base + self.ways].contains(&tag)
+    }
+
+    /// Insert a line without counting it as a demand access (prefetch
+    /// fill). Returns whether a dirty line was evicted.
+    pub fn fill(&mut self, addr: u64) -> bool {
+        let before = (self.hits, self.misses);
+        let acc = self.access(addr, false);
+        // Undo demand counters: prefetch fills aren't demand traffic.
+        self.hits = before.0;
+        self.misses = before.1;
+        acc.writeback
+    }
+
+    /// Hit rate so far (1.0 when no accesses yet).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeat_access_hits() {
+        let mut t = TagArray::new(64, 4, 64);
+        assert!(!t.access(0x1000, false).hit);
+        assert!(t.access(0x1000, false).hit);
+        assert!(t.access(0x1004, false).hit); // same line
+        assert!(!t.access(0x2000, false).hit);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // 1 set, 2 ways: A, B, A, C must evict B (LRU), so A still hits.
+        let mut t = TagArray::new(1, 2, 64);
+        t.access(0x0, false); // A
+        t.access(0x40, false); // B
+        t.access(0x0, false); // A (refreshes)
+        t.access(0x80, false); // C -> evicts B
+        assert!(t.access(0x0, false).hit, "A evicted but was MRU");
+        assert!(!t.access(0x40, false).hit, "B should have been evicted");
+    }
+
+    #[test]
+    fn writeback_on_dirty_eviction() {
+        let mut t = TagArray::new(1, 1, 64);
+        t.access(0x0, true); // dirty
+        let acc = t.access(0x40, false); // evicts dirty line
+        assert!(acc.writeback);
+        assert_eq!(t.writebacks, 1);
+        let acc2 = t.access(0x80, false); // evicts clean line
+        assert!(!acc2.writeback);
+    }
+
+    #[test]
+    fn working_set_behavior() {
+        // A working set that fits never misses after warmup; one that
+        // doesn't fit thrashes.
+        let mut small = TagArray::new(64, 4, 64); // 16KB
+        for round in 0..4 {
+            for i in 0..128u64 {
+                let acc = small.access(i * 64, false);
+                if round > 0 {
+                    assert!(acc.hit, "fit working set missed at {i}");
+                }
+            }
+        }
+        let mut big = TagArray::new(4, 1, 64); // 256B, direct-mapped
+        let mut misses = 0;
+        for _ in 0..4 {
+            for i in 0..64u64 {
+                if !big.access(i * 64, false).hit {
+                    misses += 1;
+                }
+            }
+        }
+        assert!(misses > 200, "thrashing set should keep missing: {misses}");
+    }
+
+    #[test]
+    fn probe_and_fill() {
+        let mut t = TagArray::new(16, 2, 64);
+        assert!(!t.probe(0x1000));
+        t.fill(0x1000);
+        assert!(t.probe(0x1000));
+        // fill doesn't move demand counters
+        assert_eq!(t.hits + t.misses, 0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Two-stage TLB with a radix page-table walker (paper Table 2: "2-stage
+//! TLBs, 1KB TLB caches"; features: "3 fetch/data table walking levels").
+//!
+//! The walker models a 3-level radix walk. Each level's page-table entry is
+//! itself cached in a per-level walk cache; the per-level *miss* flags are
+//! exactly the "table walking levels" features the paper feeds the model.
+
+use super::tagarray::TagArray;
+use crate::des::config::TlbParams;
+
+/// Number of radix levels walked on a full TLB miss.
+pub const WALK_LEVELS: usize = 3;
+
+/// Result of translating one address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TlbResult {
+    /// 0 = L1 TLB hit, 1 = L2 TLB hit, 2 = full walk.
+    pub level: u8,
+    /// Per-walk-level miss flags (walk access had to go to memory).
+    pub walk_miss: [bool; WALK_LEVELS],
+}
+
+impl TlbResult {
+    /// Number of walk levels that went to memory.
+    pub fn walk_misses(&self) -> u32 {
+        self.walk_miss.iter().filter(|&&m| m).count() as u32
+    }
+}
+
+/// Two-stage TLB plus walk caches.
+#[derive(Debug, Clone)]
+pub struct Tlb {
+    l1: TagArray,
+    l2: TagArray,
+    /// One small cache per walk level (PTEs at that level).
+    walk_caches: [TagArray; WALK_LEVELS],
+    pub walks: u64,
+}
+
+/// 4KiB pages.
+const PAGE_SHIFT: u32 = 12;
+
+impl Tlb {
+    pub fn new(p: &TlbParams) -> Self {
+        let l1_sets = (p.l1_entries / p.ways).max(1);
+        let l2_sets = (p.l2_entries / p.ways).max(1);
+        Tlb {
+            l1: TagArray::new(l1_sets, p.ways, 1 << PAGE_SHIFT),
+            l2: TagArray::new(l2_sets, p.ways, 1 << PAGE_SHIFT),
+            // Higher levels map exponentially more address space per entry:
+            // level 0 = 1GiB regions, 1 = 2MiB, 2 = 4KiB PTE lines (8 PTEs
+            // per 64B line -> 32KiB per line).
+            walk_caches: [
+                TagArray::new(4, 4, 1 << 30),
+                TagArray::new(16, 4, 2 << 20),
+                TagArray::new(32, 4, 32 << 10),
+            ],
+            walks: 0,
+        }
+    }
+
+    /// Translate `addr`; updates all structures.
+    pub fn translate(&mut self, addr: u64) -> TlbResult {
+        if self.l1.access(addr, false).hit {
+            return TlbResult { level: 0, walk_miss: [false; WALK_LEVELS] };
+        }
+        if self.l2.access(addr, false).hit {
+            return TlbResult { level: 1, walk_miss: [false; WALK_LEVELS] };
+        }
+        // Full walk: touch each level's walk cache.
+        self.walks += 1;
+        let mut walk_miss = [false; WALK_LEVELS];
+        for (i, wc) in self.walk_caches.iter_mut().enumerate() {
+            walk_miss[i] = !wc.access(addr, false).hit;
+        }
+        TlbResult { level: 2, walk_miss }
+    }
+
+    /// L1-stage hit rate.
+    pub fn l1_hit_rate(&self) -> f64 {
+        self.l1.hit_rate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::config::SimConfig;
+
+    fn tlb() -> Tlb {
+        Tlb::new(&SimConfig::default_o3().dtlb)
+    }
+
+    #[test]
+    fn repeat_page_hits_l1() {
+        let mut t = tlb();
+        assert_eq!(t.translate(0x1000).level, 2); // cold: full walk
+        assert_eq!(t.translate(0x1008).level, 0); // same page
+        assert_eq!(t.translate(0x1FFF).level, 0);
+        assert_eq!(t.translate(0x2000).level, 2); // next page cold
+    }
+
+    #[test]
+    fn l2_catches_l1_evictions() {
+        let mut t = tlb();
+        // Touch more pages than L1 holds (48) but fewer than L2 (128).
+        for i in 0..100u64 {
+            t.translate(i << 12);
+        }
+        // Re-touch early pages: should mostly be level <= 1 (L2 TLB), not
+        // full walks.
+        let mut full_walks = 0;
+        for i in 0..100u64 {
+            if t.translate(i << 12).level == 2 {
+                full_walks += 1;
+            }
+        }
+        assert!(full_walks < 20, "full_walks={full_walks}");
+    }
+
+    #[test]
+    fn walk_locality_reduces_walk_misses() {
+        let mut t = tlb();
+        // Dense pages under the same 2MiB region: after the first walk,
+        // upper-level walk caches hit.
+        let r0 = t.translate(0x4000_0000);
+        assert_eq!(r0.walk_misses(), WALK_LEVELS as u32);
+        // Far-but-same-1GiB page: level-0 cached, deeper levels miss.
+        let r1 = t.translate(0x4000_0000 + (4 << 20));
+        assert!(r1.walk_misses() < WALK_LEVELS as u32);
+    }
+}

@@ -1,0 +1,141 @@
+//! Synthetic ARMv8-like instruction set.
+//!
+//! SimNet is ISA-agnostic at the framework level: the predictor consumes
+//! *static instruction properties* (paper Table 1, top row) rather than raw
+//! encodings. This module defines a synthetic RISC ISA rich enough to
+//! exercise every feature the paper lists — operation class, direct/indirect
+//! branches, memory barriers, serializing ops, up to 8 source and 6
+//! destination registers, and memory accesses with sizes — without carrying
+//! a real decoder.
+
+mod op;
+mod regs;
+
+pub use op::{FuClass, OpClass};
+pub use regs::{
+    is_simd_reg, RegId, FIRST_SIMD_REG, INT_REGS, NUM_REGS, REG_LR, REG_NONE, REG_SP, SIMD_REGS,
+};
+
+/// Maximum number of source registers per instruction (paper: 8).
+pub const MAX_SRC_REGS: usize = 8;
+/// Maximum number of destination registers per instruction (paper: 6).
+pub const MAX_DST_REGS: usize = 6;
+
+/// A single *dynamic* instruction instance: the static properties plus the
+/// resolved dynamic facts (effective address, branch outcome) produced by
+/// functional execution of a [`crate::workload::Program`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Inst {
+    /// Program counter of this instruction.
+    pub pc: u64,
+    /// Operation class (determines functional unit, latency class, flags).
+    pub op: OpClass,
+    /// Source register ids; `REG_NONE` marks unused slots.
+    pub srcs: [RegId; MAX_SRC_REGS],
+    /// Destination register ids; `REG_NONE` marks unused slots.
+    pub dsts: [RegId; MAX_DST_REGS],
+    /// Effective data address for loads/stores (0 otherwise).
+    pub mem_addr: u64,
+    /// Access size in bytes for loads/stores (0 otherwise).
+    pub mem_size: u8,
+    /// Branch target (resolved) for control-flow ops; 0 otherwise.
+    pub target: u64,
+    /// Whether a conditional branch was actually taken (always true for
+    /// unconditional control flow).
+    pub taken: bool,
+}
+
+impl Default for Inst {
+    fn default() -> Self {
+        Inst {
+            pc: 0,
+            op: OpClass::Nop,
+            srcs: [REG_NONE; MAX_SRC_REGS],
+            dsts: [REG_NONE; MAX_DST_REGS],
+            mem_addr: 0,
+            mem_size: 0,
+            target: 0,
+            taken: false,
+        }
+    }
+}
+
+impl Inst {
+    /// True for any instruction that reads memory.
+    #[inline]
+    pub fn is_load(&self) -> bool {
+        self.op.is_load()
+    }
+
+    /// True for any instruction that writes memory.
+    #[inline]
+    pub fn is_store(&self) -> bool {
+        self.op.is_store()
+    }
+
+    /// True for any control-flow instruction.
+    #[inline]
+    pub fn is_control(&self) -> bool {
+        self.op.is_control()
+    }
+
+    /// Number of populated source registers.
+    pub fn num_srcs(&self) -> usize {
+        self.srcs.iter().filter(|&&r| r != REG_NONE).count()
+    }
+
+    /// Number of populated destination registers.
+    pub fn num_dsts(&self) -> usize {
+        self.dsts.iter().filter(|&&r| r != REG_NONE).count()
+    }
+
+    /// Cache-line address (64B lines) of the instruction fetch.
+    #[inline]
+    pub fn fetch_line(&self) -> u64 {
+        self.pc >> 6
+    }
+
+    /// Cache-line address (64B lines) of the data access, if any.
+    #[inline]
+    pub fn data_line(&self) -> u64 {
+        self.mem_addr >> 6
+    }
+
+    /// 4KiB page of the data access, if any.
+    #[inline]
+    pub fn data_page(&self) -> u64 {
+        self.mem_addr >> 12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_inst_is_nop() {
+        let i = Inst::default();
+        assert_eq!(i.op, OpClass::Nop);
+        assert_eq!(i.num_srcs(), 0);
+        assert_eq!(i.num_dsts(), 0);
+        assert!(!i.is_load() && !i.is_store() && !i.is_control());
+    }
+
+    #[test]
+    fn line_and_page_math() {
+        let i = Inst { pc: 0x1040, mem_addr: 0x2345, mem_size: 8, ..Default::default() };
+        assert_eq!(i.fetch_line(), 0x1040 >> 6);
+        assert_eq!(i.data_line(), 0x2345 >> 6);
+        assert_eq!(i.data_page(), 0x2);
+    }
+
+    #[test]
+    fn src_dst_counting() {
+        let mut i = Inst::default();
+        i.srcs[0] = 3;
+        i.srcs[1] = 17;
+        i.dsts[0] = 5;
+        assert_eq!(i.num_srcs(), 2);
+        assert_eq!(i.num_dsts(), 1);
+    }
+}

@@ -1,0 +1,251 @@
+//! Operation classes and functional-unit classes.
+
+/// Operation class of an instruction. Mirrors the granularity gem5's O3 CPU
+/// uses for scheduling (`OpClass` in gem5), which is also the granularity
+/// the SimNet feature encoding needs: enough to derive functional-unit
+/// competition, memory behaviour, and control-flow behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum OpClass {
+    /// Simple integer ALU op (add/sub/logic/shift/compare).
+    IntAlu = 0,
+    /// Integer multiply.
+    IntMult = 1,
+    /// Integer divide (long latency, unpipelined).
+    IntDiv = 2,
+    /// FP add/sub/convert/compare.
+    FloatAdd = 3,
+    /// FP multiply / fused multiply-add.
+    FloatMult = 4,
+    /// FP divide (long latency, unpipelined).
+    FloatDiv = 5,
+    /// FP square root (long latency, unpipelined).
+    FloatSqrt = 6,
+    /// SIMD integer/logical op.
+    SimdAlu = 7,
+    /// SIMD multiply / FMA.
+    SimdMult = 8,
+    /// Memory read.
+    Load = 9,
+    /// Memory write.
+    Store = 10,
+    /// Conditional direct branch.
+    CondBranch = 11,
+    /// Unconditional direct jump.
+    Jump = 12,
+    /// Indirect branch (target from register).
+    IndirectBranch = 13,
+    /// Direct call (pushes return address).
+    Call = 14,
+    /// Return (indirect, predicted by RAS).
+    Ret = 15,
+    /// Memory barrier (orders loads/stores).
+    MemBarrier = 16,
+    /// Serializing instruction (drains the pipeline, e.g. system ops).
+    Serialize = 17,
+    /// No-op.
+    Nop = 18,
+}
+
+/// Total number of op classes (for encoding / histogram arrays).
+pub const NUM_OP_CLASSES: usize = 19;
+
+/// Functional-unit class an op issues to. The DES models per-FU-class issue
+/// ports and occupancy; the feature encoding exposes the class so the model
+/// can learn structural-hazard competition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum FuClass {
+    IntAlu = 0,
+    IntMulDiv = 1,
+    FpAlu = 2,
+    FpMulDiv = 3,
+    Simd = 4,
+    LoadPort = 5,
+    StorePort = 6,
+    Branch = 7,
+    None = 8,
+}
+
+/// Number of functional-unit classes.
+pub const NUM_FU_CLASSES: usize = 9;
+
+impl OpClass {
+    /// All op classes, in discriminant order.
+    pub const ALL: [OpClass; NUM_OP_CLASSES] = [
+        OpClass::IntAlu,
+        OpClass::IntMult,
+        OpClass::IntDiv,
+        OpClass::FloatAdd,
+        OpClass::FloatMult,
+        OpClass::FloatDiv,
+        OpClass::FloatSqrt,
+        OpClass::SimdAlu,
+        OpClass::SimdMult,
+        OpClass::Load,
+        OpClass::Store,
+        OpClass::CondBranch,
+        OpClass::Jump,
+        OpClass::IndirectBranch,
+        OpClass::Call,
+        OpClass::Ret,
+        OpClass::MemBarrier,
+        OpClass::Serialize,
+        OpClass::Nop,
+    ];
+
+    /// Functional unit this op class issues to.
+    pub fn fu_class(self) -> FuClass {
+        use OpClass::*;
+        match self {
+            IntAlu => FuClass::IntAlu,
+            IntMult | IntDiv => FuClass::IntMulDiv,
+            FloatAdd => FuClass::FpAlu,
+            FloatMult | FloatDiv | FloatSqrt => FuClass::FpMulDiv,
+            SimdAlu | SimdMult => FuClass::Simd,
+            Load => FuClass::LoadPort,
+            Store => FuClass::StorePort,
+            CondBranch | Jump | IndirectBranch | Call | Ret => FuClass::Branch,
+            MemBarrier | Serialize | Nop => FuClass::None,
+        }
+    }
+
+    /// Nominal execution latency in cycles on its functional unit (hit
+    /// latencies for memory ops are added by the cache model instead).
+    pub fn exec_latency(self) -> u32 {
+        use OpClass::*;
+        match self {
+            IntAlu => 1,
+            IntMult => 3,
+            IntDiv => 12,
+            FloatAdd => 2,
+            FloatMult => 4,
+            FloatDiv => 12,
+            FloatSqrt => 20,
+            SimdAlu => 2,
+            SimdMult => 4,
+            Load => 1,  // address generation; memory latency added separately
+            Store => 1, // address generation + data
+            CondBranch | Jump | IndirectBranch | Call | Ret => 1,
+            MemBarrier | Serialize => 1,
+            Nop => 1,
+        }
+    }
+
+    /// Whether the FU is pipelined (can accept a new op every cycle).
+    pub fn fu_pipelined(self) -> bool {
+        !matches!(self, OpClass::IntDiv | OpClass::FloatDiv | OpClass::FloatSqrt)
+    }
+
+    #[inline]
+    pub fn is_load(self) -> bool {
+        self == OpClass::Load
+    }
+
+    #[inline]
+    pub fn is_store(self) -> bool {
+        self == OpClass::Store
+    }
+
+    /// Any memory-referencing op.
+    #[inline]
+    pub fn is_mem(self) -> bool {
+        self.is_load() || self.is_store()
+    }
+
+    /// Any control-flow op.
+    #[inline]
+    pub fn is_control(self) -> bool {
+        use OpClass::*;
+        matches!(self, CondBranch | Jump | IndirectBranch | Call | Ret)
+    }
+
+    /// Conditional direct branch.
+    #[inline]
+    pub fn is_cond_branch(self) -> bool {
+        self == OpClass::CondBranch
+    }
+
+    /// Control flow whose target comes from a register (BTB/RAS-predicted).
+    #[inline]
+    pub fn is_indirect(self) -> bool {
+        matches!(self, OpClass::IndirectBranch | OpClass::Ret)
+    }
+
+    /// Memory barrier.
+    #[inline]
+    pub fn is_barrier(self) -> bool {
+        self == OpClass::MemBarrier
+    }
+
+    /// Pipeline-serializing op.
+    #[inline]
+    pub fn is_serializing(self) -> bool {
+        self == OpClass::Serialize
+    }
+
+    /// Floating-point op (scalar).
+    #[inline]
+    pub fn is_fp(self) -> bool {
+        use OpClass::*;
+        matches!(self, FloatAdd | FloatMult | FloatDiv | FloatSqrt)
+    }
+
+    /// SIMD op.
+    #[inline]
+    pub fn is_simd(self) -> bool {
+        matches!(self, OpClass::SimdAlu | OpClass::SimdMult)
+    }
+
+    /// Stable small integer id (used directly in the feature encoding).
+    #[inline]
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`OpClass::code`]. Panics on out-of-range input.
+    pub fn from_code(code: u8) -> OpClass {
+        Self::ALL[code as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn code_roundtrip() {
+        for op in OpClass::ALL {
+            assert_eq!(OpClass::from_code(op.code()), op);
+        }
+    }
+
+    #[test]
+    fn control_flags_consistent() {
+        for op in OpClass::ALL {
+            if op.is_cond_branch() || op.is_indirect() {
+                assert!(op.is_control());
+            }
+            if op.is_mem() {
+                assert!(!op.is_control());
+            }
+        }
+    }
+
+    #[test]
+    fn long_latency_ops_unpipelined() {
+        assert!(!OpClass::IntDiv.fu_pipelined());
+        assert!(!OpClass::FloatSqrt.fu_pipelined());
+        assert!(OpClass::IntAlu.fu_pipelined());
+        assert!(OpClass::Load.fu_pipelined());
+    }
+
+    #[test]
+    fn fu_mapping_total() {
+        // Every op class maps to some FU class and a nonzero latency.
+        for op in OpClass::ALL {
+            let _ = op.fu_class();
+            assert!(op.exec_latency() >= 1);
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Architectural register file layout.
+//!
+//! 32 integer registers (x0..x31) followed by 32 FP/SIMD registers
+//! (v0..v31), as in ARMv8. Register ids are flat indices into this space;
+//! `REG_NONE` marks an unused operand slot.
+
+/// Flat architectural register id.
+pub type RegId = i8;
+
+/// Number of integer registers.
+pub const INT_REGS: usize = 32;
+/// Number of FP/SIMD registers.
+pub const SIMD_REGS: usize = 32;
+/// Total architectural registers.
+pub const NUM_REGS: usize = INT_REGS + SIMD_REGS;
+
+/// Sentinel for an unused register slot.
+pub const REG_NONE: RegId = -1;
+
+/// First FP/SIMD register id.
+pub const FIRST_SIMD_REG: RegId = INT_REGS as RegId;
+
+/// Stack pointer (by convention x31).
+pub const REG_SP: RegId = 31;
+/// Link register (by convention x30).
+pub const REG_LR: RegId = 30;
+
+/// Whether a register id addresses the FP/SIMD file.
+#[inline]
+pub fn is_simd_reg(r: RegId) -> bool {
+    r >= FIRST_SIMD_REG
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_split() {
+        assert!(!is_simd_reg(0));
+        assert!(!is_simd_reg(REG_SP));
+        assert!(is_simd_reg(FIRST_SIMD_REG));
+        assert!(is_simd_reg((NUM_REGS - 1) as RegId));
+        assert_eq!(NUM_REGS, 64);
+    }
+}

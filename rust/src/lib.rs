@@ -1,0 +1,35 @@
+//! # SimNet-RS
+//!
+//! A from-scratch reproduction of *SimNet: Accurate and High-Performance
+//! Computer Architecture Simulation using Deep Learning* (Li et al.) as a
+//! three-layer rust + JAX + Pallas system.
+//!
+//! - [`isa`] / [`workload`]: synthetic ARMv8-like ISA and the SPEC-like
+//!   benchmark suite that drives everything.
+//! - [`des`]: the reference cycle-level out-of-order simulator (the "gem5"
+//!   this repo's ML models learn from and are validated against).
+//! - [`history`]: lightweight history-context simulation (caches / TLBs /
+//!   branch predictors as lookup structures only).
+//! - [`features`]: the 50-feature instruction encoding and context
+//!   (processor-queue / memory-write-queue) tracking.
+//! - [`trace`]: binary trace (`.smt`) and ML dataset (`.smd`) formats.
+//! - [`tensor`]: the `.smw` weight tensor container.
+//! - [`runtime`]: PJRT executable loading/execution (the `xla` crate).
+//! - [`predictor`]: latency-predictor abstraction — ML (PJRT) and table
+//!   based implementations.
+//! - [`coordinator`]: the SimNet simulators (sequential + parallel) and the
+//!   batching/worker orchestration.
+//! - [`stats`]: error metrics, CPI series, report generation.
+
+pub mod coordinator;
+pub mod des;
+pub mod features;
+pub mod history;
+pub mod isa;
+pub mod predictor;
+pub mod reports;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;
+pub mod trace;
+pub mod workload;

@@ -1,0 +1,485 @@
+//! `repro` — the SimNet-RS command-line launcher.
+//!
+//! Subcommands map 1:1 onto the workflows of the paper:
+//!
+//! ```text
+//! gen-trace      run the reference DES over a benchmark, dump a .smt trace
+//! gen-dataset    run the DES over the training benchmarks, build a .smd
+//! simulate-des   DES-only run (CPI + throughput)
+//! simulate-ml    ML simulation of a benchmark (sequential/parallel/pooled)
+//! report         table4 | fig5 | fig6 | fig10 | attribution
+//! sweep          subtrace-size | subtraces | workers | branch-predictor |
+//!                l2-size | rob-size
+//! list-benches   show the 25-benchmark suite
+//! ```
+//!
+//! Hand-rolled argument parsing (clap is not vendored in this image); every
+//! flag is `--key value`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use simnet::coordinator::pool::PoolPredictor;
+use simnet::coordinator::{simulate_parallel, simulate_pool, simulate_sequential, PoolOptions};
+use simnet::des::{simulate, BpChoice, SimConfig};
+use simnet::reports::{self, attribution, figs, sweeps, table4, PredictorChoice};
+use simnet::trace::{build_dataset, DatasetOptions, TraceReader, TraceRecord, TraceWriter};
+use simnet::workload::{find, suite, training_set};
+
+/// Parsed `--key value` flags plus positional words.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad value {v}")),
+        }
+    }
+
+    fn list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+}
+
+/// Build a SimConfig from common flags: --config o3|a64fx, --bp
+/// bimode|bimode-l|tage, --l2-kb N, --rob N.
+fn config_from(args: &Args) -> Result<SimConfig> {
+    let mut cfg = match args.get("config").unwrap_or("o3") {
+        "o3" => SimConfig::default_o3(),
+        "a64fx" => SimConfig::a64fx(),
+        other => bail!("unknown --config {other} (o3|a64fx)"),
+    };
+    if let Some(bp) = args.get("bp") {
+        cfg.bp = match bp {
+            "bimode" => BpChoice::BiMode,
+            "bimode-l" => BpChoice::BiModeLarge,
+            "tage" => BpChoice::TageLite,
+            other => bail!("unknown --bp {other}"),
+        };
+    }
+    if let Some(kb) = args.get("l2-kb") {
+        cfg.l2.size = kb.parse::<u64>().context("--l2-kb")? << 10;
+    }
+    if let Some(rob) = args.get("rob") {
+        cfg.rob_entries = rob.parse().context("--rob")?;
+    }
+    Ok(cfg)
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts").unwrap_or("artifacts"))
+}
+
+/// Predictor choice from flags: --table (analytical) or --model NAME.
+fn predictor_from(args: &Args, default_model: &str) -> PredictorChoice {
+    if args.get("table").is_some() {
+        let seq = args.num("seq", 32usize).unwrap_or(32);
+        PredictorChoice::Table { seq }
+    } else {
+        let model = args.get("model").unwrap_or(default_model).to_string();
+        PredictorChoice::Ml {
+            artifacts: artifacts_dir(args),
+            model: table4::export_name(&model),
+            weights: args
+                .get("weights")
+                .map(PathBuf::from)
+                .or_else(|| Some(artifacts_dir(args).join(format!("{model}.smw"))))
+                .filter(|p| p.exists()),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "gen-trace" => cmd_gen_trace(&args),
+        "gen-dataset" => cmd_gen_dataset(&args),
+        "simulate-des" => cmd_simulate_des(&args),
+        "simulate-ml" => cmd_simulate_ml(&args),
+        "report" => cmd_report(&args),
+        "sweep" => cmd_sweep(&args),
+        "list-benches" => cmd_list_benches(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other}; run `repro help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "repro — SimNet reproduction (rust + JAX + Pallas via PJRT)\n\n\
+         USAGE: repro <command> [--flags]\n\n\
+         COMMANDS\n\
+         \x20 gen-trace    --bench NAME --n N --out trace.smt [--config o3|a64fx] [--input-seed K]\n\
+         \x20 gen-dataset  --out data.smd [--benches a,b,c] [--n-per N] [--seq S] [--limit L]\n\
+         \x20 simulate-des --bench NAME --n N [--config ...]\n\
+         \x20 simulate-ml  --bench NAME --n N [--model c3] [--table] [--subtraces S] [--workers W]\n\
+         \x20              [--trace file.smt] [--artifacts DIR] [--window W]\n\
+         \x20 report       table4|fig5|fig6|fig10|attribution [--models a,b] [--n N] [--benches ...]\n\
+         \x20 sweep        subtrace-size|subtraces|workers|branch-predictor|l2-size|rob-size [...]\n\
+         \x20 list-benches"
+    );
+}
+
+fn cmd_list_benches() -> Result<()> {
+    let mut t = simnet::stats::Table::new(&["benchmark", "category", "set"]);
+    for b in suite() {
+        t.row(vec![
+            b.name.to_string(),
+            format!("{:?}", b.category),
+            if b.training { "ML(train)".into() } else { "simulation".into() },
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_gen_trace(args: &Args) -> Result<()> {
+    let bench = args.get("bench").ok_or_else(|| anyhow!("--bench required"))?;
+    let n: u64 = args.num("n", 100_000)?;
+    let out = args.get("out").ok_or_else(|| anyhow!("--out required"))?;
+    let seed: u64 = args.num("input-seed", reports::REFERENCE_SEED)?;
+    let cfg = config_from(args)?;
+    let b = find(bench).ok_or_else(|| anyhow!("unknown benchmark {bench}"))?;
+    let mut w = TraceWriter::create(Path::new(out))?;
+    let t0 = std::time::Instant::now();
+    let stats = simulate(&cfg, b.workload(seed).stream(), n, |e| {
+        w.write(&TraceRecord::from(e)).expect("trace write");
+    });
+    let count = w.finish()?;
+    println!(
+        "wrote {count} records to {out}: cpi={:.3} des_mips={:.3}",
+        stats.cpi(),
+        count as f64 / t0.elapsed().as_secs_f64() / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_gen_dataset(args: &Args) -> Result<()> {
+    let out = args.get("out").ok_or_else(|| anyhow!("--out required"))?;
+    let benches = args
+        .list("benches")
+        .unwrap_or_else(|| training_set().iter().map(|s| s.to_string()).collect());
+    let n_per: u64 = args.num("n-per", 100_000)?;
+    let seq: usize = args.num("seq", 32)?;
+    let limit: u64 = args.num("limit", 0)?;
+    let cfg = config_from(args)?;
+    // Dataset generation uses the "test workload" seed 0 (simulation runs
+    // use the reference seed), mirroring the paper's input split.
+    let mut all = Vec::new();
+    for name in &benches {
+        let b = find(name).ok_or_else(|| anyhow!("unknown benchmark {name}"))?;
+        let (recs, stats) = reports::des_trace(&cfg, &b, n_per, 0);
+        println!("  {name}: {} records, cpi={:.3}", recs.len(), stats.cpi());
+        all.extend(recs);
+    }
+    let mode = match args.get("context").unwrap_or("simnet") {
+        "ithemal" => simnet::features::ContextMode::Ithemal,
+        _ => simnet::features::ContextMode::SimNet,
+    };
+    // --rob-mix 40,80,120: regenerate the traces under each ROB size and
+    // emit one dataset with the ROB size as the config feature (the input
+    // the Â§5 ROB-conditioned model trains against).
+    if let Some(mix) = args.list("rob-mix") {
+        let mut writer = simnet::trace::DatasetWriter::create(Path::new(out), seq)?;
+        let mut seen = std::collections::HashSet::new();
+        let mut total_dups = 0u64;
+        for rob_s in &mix {
+            let rob: usize = rob_s.parse().context("--rob-mix")?;
+            let mut rcfg = cfg.clone();
+            rcfg.rob_entries = rob;
+            let opts = DatasetOptions {
+                seq_len: seq,
+                dedup: true,
+                limit,
+                mode,
+                cfg_feature: rob as f32 / 256.0,
+            };
+            for name in &benches {
+                let b = find(name).ok_or_else(|| anyhow!("unknown benchmark {name}"))?;
+                let (recs, _) = reports::des_trace(&rcfg, &b, n_per / mix.len() as u64, 0);
+                total_dups +=
+                    simnet::trace::append_dataset(recs.iter(), &rcfg, &opts, &mut writer, &mut seen)?;
+            }
+            println!("  rob={rob}: dataset now {} samples", writer.count());
+        }
+        let written = writer.finish()?;
+        println!("dataset {out}: {written} samples ({total_dups} dups removed), rob-mixed");
+        return Ok(());
+    }
+    let opts = DatasetOptions { seq_len: seq, dedup: true, limit, mode, cfg_feature: 0.0 };
+    let (written, dups) = build_dataset(all.iter(), &cfg, &opts, Path::new(out))?;
+    println!("dataset {out}: {written} samples ({dups} duplicates removed), seq_len={seq}");
+    Ok(())
+}
+
+fn cmd_simulate_des(args: &Args) -> Result<()> {
+    let bench = args.get("bench").ok_or_else(|| anyhow!("--bench required"))?;
+    let n: u64 = args.num("n", 100_000)?;
+    let cfg = config_from(args)?;
+    let b = find(bench).ok_or_else(|| anyhow!("unknown benchmark {bench}"))?;
+    let seed: u64 = args.num("input-seed", reports::REFERENCE_SEED)?;
+    let t0 = std::time::Instant::now();
+    let stats = simulate(&cfg, b.workload(seed).stream(), n, |_| {});
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{bench} [{}]: {} instructions, {} cycles, cpi={:.3} ipc={:.3} \
+         mispredicts={} l1d_miss={} | {:.3} MIPS",
+        cfg.name,
+        stats.instructions,
+        stats.cycles,
+        stats.cpi(),
+        stats.ipc(),
+        stats.mispredicts,
+        stats.l1d_miss,
+        stats.instructions as f64 / wall / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_simulate_ml(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let n: u64 = args.num("n", 100_000)?;
+    let window: u64 = args.num("window", 0)?;
+    // Source: an .smt trace file or a benchmark run through the DES.
+    let (recs, des_cpi) = if let Some(path) = args.get("trace") {
+        let recs: Vec<TraceRecord> =
+            TraceReader::open(Path::new(path))?.collect::<std::io::Result<_>>()?;
+        let cycles: u64 = recs.iter().map(|r| r.f_lat as u64).sum();
+        let cpi = cycles as f64 / recs.len().max(1) as f64;
+        (recs, cpi)
+    } else {
+        let bench = args.get("bench").ok_or_else(|| anyhow!("--bench or --trace required"))?;
+        let b = find(bench).ok_or_else(|| anyhow!("unknown benchmark {bench}"))?;
+        let (recs, stats) = reports::des_trace(&cfg, &b, n, reports::REFERENCE_SEED);
+        (recs, stats.cpi())
+    };
+
+    let workers: usize = args.num("workers", 1)?;
+    let subtraces: usize = args.num("subtraces", 1)?;
+    let choice = predictor_from(args, "c3");
+    let out = if workers > 1 {
+        let predictor = match &choice {
+            PredictorChoice::Ml { artifacts, model, weights } => PoolPredictor::Ml {
+                artifacts: artifacts.clone(),
+                model: model.clone(),
+                weights: weights.clone(),
+            },
+            PredictorChoice::Table { seq } => PoolPredictor::Table { seq: *seq },
+        };
+        simulate_pool(&recs, &cfg, &PoolOptions { workers, subtraces, predictor, window })?
+    } else {
+        let mut p = choice.build()?;
+        if subtraces > 1 {
+            simulate_parallel(&recs, &cfg, p.as_mut(), subtraces, window)?
+        } else {
+            simulate_sequential(&recs, &cfg, p.as_mut(), window)?
+        }
+    };
+    println!(
+        "ml[{}] {} instructions: cpi={:.3} (des cpi={:.3}, err={:.2}%) | {:.3} MIPS",
+        choice.label(),
+        out.instructions,
+        out.cpi(),
+        des_cpi,
+        simnet::stats::cpi_error(out.cpi(), des_cpi) * 100.0,
+        out.mips()
+    );
+    if window > 0 {
+        print!("{}", simnet::stats::render_cpi_series("windows", &out.windows));
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("table4");
+    let cfg = config_from(args)?;
+    let artifacts = artifacts_dir(args);
+    let n: u64 = args.num("n", 50_000)?;
+    let benches = args.list("benches");
+    let subtrace: usize = args.num("subtrace", 3_000)?;
+    match which {
+        "table4" => {
+            let models = args.list("models").unwrap_or_else(|| {
+                vec![
+                    "fc3".into(),
+                    "c3".into(),
+                    "c3_reg".into(),
+                    "rb".into(),
+                    "lstm2".into(),
+                    "ithemal_lstm2".into(),
+                ]
+            });
+            print!("{}", table4::run(&artifacts, &models, &cfg, n, subtrace)?);
+        }
+        "fig5" => {
+            let choices = report_choices(args, &artifacts)?;
+            print!("{}", figs::fig5(&cfg, &choices, n, subtrace, benches.as_deref())?);
+        }
+        "fig6" => {
+            let choices = report_choices(args, &artifacts)?;
+            let window: u64 = args.num("window", n / 50)?;
+            print!("{}", figs::fig6(&cfg, &choices, n, window.max(1), benches.as_deref())?);
+        }
+        "fig10" => {
+            let models = args.list("models").unwrap_or_else(|| vec!["c3".into(), "rb".into()]);
+            // Measure sim + des throughput on one benchmark.
+            let bench = args.get("bench").unwrap_or("xz");
+            let b = find(bench).ok_or_else(|| anyhow!("unknown benchmark {bench}"))?;
+            let t0 = std::time::Instant::now();
+            let (recs, _) = reports::des_trace(&cfg, &b, n, reports::REFERENCE_SEED);
+            let des_mips = n as f64 / t0.elapsed().as_secs_f64() / 1e6;
+            let mut sim_mips = Vec::new();
+            for m in &models {
+                let choice = PredictorChoice::ml(&artifacts, &table4::export_name(m));
+                if let Ok(mut p) = choice.build() {
+                    let subs = (recs.len() / subtrace.max(1)).max(1);
+                    let out = simulate_parallel(&recs, &cfg, p.as_mut(), subs, 0)?;
+                    sim_mips.push((m.clone(), out.mips()));
+                }
+            }
+            print!("{}", figs::fig10(&artifacts, &models, &cfg, &sim_mips, des_mips)?);
+        }
+        "attribution" => {
+            let choice = predictor_from(args, "c3");
+            let samples: usize = args.num("samples", 256)?;
+            let attr = attribution::attribution(&cfg, &choice, samples, benches.as_deref())?;
+            print!("{}", attribution::render(&attr));
+        }
+        "dataset-size" => {
+            // §4.5: 4-benchmark vs 15-benchmark training set (the latter
+            // built by `make study`).
+            let mut t = simnet::stats::Table::new(&[
+                "dataset", "fetch_err", "exec_err", "store_err", "train_seconds",
+            ]);
+            for (tag, label) in [("c3", "4 benchmarks"), ("c3_big", "15 benchmarks")] {
+                match table4::ModelMeta::read(&artifacts, tag) {
+                    Some(m) => t.row(vec![
+                        label.to_string(),
+                        format!("{:.1}%", m.fetch_err * 100.0),
+                        format!("{:.1}%", m.exec_err * 100.0),
+                        format!("{:.1}%", m.store_err * 100.0),
+                        format!("{:.0}s", m.train_seconds),
+                    ]),
+                    None => println!("({tag}.meta missing — run `make study` for c3_big)"),
+                }
+            }
+            println!("== §4.5: training dataset size ==");
+            print!("{}", t.render());
+        }
+        other => {
+            bail!("unknown report {other} (table4|fig5|fig6|fig10|attribution|dataset-size)")
+        }
+    }
+    Ok(())
+}
+
+/// Predictor list for fig5/fig6: --models or --table.
+fn report_choices(args: &Args, artifacts: &Path) -> Result<Vec<PredictorChoice>> {
+    if args.get("table").is_some() {
+        let seq: usize = args.num("seq", 32)?;
+        return Ok(vec![PredictorChoice::Table { seq }]);
+    }
+    let models = args
+        .list("models")
+        .unwrap_or_else(|| vec!["c3".into(), "rb".into(), "ithemal_lstm2".into()]);
+    Ok(models
+        .iter()
+        .map(|m| PredictorChoice::Ml {
+            artifacts: artifacts.to_path_buf(),
+            model: table4::export_name(m),
+            weights: Some(artifacts.join(format!("{m}.smw"))).filter(|p| p.exists()),
+        })
+        .collect())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let cfg = config_from(args)?;
+    let n: u64 = args.num("n", 48_000)?;
+    let benches = args.list("benches");
+    let choice = predictor_from(args, "c3");
+    match which {
+        "subtrace-size" => {
+            let sizes = args
+                .list("sizes")
+                .map(|v| v.iter().map(|s| s.parse().unwrap()).collect::<Vec<usize>>())
+                .unwrap_or_else(|| vec![750, 1_500, 3_000, 6_000, 12_000]);
+            print!("{}", sweeps::fig7(&cfg, &choice, n, &sizes, benches.as_deref())?);
+        }
+        "subtraces" => {
+            let counts = args
+                .list("counts")
+                .map(|v| v.iter().map(|s| s.parse().unwrap()).collect::<Vec<usize>>())
+                .unwrap_or_else(|| vec![1, 4, 16, 64, 256, 1024]);
+            let bench = args.get("bench").unwrap_or("xz");
+            print!("{}", sweeps::fig8(&cfg, &choice, n, &counts, bench)?);
+        }
+        "workers" => {
+            let workers = args
+                .list("counts")
+                .map(|v| v.iter().map(|s| s.parse().unwrap()).collect::<Vec<usize>>())
+                .unwrap_or_else(|| vec![1, 2, 4, 8]);
+            let subtraces: usize = args.num("subtraces", 512)?;
+            let bench = args.get("bench").unwrap_or("xz");
+            print!("{}", sweeps::fig9(&cfg, &choice, n, &workers, subtraces, bench)?);
+        }
+        "branch-predictor" => {
+            print!("{}", sweeps::table5(&cfg, &choice, n, benches.as_deref())?);
+        }
+        "l2-size" => {
+            let sizes = args
+                .list("sizes")
+                .map(|v| v.iter().map(|s| s.parse().unwrap()).collect::<Vec<u64>>())
+                .unwrap_or_else(|| vec![256, 512, 1024, 2048, 4096]);
+            print!("{}", sweeps::l2_sweep(&cfg, &choice, n, &sizes, benches.as_deref())?);
+        }
+        "rob-size" => {
+            let sizes = args
+                .list("sizes")
+                .map(|v| v.iter().map(|s| s.parse().unwrap()).collect::<Vec<usize>>())
+                .unwrap_or_else(|| vec![40, 80, 120]);
+            print!("{}", sweeps::rob_sweep(&cfg, &choice, n, &sizes, benches.as_deref())?);
+        }
+        other => bail!(
+            "unknown sweep {other} (subtrace-size|subtraces|workers|branch-predictor|l2-size|rob-size)"
+        ),
+    }
+    Ok(())
+}

@@ -1,0 +1,217 @@
+//! Latency-predictor abstraction: the green box of paper Figure 1.
+//!
+//! [`LatencyPredictor`] is what the coordinator's simulation loops talk
+//! to; [`MlPredictor`] backs it with the AOT-compiled PJRT model, and
+//! [`TablePredictor`] is a deterministic analytical stand-in used by tests
+//! and benches that must run without artifacts (it also doubles as the
+//! "simple analytical model" baseline in ablation benches).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::features::{self, ContextMode, NUM_FEATURES};
+use crate::runtime::{decode_row, ModelBank, HEAD_OUT};
+
+/// A batched fetch/execution/store latency predictor.
+pub trait LatencyPredictor {
+    /// Instruction slots per encoded input.
+    fn seq_len(&self) -> usize;
+
+    /// Predict latencies for `n` encoded inputs packed in `inputs`
+    /// (`n * seq_len * NUM_FEATURES` floats). Returns one (F, E, S) triple
+    /// per input.
+    fn predict(&mut self, inputs: &[f32], n: usize) -> Result<Vec<(u32, u32, u32)>>;
+
+    /// Total predictions served.
+    fn served(&self) -> u64;
+
+    /// How this predictor expects context instructions to be selected.
+    fn context_mode(&self) -> ContextMode {
+        ContextMode::SimNet
+    }
+}
+
+/// PJRT-backed predictor.
+pub struct MlPredictor {
+    bank: ModelBank,
+    scratch: Vec<f32>,
+}
+
+impl MlPredictor {
+    /// Load `model` from the artifacts directory (weights resolved as in
+    /// [`ModelBank::load`]).
+    pub fn load(artifacts: &Path, model: &str, weights: Option<&Path>) -> Result<Self> {
+        Ok(MlPredictor { bank: ModelBank::load(artifacts, model, weights)?, scratch: Vec::new() })
+    }
+
+    pub fn bank(&self) -> &ModelBank {
+        &self.bank
+    }
+}
+
+impl LatencyPredictor for MlPredictor {
+    fn seq_len(&self) -> usize {
+        self.bank.seq_len()
+    }
+
+    fn predict(&mut self, inputs: &[f32], n: usize) -> Result<Vec<(u32, u32, u32)>> {
+        self.scratch.clear();
+        self.bank.infer_raw(inputs, n, &mut self.scratch)?;
+        let mode = self.bank.mode;
+        Ok(self
+            .scratch
+            .chunks_exact(HEAD_OUT)
+            .take(n)
+            .map(|row| decode_row(row, mode))
+            .collect())
+    }
+
+    fn served(&self) -> u64 {
+        self.bank.inferences
+    }
+
+    fn context_mode(&self) -> ContextMode {
+        if self.bank.model_name().contains("ithemal") {
+            ContextMode::Ithemal
+        } else {
+            ContextMode::SimNet
+        }
+    }
+}
+
+/// Analytical table predictor: derives latencies directly from the encoded
+/// features with the same formulas the DES uses for first-order effects
+/// (cache level -> latency, mispredict -> bubble). Deterministic, fast,
+/// artifact-free. Used by coordinator unit tests and as an ablation
+/// baseline; NOT meant to be accurate on contended scenarios.
+pub struct TablePredictor {
+    seq: usize,
+    served: u64,
+    /// Latency (cycles) per data access level 1..3.
+    pub level_latency: [u32; 3],
+    pub mispredict_bubble: u32,
+}
+
+impl TablePredictor {
+    pub fn new(seq: usize) -> Self {
+        TablePredictor {
+            seq,
+            served: 0,
+            level_latency: [5, 34, 174],
+            mispredict_bubble: 10,
+        }
+    }
+
+    fn predict_one(&self, slot0: &[f32]) -> (u32, u32, u32) {
+        // Decode the features we planted in features::encode_static.
+        let is_load = slot0[features::OP_BASE + 3] > 0.5;
+        let is_store = slot0[features::OP_BASE + 4] > 0.5;
+        let op_lat = (slot0[features::OP_BASE + 2] * 20.0).round() as u32;
+        let mispredict = slot0[features::FETCH_HIST_BASE] > 0.5;
+        let fetch_level = (slot0[features::FETCH_HIST_BASE + 1] * 3.0).round() as u32;
+        let data_level = (slot0[features::DATA_HIST_BASE] * 3.0).round() as u32;
+
+        let mut f = 0u32;
+        if fetch_level > 1 {
+            f += self.level_latency[(fetch_level as usize - 1).min(2)];
+        }
+        if mispredict {
+            f += self.mispredict_bubble;
+        }
+        let mut e = 4 + op_lat; // frontend depth + op latency
+        if is_load && data_level >= 1 {
+            e += self.level_latency[(data_level as usize - 1).min(2)];
+        }
+        let s = if is_store {
+            e + 2 + self.level_latency[(data_level.max(1) as usize - 1).min(2)]
+        } else {
+            0
+        };
+        (f, e, s)
+    }
+}
+
+impl LatencyPredictor for TablePredictor {
+    fn seq_len(&self) -> usize {
+        self.seq
+    }
+
+    fn predict(&mut self, inputs: &[f32], n: usize) -> Result<Vec<(u32, u32, u32)>> {
+        let width = self.seq * NUM_FEATURES;
+        self.served += n as u64;
+        Ok((0..n).map(|i| self.predict_one(&inputs[i * width..i * width + NUM_FEATURES])).collect())
+    }
+
+    fn served(&self) -> u64 {
+        self.served
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::SimConfig;
+    use crate::features::ContextTracker;
+    use crate::history::HistoryInfo;
+    use crate::isa::{Inst, OpClass};
+
+    #[test]
+    fn table_predictor_reflects_levels() {
+        let cfg = SimConfig::default_o3();
+        let tracker = ContextTracker::new(&cfg);
+        let mut p = TablePredictor::new(8);
+        let mut buf = vec![0.0f32; 8 * NUM_FEATURES];
+
+        let ld = Inst { pc: 0x100, op: OpClass::Load, mem_addr: 0x9000, mem_size: 8, ..Default::default() };
+        let h1 = HistoryInfo { fetch_level: 1, data_level: 1, ..Default::default() };
+        tracker.encode_input(&ld, &h1, 8, &mut buf);
+        let (f1, e1, _) = p.predict(&buf, 1).unwrap()[0];
+        let h3 = HistoryInfo { fetch_level: 1, data_level: 3, ..Default::default() };
+        tracker.encode_input(&ld, &h3, 8, &mut buf);
+        let (_, e3, _) = p.predict(&buf, 1).unwrap()[0];
+        assert!(e3 > e1 + 100, "memory-level load must be slower: {e1} vs {e3}");
+        assert_eq!(f1, 0, "warm fetch has no stall");
+        assert_eq!(p.served(), 2);
+    }
+
+    #[test]
+    fn table_predictor_mispredict_bubble() {
+        let cfg = SimConfig::default_o3();
+        let tracker = ContextTracker::new(&cfg);
+        let mut p = TablePredictor::new(4);
+        let mut buf = vec![0.0f32; 4 * NUM_FEATURES];
+        let br = Inst { pc: 0x200, op: OpClass::CondBranch, taken: true, target: 0x300, ..Default::default() };
+        let h = HistoryInfo { mispredict: true, fetch_level: 1, ..Default::default() };
+        tracker.encode_input(&br, &h, 4, &mut buf);
+        let (f, _, _) = p.predict(&buf, 1).unwrap()[0];
+        assert!(f >= 10);
+    }
+
+    #[test]
+    fn table_predictor_batch_matches_single() {
+        let cfg = SimConfig::default_o3();
+        let tracker = ContextTracker::new(&cfg);
+        let mut p = TablePredictor::new(4);
+        let mut one = vec![0.0f32; 4 * NUM_FEATURES];
+        let mut many = vec![0.0f32; 3 * 4 * NUM_FEATURES];
+        let insts: Vec<Inst> = (0..3)
+            .map(|k| Inst {
+                pc: 0x100 + 4 * k,
+                op: if k == 1 { OpClass::Load } else { OpClass::IntAlu },
+                mem_addr: 0x8000,
+                mem_size: 8,
+                ..Default::default()
+            })
+            .collect();
+        let h = HistoryInfo { fetch_level: 1, data_level: 2, ..Default::default() };
+        let mut singles = Vec::new();
+        for (k, i) in insts.iter().enumerate() {
+            tracker.encode_input(i, &h, 4, &mut one);
+            many[k * 4 * NUM_FEATURES..(k + 1) * 4 * NUM_FEATURES].copy_from_slice(&one);
+            singles.push(p.predict(&one, 1).unwrap()[0]);
+        }
+        let batch = p.predict(&many, 3).unwrap();
+        assert_eq!(batch, singles);
+    }
+}

@@ -1,0 +1,200 @@
+//! Figure 5 / 6 / 10 reproductions.
+
+use anyhow::Result;
+
+use crate::des::SimConfig;
+use crate::stats::{cpi_error, mean, render_cpi_series, Table};
+
+use super::table4::ModelMeta;
+use super::{des_trace, pick_benches, PredictorChoice, REFERENCE_SEED};
+
+/// Figure 5: simulated CPI per benchmark, DES vs each predictor.
+pub fn fig5(
+    cfg: &SimConfig,
+    choices: &[PredictorChoice],
+    n: u64,
+    subtrace: usize,
+    benches: Option<&[String]>,
+) -> Result<String> {
+    let mut headers = vec!["benchmark".to_string(), "des_cpi".to_string()];
+    for c in choices {
+        headers.push(format!("{}_cpi", c.label()));
+        headers.push(format!("{}_err", c.label()));
+    }
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hrefs);
+    let mut predictors: Vec<_> = choices.iter().map(|c| c.build()).collect::<Result<_>>()?;
+    let mut worst: Vec<(String, f64)> = vec![(String::new(), 0.0); choices.len()];
+    let mut errs: Vec<Vec<f64>> = vec![Vec::new(); choices.len()];
+
+    for b in pick_benches(benches) {
+        let (recs, des) = des_trace(cfg, &b, n, REFERENCE_SEED);
+        let mut cells = vec![b.name.to_string(), format!("{:.3}", des.cpi())];
+        for (k, p) in predictors.iter_mut().enumerate() {
+            let out = if subtrace == 0 {
+                crate::coordinator::simulate_sequential(&recs, cfg, p.as_mut(), 0)?
+            } else {
+                let subs = (recs.len() / subtrace).max(1);
+                crate::coordinator::simulate_parallel(&recs, cfg, p.as_mut(), subs, 0)?
+            };
+            let err = cpi_error(out.cpi(), des.cpi());
+            errs[k].push(err);
+            if err > worst[k].1 {
+                worst[k] = (b.name.to_string(), err);
+            }
+            cells.push(format!("{:.3}", out.cpi()));
+            cells.push(format!("{:.1}%", err * 100.0));
+        }
+        table.row(cells);
+    }
+    let mut report = String::from("== Figure 5: simulated benchmark CPIs ==\n");
+    report.push_str(&table.render());
+    for (k, c) in choices.iter().enumerate() {
+        let gt10 = errs[k].iter().filter(|&&e| e > 0.10).count();
+        report.push_str(&format!(
+            "{}: avg err {:.1}%, {} / {} benchmarks over 10% (worst: {} {:.1}%)\n",
+            c.label(),
+            mean(&errs[k]) * 100.0,
+            gt10,
+            errs[k].len(),
+            worst[k].0,
+            worst[k].1 * 100.0
+        ));
+    }
+    Ok(report)
+}
+
+/// Figure 6: CPI variation across execution windows, DES vs predictors.
+/// `window` instructions per point (paper: 1M over 100M).
+pub fn fig6(
+    cfg: &SimConfig,
+    choices: &[PredictorChoice],
+    n: u64,
+    window: u64,
+    benches: Option<&[String]>,
+) -> Result<String> {
+    let mut report = String::from("== Figure 6: phase-level CPI curves ==\n");
+    let mut predictors: Vec<_> = choices.iter().map(|c| c.build()).collect::<Result<_>>()?;
+    for b in pick_benches(benches) {
+        let (recs, _) = des_trace(cfg, &b, n, REFERENCE_SEED);
+        // DES window series from the trace's own fetch latencies.
+        let mut des_windows = Vec::new();
+        let mut acc = 0u64;
+        let mut cnt = 0u64;
+        for r in &recs {
+            acc += r.f_lat as u64;
+            cnt += 1;
+            if cnt == window {
+                des_windows.push((cnt, acc));
+                acc = 0;
+                cnt = 0;
+            }
+        }
+        if cnt > 0 {
+            des_windows.push((cnt, acc));
+        }
+        report.push_str(&format!("--- {} ---\n", b.name));
+        report.push_str(&render_cpi_series("des", &des_windows));
+        for (k, p) in predictors.iter_mut().enumerate() {
+            let out = crate::coordinator::simulate_sequential(&recs, cfg, p.as_mut(), window)?;
+            report.push_str(&render_cpi_series(&choices[k].label(), &out.windows));
+            // Max per-window CPI deviation (the dotted error lines).
+            let max_dev = des_windows
+                .iter()
+                .zip(&out.windows)
+                .map(|((dn, dc), (sn, sc))| {
+                    let d = *dc as f64 / (*dn).max(1) as f64;
+                    let s = *sc as f64 / (*sn).max(1) as f64;
+                    (s - d).abs()
+                })
+                .fold(0.0f64, f64::max);
+            report.push_str(&format!("  max |window CPI dev| vs des: {max_dev:.3}\n"));
+        }
+    }
+    Ok(report)
+}
+
+/// Figure 10: overall throughput (training + simulation amortization).
+/// Uses the measured simulation MIPS and the training time recorded in the
+/// model's meta; DES throughput is measured on the spot.
+pub fn fig10(
+    artifacts: &std::path::Path,
+    models: &[String],
+    cfg: &SimConfig,
+    sim_mips: &[(String, f64)],
+    des_mips: f64,
+) -> Result<String> {
+    let mut report = String::from("== Figure 10: overall throughput incl. training ==\n");
+    let mut table = Table::new(&["instructions", "gem5(des)"]);
+    let mut metas = Vec::new();
+    for tag in models {
+        if let Some(meta) = ModelMeta::read(artifacts, tag) {
+            table = Table::new(&[]); // rebuilt below with dynamic headers
+            metas.push(meta);
+        }
+    }
+    let mut headers: Vec<String> = vec!["instructions".into(), "des".into()];
+    for m in &metas {
+        headers.push(m.model.clone());
+    }
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    table = Table::new(&hrefs);
+    for exp in [8u32, 9, 10, 11, 12, 13] {
+        let n = 10f64.powi(exp as i32);
+        let mut cells = vec![format!("1e{exp}"), format!("{:.3} MIPS", des_mips)];
+        for m in &metas {
+            let mips = sim_mips
+                .iter()
+                .find(|(tag, _)| *tag == m.model)
+                .map(|(_, v)| *v)
+                .unwrap_or(0.0);
+            let train_s = m.train_seconds.max(1.0);
+            let overall = n / (train_s + n / (mips * 1e6)) / 1e6;
+            cells.push(format!("{overall:.3} MIPS"));
+        }
+        table.row(cells);
+    }
+    report.push_str(&table.render());
+    report.push_str(&format!(
+        "crossover vs des at N where train_time = N*(1/des - 1/sim); \
+         des={des_mips:.3} MIPS\n"
+    ));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_runs_with_table_predictor() {
+        let cfg = SimConfig::default_o3();
+        let names = vec!["leela".to_string()];
+        let out = fig5(
+            &cfg,
+            &[PredictorChoice::Table { seq: 16 }],
+            2_000,
+            0,
+            Some(&names),
+        )
+        .unwrap();
+        assert!(out.contains("leela"));
+        assert!(out.contains("avg err"));
+    }
+
+    #[test]
+    fn fig6_runs_with_table_predictor() {
+        let cfg = SimConfig::default_o3();
+        let names = vec!["bwaves".to_string()];
+        let out = fig6(
+            &cfg,
+            &[PredictorChoice::Table { seq: 16 }],
+            4_000,
+            1_000,
+            Some(&names),
+        )
+        .unwrap();
+        assert!(out.contains("bwaves"));
+        assert!(out.contains("max |window CPI dev|"));
+    }
+}

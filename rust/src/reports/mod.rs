@@ -1,0 +1,106 @@
+//! Paper-reproduction reports: one entry point per table/figure of the
+//! evaluation section (see DESIGN.md's experiment index). Shared by the
+//! `repro` CLI and the `cargo bench` harnesses.
+
+pub mod attribution;
+pub mod figs;
+pub mod sweeps;
+pub mod table4;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::des::{simulate, DesStats, SimConfig};
+use crate::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
+use crate::trace::TraceRecord;
+use crate::workload::{suite, Benchmark};
+
+/// Which predictor reports should use.
+#[derive(Debug, Clone)]
+pub enum PredictorChoice {
+    /// AOT model from the artifacts directory.
+    Ml { artifacts: PathBuf, model: String, weights: Option<PathBuf> },
+    /// Analytical fallback (runs without artifacts; used by tests).
+    Table { seq: usize },
+}
+
+impl PredictorChoice {
+    pub fn ml(artifacts: &Path, model: &str) -> Self {
+        PredictorChoice::Ml {
+            artifacts: artifacts.to_path_buf(),
+            model: model.to_string(),
+            weights: None,
+        }
+    }
+
+    pub fn build(&self) -> Result<Box<dyn LatencyPredictor>> {
+        Ok(match self {
+            PredictorChoice::Ml { artifacts, model, weights } => {
+                Box::new(MlPredictor::load(artifacts, model, weights.as_deref())?)
+            }
+            PredictorChoice::Table { seq } => Box::new(TablePredictor::new(*seq)),
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PredictorChoice::Ml { model, .. } => model.clone(),
+            PredictorChoice::Table { .. } => "table".into(),
+        }
+    }
+}
+
+/// The "reference workload" input seed used for simulation accuracy runs
+/// (dataset generation uses seed 0 — the "test workload").
+pub const REFERENCE_SEED: u64 = 1;
+
+/// Run the DES over a benchmark and collect (records, stats). This is the
+/// ground-truth generator used throughout the reports; results are
+/// deterministic so no caching subtleties arise.
+pub fn des_trace(cfg: &SimConfig, bench: &Benchmark, n: u64, seed: u64) -> (Vec<TraceRecord>, DesStats) {
+    let wl = bench.workload(seed);
+    let mut recs = Vec::with_capacity(n as usize);
+    let stats = simulate(cfg, wl.stream(), n, |e| recs.push(TraceRecord::from(e)));
+    (recs, stats)
+}
+
+/// All 25 benchmarks, or a filtered subset by names.
+pub fn pick_benches(names: Option<&[String]>) -> Vec<Benchmark> {
+    let all = suite();
+    match names {
+        None => all,
+        Some(ns) => all.into_iter().filter(|b| ns.iter().any(|n| n == b.name)).collect(),
+    }
+}
+
+/// Simulated wattage model for the power-efficiency comparison (§4.2):
+/// the DES runs on a CPU socket; the ML simulator additionally books the
+/// accelerator's TDP. Absolute numbers are a model, ratios are the point.
+pub const CPU_TDP_WATTS: f64 = 225.0;
+pub const ACCEL_TDP_WATTS: f64 = 400.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::find;
+
+    #[test]
+    fn des_trace_deterministic_across_calls() {
+        let cfg = SimConfig::default_o3();
+        let b = find("xz").unwrap();
+        let (r1, s1) = des_trace(&cfg, &b, 3000, 0);
+        let (r2, s2) = des_trace(&cfg, &b, 3000, 0);
+        assert_eq!(s1.cycles, s2.cycles);
+        assert_eq!(r1.len(), r2.len());
+        assert_eq!(r1[100], r2[100]);
+    }
+
+    #[test]
+    fn pick_benches_filters() {
+        let all = pick_benches(None);
+        assert_eq!(all.len(), 25);
+        let some = pick_benches(Some(&["mcf".to_string(), "gcc".to_string()]));
+        assert_eq!(some.len(), 2);
+    }
+}

@@ -1,0 +1,185 @@
+//! Table 4 reproduction: per-model instruction-prediction error (from
+//! training metadata), computation intensity, and benchmark simulation
+//! error against the DES, split into train-set / sim-set / all averages.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::des::SimConfig;
+use crate::stats::{cpi_error, mean, Table};
+
+use super::{des_trace, pick_benches, PredictorChoice, REFERENCE_SEED};
+
+/// Prediction-error metadata recorded by train.py in `<model>.meta`.
+#[derive(Debug, Clone, Default)]
+pub struct ModelMeta {
+    pub model: String,
+    pub mode: String,
+    pub fetch_err: f64,
+    pub exec_err: f64,
+    pub store_err: f64,
+    pub mflops: f64,
+    pub train_seconds: f64,
+}
+
+impl ModelMeta {
+    pub fn read(dir: &Path, tag: &str) -> Option<Self> {
+        let text = std::fs::read_to_string(dir.join(format!("{tag}.meta"))).ok()?;
+        let mut m = ModelMeta { model: tag.to_string(), ..Default::default() };
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            match (it.next(), it.next()) {
+                (Some("mode"), Some(v)) => m.mode = v.to_string(),
+                (Some("fetch_err"), Some(v)) => m.fetch_err = v.parse().unwrap_or(0.0),
+                (Some("exec_err"), Some(v)) => m.exec_err = v.parse().unwrap_or(0.0),
+                (Some("store_err"), Some(v)) => m.store_err = v.parse().unwrap_or(0.0),
+                (Some("mflops"), Some(v)) => m.mflops = v.parse().unwrap_or(0.0),
+                (Some("train_seconds"), Some(v)) => m.train_seconds = v.parse().unwrap_or(0.0),
+                _ => {}
+            }
+        }
+        Some(m)
+    }
+}
+
+/// One model's Table 4 row.
+#[derive(Debug, Clone)]
+pub struct Table4Row {
+    pub meta: ModelMeta,
+    pub train_avg_err: f64,
+    pub sim_avg_err: f64,
+    pub all_avg_err: f64,
+    pub mips: f64,
+}
+
+/// Simulation error of one predictor across the suite. `n` instructions
+/// per benchmark; parallel sub-traces sized `subtrace` (0 = sequential).
+pub fn simulation_errors(
+    cfg: &SimConfig,
+    choice: &PredictorChoice,
+    n: u64,
+    subtrace: usize,
+    benches: Option<&[String]>,
+) -> Result<(Vec<(String, bool, f64, f64, f64)>, f64)> {
+    // returns (bench, is_training, des_cpi, sim_cpi, err), overall mips
+    let mut rows = Vec::new();
+    let mut predictor = choice.build()?;
+    let mut insts = 0u64;
+    let mut wall = 0.0f64;
+    for b in pick_benches(benches) {
+        let (recs, des) = des_trace(cfg, &b, n, REFERENCE_SEED);
+        let out = if subtrace == 0 {
+            crate::coordinator::simulate_sequential(&recs, cfg, predictor.as_mut(), 0)?
+        } else {
+            let subs = (recs.len() / subtrace).max(1);
+            crate::coordinator::simulate_parallel(&recs, cfg, predictor.as_mut(), subs, 0)?
+        };
+        let err = cpi_error(out.cpi(), des.cpi());
+        rows.push((b.name.to_string(), b.training, des.cpi(), out.cpi(), err));
+        insts += out.instructions;
+        wall += out.wall_seconds;
+    }
+    let mips = if wall > 0.0 { insts as f64 / wall / 1e6 } else { 0.0 };
+    Ok((rows, mips))
+}
+
+/// Build Table 4 for every model tag that has both `.meta` and `.export`
+/// in `artifacts` (plus the analytical table baseline for context).
+pub fn run(
+    artifacts: &Path,
+    models: &[String],
+    cfg: &SimConfig,
+    n: u64,
+    subtrace: usize,
+) -> Result<String> {
+    let mut table = Table::new(&[
+        "model", "output", "MFlops", "fetch_err", "exec_err", "store_err", "train_avg",
+        "sim_avg", "all_avg", "MIPS",
+    ]);
+    let mut report = String::from("== Table 4: model accuracy & simulation error ==\n");
+    for tag in models {
+        let Some(meta) = ModelMeta::read(artifacts, tag) else {
+            report.push_str(&format!("(skipping {tag}: no {tag}.meta in artifacts)\n"));
+            continue;
+        };
+        let choice = PredictorChoice::Ml {
+            artifacts: artifacts.to_path_buf(),
+            model: export_name(tag),
+            weights: Some(artifacts.join(format!("{tag}.smw"))),
+        };
+        let (rows, mips) = simulation_errors(cfg, &choice, n, subtrace, None)?;
+        let train: Vec<f64> = rows.iter().filter(|r| r.1).map(|r| r.4).collect();
+        let sim: Vec<f64> = rows.iter().filter(|r| !r.1).map(|r| r.4).collect();
+        let all: Vec<f64> = rows.iter().map(|r| r.4).collect();
+        table.row(vec![
+            tag.clone(),
+            meta.mode.clone(),
+            format!("{:.2}", meta.mflops),
+            format!("{:.1}%", meta.fetch_err * 100.0),
+            format!("{:.1}%", meta.exec_err * 100.0),
+            format!("{:.1}%", meta.store_err * 100.0),
+            format!("{:.1}%", mean(&train) * 100.0),
+            format!("{:.1}%", mean(&sim) * 100.0),
+            format!("{:.1}%", mean(&all) * 100.0),
+            format!("{:.2}", mips),
+        ]);
+    }
+    report.push_str(&table.render());
+    Ok(report)
+}
+
+/// Trained tags may carry suffixes (e.g. `c3_reg`, `c3_big`) while sharing
+/// the exported HLO of their base architecture.
+pub fn export_name(tag: &str) -> String {
+    for base in ["ithemal_lstm2", "lstm2", "fc2", "fc3", "c1", "c3", "rb", "tx2"] {
+        if tag == base || tag.starts_with(&format!("{base}_")) {
+            return base.to_string();
+        }
+    }
+    tag.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn export_name_strips_suffixes() {
+        assert_eq!(export_name("c3"), "c3");
+        assert_eq!(export_name("c3_reg"), "c3");
+        assert_eq!(export_name("ithemal_lstm2"), "ithemal_lstm2");
+        assert_eq!(export_name("lstm2"), "lstm2");
+        assert_eq!(export_name("rb_big"), "rb");
+    }
+
+    #[test]
+    fn simulation_errors_with_table_predictor() {
+        let cfg = SimConfig::default_o3();
+        let choice = PredictorChoice::Table { seq: 16 };
+        let names: Vec<String> = vec!["exchange2".into(), "mcf".into()];
+        let (rows, _mips) =
+            simulation_errors(&cfg, &choice, 3_000, 0, Some(&names)).unwrap();
+        assert_eq!(rows.len(), 2);
+        for (name, _, des_cpi, sim_cpi, err) in rows {
+            assert!(des_cpi > 0.0 && sim_cpi > 0.0, "{name}");
+            assert!(err < 5.0, "{name} err {err} out of sanity band");
+        }
+    }
+
+    #[test]
+    fn meta_read_parses() {
+        let dir = std::env::temp_dir().join("simnet_t4");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("c9.meta"),
+            "model c9\nseq_len 32\nmode hyb\nfetch_err 0.05\nexec_err 0.04\nstore_err 0.01\nmflops 8.1\ntrain_seconds 120\n",
+        )
+        .unwrap();
+        let m = ModelMeta::read(&dir, "c9").unwrap();
+        assert_eq!(m.mode, "hyb");
+        assert!((m.fetch_err - 0.05).abs() < 1e-9);
+        assert!((m.mflops - 8.1).abs() < 1e-9);
+        assert!((m.train_seconds - 120.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,335 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the request path (the `xla` crate over xla_extension 0.5.1).
+//!
+//! Python never runs here: `make artifacts` lowered the JAX/Pallas model to
+//! `artifacts/<model>_b<B>.hlo.txt`, and this module compiles those once
+//! per process and then serves batched inferences from the coordinator's
+//! hot loop.
+//!
+//! Perf-relevant design (see EXPERIMENTS.md §Perf):
+//! * Weights are staged as device-resident `PjRtBuffer`s at load time and
+//!   reused by every call (`execute_b`), so the per-inference host→device
+//!   traffic is the input batch only.
+//! * One executable per batch size (1/8/64/256 by default): batch shapes
+//!   are static under PJRT, so the bank picks the best-fitting executable
+//!   and pads, instead of recompiling.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::TensorFile;
+
+/// Output width of the hybrid head: 3 latency types x (10 classes + 1
+/// regression). Mirror of python/compile/model.py.
+pub const HEAD_OUT: usize = 33;
+/// Classes per latency type (cycles 0..8 + ">8").
+pub const NUM_CLASSES: usize = 10;
+
+/// Parsed `<model>.export` manifest written by `python -m compile.aot`.
+#[derive(Debug, Clone)]
+pub struct ExportManifest {
+    pub model: String,
+    pub seq_len: usize,
+    pub batches: Vec<usize>,
+    pub weights: Vec<String>,
+}
+
+impl ExportManifest {
+    pub fn read(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let mut model = String::new();
+        let mut seq_len = 0usize;
+        let mut batches = Vec::new();
+        let mut weights = Vec::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("model") => model = it.next().unwrap_or("").to_string(),
+                Some("seq_len") => seq_len = it.next().unwrap_or("0").parse()?,
+                Some("batches") => batches = it.map(|b| b.parse().unwrap_or(0)).collect(),
+                Some("weights") => weights = it.map(|s| s.to_string()).collect(),
+                _ => {}
+            }
+        }
+        if model.is_empty() || seq_len == 0 || batches.is_empty() {
+            bail!("malformed manifest {}", path.display());
+        }
+        Ok(ExportManifest { model, seq_len, batches, weights })
+    }
+}
+
+/// Decode mode of a trained model (from `<model>.meta`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutputMode {
+    /// Hybrid classification + regression (paper's "hyb").
+    Hybrid,
+    /// Regression heads only (paper's "reg").
+    Regression,
+}
+
+/// One compiled executable at a fixed batch size.
+struct BatchExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+}
+
+/// A loaded model: PJRT client + per-batch-size executables + weights
+/// staged on device.
+pub struct ModelBank {
+    client: xla::PjRtClient,
+    manifest: ExportManifest,
+    exes: Vec<BatchExecutable>,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    pub mode: OutputMode,
+    /// Cumulative inferences served (for throughput reports).
+    pub inferences: u64,
+    /// Cumulative execute calls (batches) served.
+    pub calls: u64,
+}
+
+impl ModelBank {
+    /// Load `model` from `dir`: manifest + HLO artifacts + weights.
+    /// `weights_file`: explicit `.smw`; defaults to `<model>.smw` if
+    /// present, else `<model>.init.smw`.
+    pub fn load(dir: &Path, model: &str, weights_file: Option<&Path>) -> Result<Self> {
+        let manifest = ExportManifest::read(&dir.join(format!("{model}.export")))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+
+        let weights_path: PathBuf = match weights_file {
+            Some(p) => p.to_path_buf(),
+            None => {
+                let trained = dir.join(format!("{model}.smw"));
+                if trained.exists() {
+                    trained
+                } else {
+                    dir.join(format!("{model}.init.smw"))
+                }
+            }
+        };
+        let tensors = TensorFile::read(&weights_path)
+            .with_context(|| format!("reading weights {}", weights_path.display()))?;
+        if tensors.tensors.len() != manifest.weights.len() {
+            bail!(
+                "weight count mismatch: {} in {}, manifest expects {}",
+                tensors.tensors.len(),
+                weights_path.display(),
+                manifest.weights.len()
+            );
+        }
+        let mut weight_bufs = Vec::with_capacity(tensors.tensors.len());
+        for (t, expect) in tensors.tensors.iter().zip(&manifest.weights) {
+            if &t.name != expect {
+                bail!("weight order mismatch: got {}, expected {}", t.name, expect);
+            }
+            let buf = client
+                .buffer_from_host_buffer::<f32>(&t.data, &t.dims, None)
+                .map_err(|e| anyhow!("staging weight {}: {e:?}", t.name))?;
+            weight_bufs.push(buf);
+        }
+
+        let mut exes = Vec::new();
+        for &b in &manifest.batches {
+            let path = dir.join(format!("{model}_b{b}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling b={b}: {e:?}"))?;
+            exes.push(BatchExecutable { exe, batch: b });
+        }
+        exes.sort_by_key(|e| e.batch);
+
+        let mode = read_mode(dir, model).unwrap_or(OutputMode::Hybrid);
+        Ok(ModelBank { client, manifest, exes, weight_bufs, mode, inferences: 0, calls: 0 })
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.manifest.seq_len
+    }
+
+    /// Architecture name from the export manifest.
+    pub fn model_name(&self) -> &str {
+        &self.manifest.model
+    }
+
+    /// Input floats per encoded instruction sequence.
+    pub fn input_width(&self) -> usize {
+        self.manifest.seq_len * crate::features::NUM_FEATURES
+    }
+
+    /// Largest compiled batch size.
+    pub fn max_batch(&self) -> usize {
+        self.exes.last().map(|e| e.batch).unwrap_or(1)
+    }
+
+    /// Run the model over `n` encoded inputs packed in `inputs` (length >=
+    /// n * input_width); appends `n` rows of `HEAD_OUT` floats to `out`.
+    /// Chunks and pads to the compiled batch sizes.
+    pub fn infer_raw(&mut self, inputs: &[f32], n: usize, out: &mut Vec<f32>) -> Result<()> {
+        let width = self.input_width();
+        debug_assert!(inputs.len() >= n * width);
+        let mut done = 0;
+        while done < n {
+            let remaining = n - done;
+            // Smallest compiled batch that fits, else the largest.
+            let idx = self
+                .exes
+                .iter()
+                .position(|e| e.batch >= remaining)
+                .unwrap_or(self.exes.len() - 1);
+            let b = self.exes[idx].batch;
+            let take = remaining.min(b);
+            let chunk = &inputs[done * width..(done + take) * width];
+            let rows = self.execute_chunk(idx, chunk, take, b)?;
+            out.extend_from_slice(&rows);
+            done += take;
+            self.calls += 1;
+        }
+        self.inferences += n as u64;
+        Ok(())
+    }
+
+    fn execute_chunk(
+        &self,
+        exe_idx: usize,
+        chunk: &[f32],
+        take: usize,
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        let seq = self.manifest.seq_len;
+        let nfeat = crate::features::NUM_FEATURES;
+        // Pad the batch dimension if needed.
+        let padded;
+        let data: &[f32] = if take == batch {
+            chunk
+        } else {
+            let mut v = vec![0.0f32; batch * seq * nfeat];
+            v[..chunk.len()].copy_from_slice(chunk);
+            padded = v;
+            &padded
+        };
+        let input = self
+            .client
+            .buffer_from_host_buffer::<f32>(data, &[batch, seq, nfeat], None)
+            .map_err(|e| anyhow!("staging input: {e:?}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&input);
+        let result =
+            self.exes[exe_idx].exe.execute_b(&args).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let vals = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(vals[..take * HEAD_OUT].to_vec())
+    }
+}
+
+/// Read the decode mode from `<model>.meta` (written by train.py).
+fn read_mode(dir: &Path, model: &str) -> Option<OutputMode> {
+    let text = std::fs::read_to_string(dir.join(format!("{model}.meta"))).ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("mode ") {
+            return Some(if rest.trim() == "reg" {
+                OutputMode::Regression
+            } else {
+                OutputMode::Hybrid
+            });
+        }
+    }
+    None
+}
+
+/// Decode one `HEAD_OUT`-float row to (fetch, exec, store) latencies using
+/// the hybrid rule (paper §2.3) — identical to python `decode_latency`.
+pub fn decode_row(row: &[f32], mode: OutputMode) -> (u32, u32, u32) {
+    let mut lats = [0u32; 3];
+    for (t, lat) in lats.iter_mut().enumerate() {
+        let base = t * (NUM_CLASSES + 1);
+        let reg = (row[base + NUM_CLASSES] * crate::features::LAT_SCALE).max(0.0);
+        *lat = match mode {
+            OutputMode::Regression => reg.round() as u32,
+            OutputMode::Hybrid => {
+                let logits = &row[base..base + NUM_CLASSES];
+                let cls = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                if cls < NUM_CLASSES - 1 {
+                    cls as u32
+                } else {
+                    (reg.round() as u32).max((NUM_CLASSES - 1) as u32)
+                }
+            }
+        };
+    }
+    (lats[0], lats[1], lats[2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_hybrid_picks_class() {
+        let mut row = vec![0.0f32; HEAD_OUT];
+        row[3] = 5.0; // F class 3
+        row[11 + 9] = 5.0; // E ">8"
+        row[11 + 10] = 100.0 / crate::features::LAT_SCALE; // E regression
+        row[22] = 5.0; // S class 0
+        let (f, e, s) = decode_row(&row, OutputMode::Hybrid);
+        assert_eq!(f, 3);
+        assert_eq!(e, 100);
+        assert_eq!(s, 0);
+    }
+
+    #[test]
+    fn decode_regression_ignores_classes() {
+        let mut row = vec![0.0f32; HEAD_OUT];
+        row[0] = 99.0; // class logits ignored in reg mode
+        row[10] = 2.0 / crate::features::LAT_SCALE;
+        row[21] = 7.4 / crate::features::LAT_SCALE;
+        row[32] = 0.0;
+        let (f, e, s) = decode_row(&row, OutputMode::Regression);
+        assert_eq!(f, 2);
+        assert_eq!(e, 7);
+        assert_eq!(s, 0);
+    }
+
+    #[test]
+    fn decode_hybrid_overflow_class_floors_at_9() {
+        let mut row = vec![0.0f32; HEAD_OUT];
+        row[9] = 5.0; // ">8" class wins
+        row[10] = 0.0; // regression says 0 — decode must still be >= 9
+        let (f, _, _) = decode_row(&row, OutputMode::Hybrid);
+        assert_eq!(f, 9);
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("simnet_runtime_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.export");
+        std::fs::write(&p, "model c3\nseq_len 32\nbatches 1 8 64\nweights a b c\n").unwrap();
+        let m = ExportManifest::read(&p).unwrap();
+        assert_eq!(m.model, "c3");
+        assert_eq!(m.seq_len, 32);
+        assert_eq!(m.batches, vec![1, 8, 64]);
+        assert_eq!(m.weights, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        let dir = std::env::temp_dir().join("simnet_runtime_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.export");
+        std::fs::write(&p, "hello world\n").unwrap();
+        assert!(ExportManifest::read(&p).is_err());
+    }
+}

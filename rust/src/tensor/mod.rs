@@ -1,0 +1,171 @@
+//! `.smw` — the weight-tensor container shared between the python training
+//! side (which writes it) and the rust runtime (which reads it and feeds
+//! the tensors to the AOT-compiled model as runtime arguments).
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "SMW1"
+//! u32   tensor count
+//! per tensor:
+//!   u16  name length, name bytes (utf-8)
+//!   u32  ndim, u32 dims[ndim]
+//!   f32  data[prod(dims)]
+//! ```
+//! Keeping weights *outside* the HLO (as executable arguments rather than
+//! baked constants) means retraining — e.g. for the §5 ROB study — needs
+//! no re-export or re-compile of the model artifact.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SMW1";
+
+/// A named f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(name: impl Into<String>, dims: Vec<usize>, data: Vec<f32>) -> Self {
+        let t = Tensor { name: name.into(), dims, data };
+        assert_eq!(t.len(), t.data.len(), "tensor {} dims/data mismatch", t.name);
+        t
+    }
+
+    /// Element count implied by dims.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// An ordered collection of named tensors (order = python export order =
+/// the argument order of the AOT executable after the input batch).
+#[derive(Debug, Clone, Default)]
+pub struct TensorFile {
+    pub tensors: Vec<Tensor>,
+}
+
+impl TensorFile {
+    /// Look up a tensor by name.
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    /// Group tensor names -> dims, for diagnostics.
+    pub fn summary(&self) -> BTreeMap<String, Vec<usize>> {
+        self.tensors.iter().map(|t| (t.name.clone(), t.dims.clone())).collect()
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn write(&self, path: &Path) -> io::Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for t in &self.tensors {
+            let name = t.name.as_bytes();
+            w.write_all(&(name.len() as u16).to_le_bytes())?;
+            w.write_all(name)?;
+            w.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+            for &d in &t.dims {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &v in &t.data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        w.flush()
+    }
+
+    pub fn read(path: &Path) -> io::Result<Self> {
+        let mut r = BufReader::new(File::open(path)?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "not an .smw file"));
+        }
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let count = u32::from_le_bytes(b4);
+        let mut tensors = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            let mut b2 = [0u8; 2];
+            r.read_exact(&mut b2)?;
+            let name_len = u16::from_le_bytes(b2) as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)
+                .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+            r.read_exact(&mut b4)?;
+            let ndim = u32::from_le_bytes(b4) as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                r.read_exact(&mut b4)?;
+                dims.push(u32::from_le_bytes(b4) as usize);
+            }
+            let n: usize = dims.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            r.read_exact(&mut bytes)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.push(Tensor { name, dims, data });
+        }
+        Ok(TensorFile { tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("simnet_tensor_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let tf = TensorFile {
+            tensors: vec![
+                Tensor::new("conv0/w", vec![2, 50, 64], (0..6400).map(|i| i as f32).collect()),
+                Tensor::new("conv0/b", vec![64], vec![0.5; 64]),
+                Tensor::new("fc/w", vec![8, 3], (0..24).map(|i| -(i as f32)).collect()),
+            ],
+        };
+        let path = tmp("rt.smw");
+        tf.write(&path).unwrap();
+        let back = TensorFile::read(&path).unwrap();
+        assert_eq!(back.tensors, tf.tensors);
+        assert_eq!(back.param_count(), 6400 + 64 + 24);
+        assert_eq!(back.get("conv0/b").unwrap().dims, vec![64]);
+        assert!(back.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("bad.smw");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(TensorFile::read(&path).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn dims_data_mismatch_panics() {
+        Tensor::new("x", vec![2, 2], vec![1.0; 3]);
+    }
+}

@@ -1,0 +1,459 @@
+//! Binary interchange formats.
+//!
+//! * `.smt` — instruction traces: one fixed-size record per retired
+//!   instruction (static properties + history-context results + the three
+//!   ground-truth latencies). Produced by the DES (`repro gen-trace`),
+//!   consumed by the ML simulator and by dataset building. This plays the
+//!   role of the paper's modified-gem5 trace dump (§2.4).
+//! * `.smd` — ML datasets: flattened (features, labels) sample tensors
+//!   ready for training. Produced by `repro build-dataset` using the exact
+//!   same [`crate::features::ContextTracker`] the simulator uses online;
+//!   consumed by `python/compile/train.py`.
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::des::ExecutedInst;
+use crate::features::{ContextMode, ContextTracker, NUM_FEATURES};
+use crate::history::HistoryInfo;
+use crate::isa::{Inst, OpClass, MAX_DST_REGS, MAX_SRC_REGS};
+
+/// Size in bytes of one on-disk trace record.
+pub const RECORD_SIZE: usize = 64;
+
+const SMT_MAGIC: &[u8; 4] = b"SMT1";
+const SMD_MAGIC: &[u8; 4] = b"SMD1";
+
+/// One trace record (flattened [`ExecutedInst`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    pub inst: Inst,
+    pub hist: HistoryInfo,
+    pub f_lat: u32,
+    pub e_lat: u32,
+    pub s_lat: u32,
+}
+
+impl From<&ExecutedInst> for TraceRecord {
+    fn from(e: &ExecutedInst) -> Self {
+        TraceRecord { inst: e.inst, hist: e.hist, f_lat: e.f_lat, e_lat: e.e_lat, s_lat: e.s_lat }
+    }
+}
+
+fn pack_bools(bits: &[bool]) -> u8 {
+    bits.iter().enumerate().fold(0u8, |acc, (i, &b)| acc | ((b as u8) << i))
+}
+
+fn unpack_bool<const N: usize>(byte: u8) -> [bool; N] {
+    let mut out = [false; N];
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = (byte >> i) & 1 == 1;
+    }
+    out
+}
+
+impl TraceRecord {
+    /// Serialize into a fixed [`RECORD_SIZE`]-byte buffer.
+    pub fn encode(&self, buf: &mut [u8; RECORD_SIZE]) {
+        buf.fill(0);
+        buf[0..8].copy_from_slice(&self.inst.pc.to_le_bytes());
+        buf[8] = self.inst.op.code();
+        for (k, &r) in self.inst.srcs.iter().enumerate() {
+            buf[9 + k] = r as u8;
+        }
+        for (k, &r) in self.inst.dsts.iter().enumerate() {
+            buf[17 + k] = r as u8;
+        }
+        buf[23..31].copy_from_slice(&self.inst.mem_addr.to_le_bytes());
+        buf[31] = self.inst.mem_size;
+        buf[32..40].copy_from_slice(&self.inst.target.to_le_bytes());
+        buf[40] = self.inst.taken as u8;
+        buf[41] = self.hist.mispredict as u8;
+        buf[42] = self.hist.fetch_level;
+        buf[43] = pack_bools(&self.hist.fetch_walk);
+        buf[44] = pack_bools(&self.hist.fetch_wb);
+        buf[45] = self.hist.data_level;
+        buf[46] = pack_bools(&self.hist.data_walk);
+        buf[47] = pack_bools(&self.hist.data_wb);
+        buf[48..52].copy_from_slice(&self.f_lat.to_le_bytes());
+        buf[52..56].copy_from_slice(&self.e_lat.to_le_bytes());
+        buf[56..60].copy_from_slice(&self.s_lat.to_le_bytes());
+    }
+
+    /// Deserialize from a [`RECORD_SIZE`]-byte buffer.
+    pub fn decode(buf: &[u8; RECORD_SIZE]) -> Self {
+        let mut inst = Inst {
+            pc: u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+            op: OpClass::from_code(buf[8]),
+            mem_addr: u64::from_le_bytes(buf[23..31].try_into().unwrap()),
+            mem_size: buf[31],
+            target: u64::from_le_bytes(buf[32..40].try_into().unwrap()),
+            taken: buf[40] != 0,
+            ..Default::default()
+        };
+        for k in 0..MAX_SRC_REGS {
+            inst.srcs[k] = buf[9 + k] as i8;
+        }
+        for k in 0..MAX_DST_REGS {
+            inst.dsts[k] = buf[17 + k] as i8;
+        }
+        let hist = HistoryInfo {
+            mispredict: buf[41] != 0,
+            fetch_level: buf[42],
+            fetch_walk: unpack_bool::<3>(buf[43]),
+            fetch_wb: unpack_bool::<2>(buf[44]),
+            data_level: buf[45],
+            data_walk: unpack_bool::<3>(buf[46]),
+            data_wb: unpack_bool::<3>(buf[47]),
+        };
+        TraceRecord {
+            inst,
+            hist,
+            f_lat: u32::from_le_bytes(buf[48..52].try_into().unwrap()),
+            e_lat: u32::from_le_bytes(buf[52..56].try_into().unwrap()),
+            s_lat: u32::from_le_bytes(buf[56..60].try_into().unwrap()),
+        }
+    }
+}
+
+/// Streaming `.smt` writer.
+pub struct TraceWriter {
+    w: BufWriter<File>,
+    count: u64,
+}
+
+impl TraceWriter {
+    pub fn create(path: &Path) -> io::Result<Self> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(SMT_MAGIC)?;
+        w.write_all(&0u64.to_le_bytes())?; // count back-patched on finish
+        Ok(TraceWriter { w, count: 0 })
+    }
+
+    pub fn write(&mut self, rec: &TraceRecord) -> io::Result<()> {
+        let mut buf = [0u8; RECORD_SIZE];
+        rec.encode(&mut buf);
+        self.w.write_all(&buf)?;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Flush and back-patch the record count.
+    pub fn finish(mut self) -> io::Result<u64> {
+        use std::io::Seek;
+        self.w.flush()?;
+        let mut f = self.w.into_inner()?;
+        f.seek(io::SeekFrom::Start(4))?;
+        f.write_all(&self.count.to_le_bytes())?;
+        Ok(self.count)
+    }
+}
+
+/// Streaming `.smt` reader.
+pub struct TraceReader {
+    r: BufReader<File>,
+    remaining: u64,
+    /// Total records in the file.
+    pub count: u64,
+}
+
+impl TraceReader {
+    pub fn open(path: &Path) -> io::Result<Self> {
+        let mut r = BufReader::new(File::open(path)?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != SMT_MAGIC {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "not an .smt trace"));
+        }
+        let mut cnt = [0u8; 8];
+        r.read_exact(&mut cnt)?;
+        let count = u64::from_le_bytes(cnt);
+        Ok(TraceReader { r, remaining: count, count })
+    }
+}
+
+impl Iterator for TraceReader {
+    type Item = io::Result<TraceRecord>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let mut buf = [0u8; RECORD_SIZE];
+        match self.r.read_exact(&mut buf) {
+            Ok(()) => Some(Ok(TraceRecord::decode(&buf))),
+            Err(e) => {
+                self.remaining = 0;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+/// Read a whole trace into memory.
+pub fn read_trace(path: &Path) -> io::Result<Vec<TraceRecord>> {
+    TraceReader::open(path)?.collect()
+}
+
+// ---------------------------------------------------------------------
+// Dataset building (.smd)
+// ---------------------------------------------------------------------
+
+/// Options for converting a trace into an ML dataset.
+pub struct DatasetOptions {
+    /// Instruction slots per sample (1 current + context; power of two).
+    pub seq_len: usize,
+    /// Drop duplicate samples (paper §2.4 "we eliminate such duplication").
+    pub dedup: bool,
+    /// Keep at most this many samples (0 = unlimited).
+    pub limit: u64,
+    /// Context-selection mode (SimNet vs Ithemal baseline).
+    pub mode: ContextMode,
+    /// Configuration feature broadcast into every slot (ROB study; 0 off).
+    pub cfg_feature: f32,
+}
+
+impl Default for DatasetOptions {
+    fn default() -> Self {
+        DatasetOptions { seq_len: 64, dedup: true, limit: 0, mode: ContextMode::SimNet, cfg_feature: 0.0 }
+    }
+}
+
+/// Streaming `.smd` writer (header + raw little-endian f32 samples).
+pub struct DatasetWriter {
+    w: BufWriter<File>,
+    seq_len: u32,
+    nfeat: u32,
+    count: u64,
+}
+
+impl DatasetWriter {
+    pub fn create(path: &Path, seq_len: usize) -> io::Result<Self> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(SMD_MAGIC)?;
+        w.write_all(&(seq_len as u32).to_le_bytes())?;
+        w.write_all(&(NUM_FEATURES as u32).to_le_bytes())?;
+        w.write_all(&0u64.to_le_bytes())?;
+        Ok(DatasetWriter { w, seq_len: seq_len as u32, nfeat: NUM_FEATURES as u32, count: 0 })
+    }
+
+    /// Write one sample: `features` of length `seq_len * NUM_FEATURES` and
+    /// the three raw-cycle labels (F, E, S).
+    pub fn write(&mut self, features: &[f32], labels: [f32; 3]) -> io::Result<()> {
+        debug_assert_eq!(features.len(), (self.seq_len * self.nfeat) as usize);
+        // Safety-free raw serialization: f32 -> LE bytes.
+        let mut bytes = Vec::with_capacity(features.len() * 4 + 12);
+        for &v in features {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for &l in &labels {
+            bytes.extend_from_slice(&l.to_le_bytes());
+        }
+        self.w.write_all(&bytes)?;
+        self.count += 1;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> io::Result<u64> {
+        use std::io::Seek;
+        self.w.flush()?;
+        let mut f = self.w.into_inner()?;
+        f.seek(io::SeekFrom::Start(12))?;
+        f.write_all(&self.count.to_le_bytes())?;
+        Ok(self.count)
+    }
+
+    /// Samples written so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// FNV-1a over the raw bytes of a sample, for dedup.
+fn sample_hash(features: &[f32], labels: &[f32; 3]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |v: f32| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    features.iter().for_each(|&v| eat(v));
+    labels.iter().for_each(|&v| eat(v));
+    h
+}
+
+/// Append samples from `records` into an open writer (shared dedup set).
+/// Used directly by mixed-configuration dataset builds (ROB study).
+pub fn append_dataset<'a, I>(
+    records: I,
+    cfg: &crate::des::SimConfig,
+    opts: &DatasetOptions,
+    writer: &mut DatasetWriter,
+    seen: &mut std::collections::HashSet<u64>,
+) -> io::Result<u64>
+where
+    I: Iterator<Item = &'a TraceRecord>,
+{
+    let mut tracker = ContextTracker::with_mode(cfg, opts.mode);
+    tracker.cfg_feature = opts.cfg_feature;
+    let mut buf = vec![0.0f32; opts.seq_len * NUM_FEATURES];
+    let mut dups = 0u64;
+    for rec in records {
+        if opts.limit > 0 && writer.count >= opts.limit {
+            break;
+        }
+        tracker.encode_input(&rec.inst, &rec.hist, opts.seq_len, &mut buf);
+        let labels = [rec.f_lat as f32, rec.e_lat as f32, rec.s_lat as f32];
+        if !opts.dedup || seen.insert(sample_hash(&buf, &labels)) {
+            writer.write(&buf, labels)?;
+        } else {
+            dups += 1;
+        }
+        tracker.push(&rec.inst, &rec.hist, rec.f_lat, rec.e_lat, rec.s_lat);
+    }
+    Ok(dups)
+}
+
+/// Build an `.smd` dataset from trace records: replays the context tracker
+/// with ground-truth latencies and emits one sample per instruction.
+/// Returns (written, deduplicated-away).
+pub fn build_dataset<'a, I>(
+    records: I,
+    cfg: &crate::des::SimConfig,
+    opts: &DatasetOptions,
+    out: &Path,
+) -> io::Result<(u64, u64)>
+where
+    I: Iterator<Item = &'a TraceRecord>,
+{
+    let mut writer = DatasetWriter::create(out, opts.seq_len)?;
+    let mut seen = std::collections::HashSet::new();
+    let dups = append_dataset(records, cfg, opts, &mut writer, &mut seen)?;
+    let written = writer.finish()?;
+    Ok((written, dups))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::{simulate, SimConfig};
+    use crate::workload::find;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("simnet_trace_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        let mut rec = TraceRecord {
+            inst: Inst {
+                pc: 0xDEAD_BEE0,
+                op: OpClass::Store,
+                mem_addr: 0x1234_5678,
+                mem_size: 8,
+                target: 0,
+                taken: false,
+                ..Default::default()
+            },
+            hist: HistoryInfo {
+                mispredict: true,
+                fetch_level: 2,
+                fetch_walk: [true, false, true],
+                fetch_wb: [false, true],
+                data_level: 3,
+                data_walk: [false, false, true],
+                data_wb: [true, false, false],
+            },
+            f_lat: 7,
+            e_lat: 312,
+            s_lat: 901,
+        };
+        rec.inst.srcs[0] = 5;
+        rec.inst.srcs[1] = -1;
+        rec.inst.dsts[0] = 63;
+        let mut buf = [0u8; RECORD_SIZE];
+        rec.encode(&mut buf);
+        let back = TraceRecord::decode(&buf);
+        assert_eq!(rec, back);
+    }
+
+    #[test]
+    fn trace_file_roundtrip() {
+        let path = tmp("roundtrip.smt");
+        let cfg = SimConfig::default_o3();
+        let b = find("namd").unwrap();
+        let mut written = Vec::new();
+        let mut w = TraceWriter::create(&path).unwrap();
+        simulate(&cfg, b.workload(0).stream(), 2000, |e| {
+            let rec = TraceRecord::from(e);
+            w.write(&rec).unwrap();
+            written.push(rec);
+        });
+        let n = w.finish().unwrap();
+        assert_eq!(n, 2000);
+        let back = read_trace(&path).unwrap();
+        assert_eq!(back.len(), 2000);
+        assert_eq!(&back[..], &written[..]);
+    }
+
+    #[test]
+    fn dataset_builds_and_dedups() {
+        let trace_path = tmp("ds.smt");
+        let ds_path = tmp("ds.smd");
+        let cfg = SimConfig::default_o3();
+        let b = find("exchange2").unwrap();
+        let mut w = TraceWriter::create(&trace_path).unwrap();
+        simulate(&cfg, b.workload(0).stream(), 5000, |e| {
+            w.write(&TraceRecord::from(e)).unwrap();
+        });
+        w.finish().unwrap();
+        let recs = read_trace(&trace_path).unwrap();
+        let (written, dups) = build_dataset(
+            recs.iter(),
+            &cfg,
+            &DatasetOptions { seq_len: 16, dedup: true, limit: 0, mode: ContextMode::SimNet, cfg_feature: 0.0 },
+            &ds_path,
+        )
+        .unwrap();
+        assert_eq!(written + dups, 5000);
+        assert!(dups > 0, "a loopy benchmark must produce duplicate samples");
+        // Check the .smd header.
+        let bytes = std::fs::read(&ds_path).unwrap();
+        assert_eq!(&bytes[0..4], SMD_MAGIC);
+        let seq = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        let nf = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        let n = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+        assert_eq!(seq, 16);
+        assert_eq!(nf, NUM_FEATURES as u32);
+        assert_eq!(n, written);
+        let expect = 20 + n as usize * (16 * NUM_FEATURES + 3) * 4;
+        assert_eq!(bytes.len(), expect);
+    }
+
+    #[test]
+    fn dataset_limit_respected() {
+        let trace_path = tmp("lim.smt");
+        let ds_path = tmp("lim.smd");
+        let cfg = SimConfig::default_o3();
+        let b = find("leela").unwrap();
+        let mut w = TraceWriter::create(&trace_path).unwrap();
+        simulate(&cfg, b.workload(0).stream(), 3000, |e| {
+            w.write(&TraceRecord::from(e)).unwrap();
+        });
+        w.finish().unwrap();
+        let recs = read_trace(&trace_path).unwrap();
+        let (written, _) = build_dataset(
+            recs.iter(),
+            &cfg,
+            &DatasetOptions { seq_len: 8, dedup: false, limit: 100, mode: ContextMode::SimNet, cfg_feature: 0.0 },
+            &ds_path,
+        )
+        .unwrap();
+        assert_eq!(written, 100);
+    }
+}

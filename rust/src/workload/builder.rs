@@ -1,0 +1,413 @@
+//! Build a random static [`Program`] from a workload [`Personality`].
+
+use super::program::*;
+use super::rng::Rng;
+use crate::isa::{OpClass, RegId, MAX_DST_REGS, MAX_SRC_REGS, REG_NONE};
+
+/// Knobs describing the *character* of a synthetic benchmark. Each SPEC-like
+/// workload in [`super::suite`] is one of these. The values are chosen per
+/// benchmark to mimic the published behaviour classes (memory-bound,
+/// branchy, fp-heavy, phased, ...) rather than any proprietary trace.
+#[derive(Debug, Clone)]
+pub struct Personality {
+    /// Fraction of non-memory, non-branch ops that are FP.
+    pub fp_frac: f64,
+    /// Fraction of non-memory, non-branch ops that are SIMD.
+    pub simd_frac: f64,
+    /// Among int/fp compute ops, fraction that are multiplies.
+    pub mul_frac: f64,
+    /// Among int/fp compute ops, fraction that are divides/sqrts.
+    pub div_frac: f64,
+    /// Fraction of instructions that are loads.
+    pub load_frac: f64,
+    /// Fraction of instructions that are stores.
+    pub store_frac: f64,
+    /// Fraction of memory ops that stream with a regular stride.
+    pub stride_frac: f64,
+    /// Fraction of memory ops that pointer-chase (dependent, cache-hostile).
+    pub chase_frac: f64,
+    /// Remaining memory ops are uniform-random in their region.
+    /// Region sizes (bytes): hot (L1-resident), warm (L2-resident), cold.
+    pub hot_bytes: u64,
+    pub warm_bytes: u64,
+    pub cold_bytes: u64,
+    /// Probability a memory op targets [hot, warm] (else cold).
+    pub hot_p: f64,
+    pub warm_p: f64,
+    /// Mean basic-block length (instructions before the terminator).
+    pub block_len: f64,
+    /// Probability a conditional branch is data-dependent (Bernoulli) as
+    /// opposed to a loop back-edge or a repeating pattern.
+    pub bernoulli_frac: f64,
+    /// Taken-probability used for data-dependent branches (0.5 = hardest).
+    pub bernoulli_p: f64,
+    /// Mean loop trip count for back-edges.
+    pub loop_iters: f64,
+    /// Fraction of block terminators that are indirect branches.
+    pub indirect_frac: f64,
+    /// Fraction of block terminators that are calls.
+    pub call_frac: f64,
+    /// Per-instruction probability of a memory barrier.
+    pub barrier_frac: f64,
+    /// Per-instruction probability of a serializing op.
+    pub serialize_frac: f64,
+    /// Number of functions to generate.
+    pub num_funcs: usize,
+    /// Blocks per function (mean).
+    pub blocks_per_func: f64,
+}
+
+impl Default for Personality {
+    fn default() -> Self {
+        Personality {
+            fp_frac: 0.2,
+            simd_frac: 0.1,
+            mul_frac: 0.15,
+            div_frac: 0.02,
+            load_frac: 0.25,
+            store_frac: 0.10,
+            stride_frac: 0.5,
+            chase_frac: 0.2,
+            hot_bytes: 16 << 10,
+            warm_bytes: 256 << 10,
+            cold_bytes: 64 << 20,
+            hot_p: 0.6,
+            warm_p: 0.3,
+            block_len: 6.0,
+            bernoulli_frac: 0.3,
+            bernoulli_p: 0.1,
+            loop_iters: 12.0,
+            indirect_frac: 0.04,
+            call_frac: 0.08,
+            barrier_frac: 0.002,
+            serialize_frac: 0.0005,
+            num_funcs: 8,
+            blocks_per_func: 10.0,
+        }
+    }
+}
+
+/// Data-region base addresses. Code lives at CODE_BASE; each region is
+/// page-aligned and disjoint so TLB behaviour differs per region.
+const CODE_BASE: u64 = 0x0040_0000;
+const STACK_BASE: u64 = 0x7FFF_0000;
+const HOT_BASE: u64 = 0x1000_0000;
+const WARM_BASE: u64 = 0x2000_0000;
+const COLD_BASE: u64 = 0x4000_0000;
+
+/// Deterministically build a program from a personality and seed.
+pub fn build_program(p: &Personality, seed: u64) -> Program {
+    let mut rng = Rng::new(seed);
+    let mut funcs = Vec::with_capacity(p.num_funcs);
+    let mut next_pc = CODE_BASE;
+
+    let nfuncs = p.num_funcs.max(2);
+    // Function 0 is the driver: it calls every other function inside small
+    // loops, like a benchmark's main loop. This guarantees each program
+    // iteration exercises the whole static footprint instead of whatever
+    // short path a random entry function happens to take to its Ret.
+    {
+        let mut blocks = Vec::new();
+        for callee in 1..nfuncs {
+            let call_block_idx = blocks.len();
+            let mut insts = Vec::new();
+            for _ in 0..rng.geometric(p.block_len).clamp(2, 16) {
+                insts.push(gen_inst(p, &mut rng));
+            }
+            blocks.push(Block {
+                pc: 0,
+                insts,
+                term: Terminator::Call { func: callee },
+            });
+            // Re-invoke the callee a few times before moving on.
+            blocks.push(Block {
+                pc: 0,
+                insts: vec![gen_inst(p, &mut rng), gen_inst(p, &mut rng)],
+                term: Terminator::CondBranch {
+                    target: call_block_idx,
+                    behavior: BranchBehavior::Loop {
+                        iters: rng.geometric(3.0).clamp(2, 8),
+                    },
+                },
+            });
+        }
+        blocks.push(Block {
+            pc: 0,
+            insts: vec![gen_inst(p, &mut rng)],
+            term: Terminator::Ret,
+        });
+        // Assign PCs now that the block list is final.
+        for b in &mut blocks {
+            b.pc = next_pc;
+            next_pc = b.end_pc();
+        }
+        funcs.push(Function { blocks });
+        next_pc = (next_pc + 0xFFF) & !0xFFF;
+    }
+
+    for fi in 1..nfuncs {
+        let nblocks = rng.geometric(p.blocks_per_func).clamp(3, 64) as usize;
+        let mut blocks = Vec::with_capacity(nblocks);
+        for bi in 0..nblocks {
+            let len = rng.geometric(p.block_len).clamp(2, 32) as usize;
+            let mut insts = Vec::with_capacity(len);
+            for _ in 0..len {
+                insts.push(gen_inst(p, &mut rng));
+            }
+            // Hot loops in real code touch memory; make sure a block that
+            // may become a loop body is not a pure-ALU spin (which would
+            // starve the cache/TLB models when the loop dominates a phase).
+            let mem_weight = p.load_frac + p.store_frac;
+            if mem_weight > 0.1 && !insts.iter().any(|i| i.mem.is_some()) {
+                let slot = rng.index(insts.len());
+                insts[slot] = gen_mem_inst(p, &mut rng);
+            }
+            let term = gen_term(p, &mut rng, bi, nblocks, fi, nfuncs);
+            let block = Block { pc: next_pc, insts, term };
+            next_pc = block.end_pc();
+            // Leave a small gap between blocks sometimes so fetch crosses
+            // cache lines irregularly.
+            if rng.chance(0.2) {
+                next_pc += 4 * rng.below(4);
+            }
+            blocks.push(block);
+        }
+        // Function must end with Ret; also terminators that need a
+        // fall-through successor cannot sit in the last block.
+        fix_last_block(&mut blocks);
+        funcs.push(Function { blocks });
+        next_pc = (next_pc + 0xFFF) & !0xFFF; // next function page-aligned
+    }
+
+    let prog = Program { funcs, entry: 0 };
+    prog.validate();
+    prog
+}
+
+/// Pick registers with a bias toward low indices so chains form.
+fn pick_reg(rng: &mut Rng, simd: bool) -> RegId {
+    let base: RegId = if simd { 32 } else { 0 };
+    // Zipf-ish: square the uniform draw to bias toward low registers,
+    // creating realistic read-after-write dependence density.
+    let u = rng.f64();
+    base + ((u * u * 28.0) as RegId).min(27)
+}
+
+/// Generate a load/store with a personality-appropriate access pattern.
+fn gen_mem_inst(p: &Personality, rng: &mut Rng) -> StaticInst {
+    let is_load = rng.f64() < p.load_frac / (p.load_frac + p.store_frac).max(1e-9);
+    let op = if is_load { OpClass::Load } else { OpClass::Store };
+    let mem = Some(gen_mem_pattern(p, rng));
+    let mem_size = [1u8, 2, 4, 8, 8, 8, 16][rng.index(7)];
+    let mut srcs = [REG_NONE; MAX_SRC_REGS];
+    let mut dsts = [REG_NONE; MAX_DST_REGS];
+    srcs[0] = pick_reg(rng, false); // address base
+    let data_is_fp = rng.chance(p.fp_frac);
+    if is_load {
+        dsts[0] = pick_reg(rng, data_is_fp);
+    } else {
+        srcs[1] = pick_reg(rng, data_is_fp); // store data
+    }
+    StaticInst { op, srcs, dsts, mem, mem_size }
+}
+
+fn gen_inst(p: &Personality, rng: &mut Rng) -> StaticInst {
+    let r = rng.f64();
+    // Memory ops.
+    if r < p.load_frac + p.store_frac {
+        return gen_mem_inst(p, rng);
+    }
+    // Barriers / serializing ops.
+    if rng.chance(p.barrier_frac) {
+        return StaticInst::simple(OpClass::MemBarrier);
+    }
+    if rng.chance(p.serialize_frac) {
+        return StaticInst::simple(OpClass::Serialize);
+    }
+    // Compute ops.
+    let simd = rng.chance(p.simd_frac);
+    let fp = !simd && rng.chance(p.fp_frac);
+    let kind = rng.f64();
+    let op = if simd {
+        if kind < p.mul_frac { OpClass::SimdMult } else { OpClass::SimdAlu }
+    } else if fp {
+        if kind < p.div_frac {
+            if rng.chance(0.3) { OpClass::FloatSqrt } else { OpClass::FloatDiv }
+        } else if kind < p.div_frac + p.mul_frac {
+            OpClass::FloatMult
+        } else {
+            OpClass::FloatAdd
+        }
+    } else if kind < p.div_frac {
+        OpClass::IntDiv
+    } else if kind < p.div_frac + p.mul_frac {
+        OpClass::IntMult
+    } else {
+        OpClass::IntAlu
+    };
+    let reg_simd = simd || fp;
+    let mut srcs = [REG_NONE; MAX_SRC_REGS];
+    let mut dsts = [REG_NONE; MAX_DST_REGS];
+    let nsrc = 1 + rng.index(if simd { 3 } else { 2 });
+    for s in srcs.iter_mut().take(nsrc) {
+        *s = pick_reg(rng, reg_simd);
+    }
+    dsts[0] = pick_reg(rng, reg_simd);
+    if simd && rng.chance(0.1) {
+        dsts[1] = pick_reg(rng, true); // wide ops writing a register pair
+    }
+    StaticInst { op, srcs, dsts, mem: None, mem_size: 0 }
+}
+
+fn gen_mem_pattern(p: &Personality, rng: &mut Rng) -> MemPattern {
+    let region = rng.f64();
+    let (base, span) = if region < p.hot_p {
+        (HOT_BASE, p.hot_bytes)
+    } else if region < p.hot_p + p.warm_p {
+        (WARM_BASE, p.warm_bytes)
+    } else {
+        (COLD_BASE, p.cold_bytes)
+    };
+    // Per-static-instruction sub-region so distinct PCs touch distinct data.
+    let sub = rng.below(4);
+    let base = base + sub * (span / 4).max(64);
+    let span = (span / 2).max(256);
+    let style = rng.f64();
+    if rng.chance(0.08) {
+        return MemPattern::Stack { offset: rng.below(512) & !7 };
+    }
+    if style < p.stride_frac {
+        let stride = [8u64, 8, 16, 64, 64, 128, 256][rng.index(7)];
+        MemPattern::Stride { base, stride, span }
+    } else if style < p.stride_frac + p.chase_frac {
+        MemPattern::Chase { base, span }
+    } else {
+        MemPattern::Rand { base, span }
+    }
+}
+
+fn gen_term(
+    p: &Personality,
+    rng: &mut Rng,
+    bi: usize,
+    nblocks: usize,
+    fi: usize,
+    nfuncs: usize,
+) -> Terminator {
+    let not_last = bi + 1 < nblocks;
+    let r = rng.f64();
+    if r < p.call_frac && not_last && nfuncs > 1 {
+        // Call a strictly-later function to keep the call graph acyclic
+        // (bounded stack depth without needing recursion limits).
+        if fi + 1 < nfuncs {
+            let callee = fi + 1 + rng.index(nfuncs - fi - 1);
+            return Terminator::Call { func: callee };
+        }
+    }
+    // Forward progress guarantee: unconditional control flow (jumps,
+    // indirect branches) only targets *later* blocks, and backward
+    // conditional edges use Loop behaviour (which always eventually falls
+    // through). This keeps the CFG free of inescapable cycles while still
+    // producing real loop nests.
+    if r < p.call_frac + p.indirect_frac && bi + 2 < nblocks {
+        let fwd = nblocks - bi - 1;
+        let ntargets = (2 + rng.index(4)).min(fwd);
+        let targets = (0..ntargets).map(|_| bi + 1 + rng.index(fwd)).collect();
+        return Terminator::Indirect { targets };
+    }
+    if not_last && rng.chance(0.55) {
+        if bi > 0 && rng.chance(0.6) {
+            // Loop back-edge: always exits after `iters` trips.
+            let target = rng.index(bi);
+            let behavior =
+                BranchBehavior::Loop { iters: rng.geometric(p.loop_iters).clamp(2, 64) };
+            return Terminator::CondBranch { target, behavior };
+        }
+        // Forward skip: both outcomes make progress, so any behaviour is
+        // safe — including hard-to-predict Bernoulli branches.
+        let behavior = if rng.chance(p.bernoulli_frac) {
+            BranchBehavior::Bernoulli { p: p.bernoulli_p + rng.f64() * 0.15 }
+        } else if rng.chance(0.4) {
+            let period = 2 + rng.below(14) as u32;
+            BranchBehavior::Pattern { pattern: rng.next_u64(), period }
+        } else {
+            BranchBehavior::Loop { iters: rng.geometric(p.loop_iters).clamp(2, 64) }
+        };
+        let target = bi + 1 + rng.index(nblocks - bi - 1);
+        return Terminator::CondBranch { target, behavior };
+    }
+    if not_last && rng.chance(0.7) {
+        Terminator::FallThrough
+    } else if bi + 2 < nblocks {
+        Terminator::Jump { target: bi + 1 + rng.index(nblocks - bi - 1) }
+    } else {
+        Terminator::Ret
+    }
+}
+
+/// Ensure structural invariants of the final block of a function.
+fn fix_last_block(blocks: &mut [Block]) {
+    let n = blocks.len();
+    let last = &mut blocks[n - 1].term;
+    match last {
+        Terminator::FallThrough | Terminator::CondBranch { .. } | Terminator::Call { .. } => {
+            *last = Terminator::Ret
+        }
+        _ => {}
+    }
+    // Guarantee at least one Ret is reachable: make the last block Ret.
+    blocks[n - 1].term = Terminator::Ret;
+}
+
+/// Stack region base (shared with the executor).
+pub const STACK_REGION: u64 = STACK_BASE;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_validates_for_many_seeds() {
+        let p = Personality::default();
+        for seed in 0..32 {
+            let prog = build_program(&p, seed);
+            assert!(prog.static_size() > 10);
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let p = Personality::default();
+        let a = build_program(&p, 123);
+        let b = build_program(&p, 123);
+        assert_eq!(a.static_size(), b.static_size());
+        assert_eq!(a.funcs.len(), b.funcs.len());
+        assert_eq!(
+            a.funcs[0].blocks[0].insts.len(),
+            b.funcs[0].blocks[0].insts.len()
+        );
+    }
+
+    #[test]
+    fn memory_heavy_personality_has_mem_ops() {
+        let p = Personality { load_frac: 0.5, store_frac: 0.2, ..Default::default() };
+        let prog = build_program(&p, 5);
+        let mem = prog
+            .funcs
+            .iter()
+            .flat_map(|f| &f.blocks)
+            .flat_map(|b| &b.insts)
+            .filter(|i| i.mem.is_some())
+            .count();
+        let total: usize = prog.funcs.iter().flat_map(|f| &f.blocks).map(|b| b.insts.len()).sum();
+        assert!(mem * 3 > total, "mem={mem} total={total}");
+    }
+
+    #[test]
+    fn functions_end_with_ret() {
+        let prog = build_program(&Personality::default(), 77);
+        for f in &prog.funcs {
+            assert!(matches!(f.blocks.last().unwrap().term, Terminator::Ret));
+        }
+    }
+}

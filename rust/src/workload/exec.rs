@@ -1,0 +1,289 @@
+//! Functional executor: walks a static [`Program`] and emits the dynamic
+//! instruction stream (PCs, resolved effective addresses, branch outcomes).
+//!
+//! This plays the role of gem5's functional front-end / QEMU in the paper's
+//! workflow (§4.3): it is purely architectural — no timing — and is cheap
+//! enough to run at trace-generation speed.
+
+use std::collections::HashMap;
+
+use super::builder::STACK_REGION;
+use super::program::*;
+use super::rng::Rng;
+use crate::isa::{Inst, OpClass, REG_LR, REG_SP};
+
+/// Per-static-load/store dynamic state (stride position or chase pointer).
+#[derive(Debug, Clone, Copy, Default)]
+struct MemState {
+    counter: u64,
+    chase_ptr: u64,
+}
+
+/// Per-terminator dynamic state (loop trip counters, pattern phase).
+#[derive(Debug, Clone, Copy, Default)]
+struct BranchState {
+    counter: u64,
+}
+
+/// Functional execution engine. Iterate to obtain [`Inst`]s forever (the
+/// program restarts at its entry upon returning from the outermost frame).
+pub struct Executor<'p> {
+    prog: &'p Program,
+    rng: Rng,
+    /// (function, block, next-instruction-index) frames; last = current.
+    stack: Vec<Frame>,
+    mem_state: HashMap<u64, MemState>,
+    br_state: HashMap<u64, BranchState>,
+    emitted: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    func: usize,
+    block: usize,
+    inst: usize,
+}
+
+impl<'p> Executor<'p> {
+    pub fn new(prog: &'p Program, seed: u64) -> Self {
+        Executor {
+            prog,
+            rng: Rng::new(seed ^ 0x5EED_CAFE),
+            stack: vec![Frame { func: prog.entry, block: 0, inst: 0 }],
+            mem_state: HashMap::new(),
+            br_state: HashMap::new(),
+            emitted: 0,
+        }
+    }
+
+    /// Total instructions emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    fn cur_block(&self) -> &'p Block {
+        let f = self.stack.last().unwrap();
+        &self.prog.funcs[f.func].blocks[f.block]
+    }
+
+    /// Resolve the effective address for a static memory instruction.
+    fn resolve_addr(&mut self, pc: u64, pattern: &MemPattern) -> u64 {
+        let st = self.mem_state.entry(pc).or_default();
+        match pattern {
+            MemPattern::Stride { base, stride, span } => {
+                let addr = base + (st.counter * stride) % (*span).max(1);
+                st.counter += 1;
+                addr
+            }
+            MemPattern::Chase { base, span } => {
+                if st.chase_ptr == 0 {
+                    st.chase_ptr = *base;
+                }
+                let cur = st.chase_ptr;
+                // Dependent successor: hash the current pointer. Aligned to
+                // 8B; stays within [base, base+span).
+                let mut h = cur.wrapping_mul(0x9E3779B97F4A7C15);
+                h ^= h >> 29;
+                st.chase_ptr = (base + h % (*span).max(8)) & !7;
+                cur
+            }
+            MemPattern::Rand { base, span } => base + (self.rng.below((*span).max(8)) & !7),
+            MemPattern::Stack { offset } => {
+                let depth = self.stack.len() as u64;
+                STACK_REGION - depth * 1024 + offset
+            }
+        }
+    }
+
+    /// Evaluate a branch behaviour at this dynamic occurrence.
+    fn resolve_branch(&mut self, pc: u64, behavior: &BranchBehavior) -> bool {
+        let st = self.br_state.entry(pc).or_default();
+        let k = st.counter;
+        st.counter += 1;
+        match behavior {
+            BranchBehavior::Loop { iters } => {
+                // Taken (loop again) for iters-1 occurrences, then reset.
+                if (k + 1) % iters.max(&1) == 0 {
+                    false
+                } else {
+                    true
+                }
+            }
+            BranchBehavior::Bernoulli { p } => self.rng.chance(*p),
+            BranchBehavior::Pattern { pattern, period } => {
+                (pattern >> (k % *period as u64)) & 1 == 1
+            }
+            BranchBehavior::AlwaysTaken => true,
+        }
+    }
+}
+
+impl<'p> Iterator for Executor<'p> {
+    type Item = Inst;
+
+    fn next(&mut self) -> Option<Inst> {
+        let block = self.cur_block();
+        let f = *self.stack.last().unwrap();
+
+        // Straight-line portion of the block.
+        if f.inst < block.insts.len() {
+            let sinst = &block.insts[f.inst];
+            let pc = block.pc + 4 * f.inst as u64;
+            let mut inst = sinst.instantiate(pc);
+            if let Some(pat) = &sinst.mem {
+                let pat = pat.clone();
+                inst.mem_addr = self.resolve_addr(pc, &pat);
+            }
+            self.stack.last_mut().unwrap().inst += 1;
+            self.emitted += 1;
+            return Some(inst);
+        }
+
+        // Terminator.
+        let pc = block.term_pc();
+        let fnblocks = &self.prog.funcs[f.func].blocks;
+        let mut inst = Inst { pc, taken: true, ..Default::default() };
+        match &block.term {
+            Terminator::FallThrough => {
+                // Layout-only: emit a cheap filler op and advance.
+                inst.op = OpClass::IntAlu;
+                inst.taken = false;
+                self.goto(f.func, f.block + 1);
+            }
+            Terminator::CondBranch { target, behavior } => {
+                inst.op = OpClass::CondBranch;
+                let behavior = behavior.clone();
+                let taken = self.resolve_branch(pc, &behavior);
+                inst.taken = taken;
+                let next = if taken { *target } else { f.block + 1 };
+                inst.target = fnblocks[next].pc;
+                self.goto(f.func, next);
+            }
+            Terminator::Jump { target } => {
+                inst.op = OpClass::Jump;
+                inst.target = fnblocks[*target].pc;
+                let t = *target;
+                self.goto(f.func, t);
+            }
+            Terminator::Indirect { targets } => {
+                inst.op = OpClass::IndirectBranch;
+                inst.srcs[0] = 9; // target register
+                let t = targets[self.rng.index(targets.len())];
+                inst.target = fnblocks[t].pc;
+                self.goto(f.func, t);
+            }
+            Terminator::Call { func } => {
+                inst.op = OpClass::Call;
+                inst.dsts[0] = REG_LR;
+                inst.srcs[0] = REG_SP;
+                let callee = *func;
+                inst.target = self.prog.funcs[callee].blocks[0].pc;
+                // Return continues at the caller's next block.
+                self.stack.last_mut().unwrap().block = f.block + 1;
+                self.stack.last_mut().unwrap().inst = 0;
+                self.stack.push(Frame { func: callee, block: 0, inst: 0 });
+            }
+            Terminator::Ret => {
+                inst.op = OpClass::Ret;
+                inst.srcs[0] = REG_LR;
+                self.stack.pop();
+                if self.stack.is_empty() {
+                    // Outermost return: restart the program (steady-state
+                    // benchmark loop).
+                    self.stack.push(Frame { func: self.prog.entry, block: 0, inst: 0 });
+                }
+                let nf = self.stack.last().unwrap();
+                inst.target = self.prog.funcs[nf.func].blocks[nf.block].pc;
+            }
+        }
+        self.emitted += 1;
+        Some(inst)
+    }
+}
+
+impl<'p> Executor<'p> {
+    fn goto(&mut self, func: usize, block: usize) {
+        let top = self.stack.last_mut().unwrap();
+        top.func = func;
+        top.block = block;
+        top.inst = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::builder::{build_program, Personality};
+
+    #[test]
+    fn runs_forever_and_deterministic() {
+        let prog = build_program(&Personality::default(), 1);
+        let a: Vec<Inst> = Executor::new(&prog, 2).take(5000).collect();
+        let b: Vec<Inst> = Executor::new(&prog, 2).take(5000).collect();
+        assert_eq!(a.len(), 5000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seed_different_stream() {
+        let prog = build_program(&Personality::default(), 1);
+        let a: Vec<Inst> = Executor::new(&prog, 2).take(2000).collect();
+        let b: Vec<Inst> = Executor::new(&prog, 3).take(2000).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn pcs_recur() {
+        // Loops must revisit PCs — that's what history context keys on.
+        let prog = build_program(&Personality::default(), 4);
+        let insts: Vec<Inst> = Executor::new(&prog, 4).take(20_000).collect();
+        let unique: std::collections::HashSet<u64> = insts.iter().map(|i| i.pc).collect();
+        assert!(unique.len() < insts.len() / 4, "unique={} total={}", unique.len(), insts.len());
+    }
+
+    #[test]
+    fn memory_ops_have_addresses() {
+        let prog = build_program(&Personality::default(), 9);
+        for inst in Executor::new(&prog, 9).take(20_000) {
+            if inst.op.is_mem() {
+                assert!(inst.mem_addr != 0, "mem op without address: {inst:?}");
+                assert!(inst.mem_size > 0);
+            }
+            if inst.op.is_control() {
+                assert!(inst.target != 0 || !inst.taken);
+            }
+        }
+    }
+
+    #[test]
+    fn loop_behavior_taken_ratio() {
+        // A Loop{iters: 5} back-edge should be taken 4 of every 5 times.
+        let b0 = Block {
+            pc: 0x1000,
+            insts: vec![],
+            term: Terminator::CondBranch {
+                target: 0,
+                behavior: BranchBehavior::Loop { iters: 5 },
+            },
+        };
+        let b1 = Block { pc: 0x2000, insts: vec![], term: Terminator::Ret };
+        let prog = Program { funcs: vec![Function { blocks: vec![b0, b1] }], entry: 0 };
+        prog.validate();
+        let insts: Vec<Inst> =
+            Executor::new(&prog, 0).take(1000).filter(|i| i.op == OpClass::CondBranch).collect();
+        let taken = insts.iter().filter(|i| i.taken).count();
+        let ratio = taken as f64 / insts.len() as f64;
+        assert!((ratio - 0.8).abs() < 0.02, "ratio={ratio}");
+    }
+
+    #[test]
+    fn call_stack_bounded() {
+        let p = Personality { call_frac: 0.3, num_funcs: 6, ..Default::default() };
+        let prog = build_program(&p, 11);
+        let mut ex = Executor::new(&prog, 11);
+        for _ in 0..50_000 {
+            ex.next();
+            assert!(ex.stack.len() <= p.num_funcs + 1, "stack grew unbounded");
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Synthetic workload generation: the SPEC CPU 2017 substitute.
+//!
+//! A [`Workload`] is a phase schedule over [`Personality`]s; each phase owns
+//! a deterministically built static [`Program`] and the stream switches
+//! programs at phase boundaries, producing the phased CPI behaviour the
+//! paper's Figure 6 studies.
+
+pub mod builder;
+pub mod exec;
+pub mod program;
+pub mod rng;
+pub mod suite;
+
+pub use builder::{build_program, Personality};
+pub use exec::Executor;
+pub use program::Program;
+pub use suite::{find, suite, training_set, Benchmark, Category};
+
+use crate::isa::Inst;
+
+/// A runnable workload: one or more phases, cycled indefinitely.
+pub struct Workload {
+    phases: Vec<(u64, Program)>,
+    input_seed: u64,
+}
+
+impl Workload {
+    /// Build phase programs. `base_seed` fixes the static structure (the
+    /// "binary"); `input_seed` varies the dynamic behaviour (the "input").
+    pub fn new(phases: Vec<(u64, Personality)>, base_seed: u64, input_seed: u64) -> Self {
+        let phases = phases
+            .into_iter()
+            .enumerate()
+            .map(|(i, (len, p))| (len, build_program(&p, base_seed.wrapping_add(i as u64 * 7919))))
+            .collect();
+        Workload { phases, input_seed }
+    }
+
+    /// Iterate dynamic instructions indefinitely.
+    pub fn stream(&self) -> WorkloadStream<'_> {
+        WorkloadStream {
+            wl: self,
+            phase: 0,
+            exec: Executor::new(&self.phases[0].1, self.input_seed),
+            in_phase: 0,
+        }
+    }
+}
+
+/// Iterator over a workload's dynamic instruction stream.
+pub struct WorkloadStream<'w> {
+    wl: &'w Workload,
+    phase: usize,
+    exec: Executor<'w>,
+    in_phase: u64,
+}
+
+impl<'w> Iterator for WorkloadStream<'w> {
+    type Item = Inst;
+
+    fn next(&mut self) -> Option<Inst> {
+        let (len, _) = self.wl.phases[self.phase];
+        if self.in_phase >= len {
+            // Phase boundary: move to the next phase's program. Executor
+            // seed advances so replays of the same phase differ.
+            self.phase = (self.phase + 1) % self.wl.phases.len();
+            let seed = self.wl.input_seed.wrapping_add(self.exec.emitted());
+            self.exec = Executor::new(&self.wl.phases[self.phase].1, seed);
+            self.in_phase = 0;
+        }
+        self.in_phase += 1;
+        self.exec.next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_switch_programs() {
+        let a = Personality { load_frac: 0.0, store_frac: 0.0, ..Default::default() };
+        let b = Personality { load_frac: 0.6, store_frac: 0.2, ..Default::default() };
+        let wl = Workload::new(vec![(1000, a), (1000, b)], 1, 2);
+        let insts: Vec<Inst> = wl.stream().take(2000).collect();
+        let mem_first = insts[..1000].iter().filter(|i| i.op.is_mem()).count();
+        let mem_second = insts[1000..].iter().filter(|i| i.op.is_mem()).count();
+        assert!(mem_second > mem_first + 100, "first={mem_first} second={mem_second}");
+    }
+
+    #[test]
+    fn stream_cycles_after_all_phases() {
+        let wl = Workload::new(vec![(500, Personality::default())], 3, 4);
+        let insts: Vec<Inst> = wl.stream().take(5000).collect();
+        assert_eq!(insts.len(), 5000);
+    }
+}

@@ -1,0 +1,216 @@
+//! Static program representation for synthetic workloads.
+//!
+//! A [`Program`] is a small CFG of basic blocks with fixed PCs, fixed
+//! register assignments, and parameterized *behaviours* (memory access
+//! patterns, branch outcome processes). Functional execution of a program
+//! (see [`super::exec`]) yields the dynamic instruction stream that the DES
+//! timestamps. Keeping the static side fixed is what gives the stream the
+//! locality structure real programs have: recurring PCs, loop branches,
+//! stable register dependence chains — the properties branch predictors and
+//! caches key on.
+
+use crate::isa::{Inst, OpClass, RegId, MAX_DST_REGS, MAX_SRC_REGS, REG_NONE};
+
+/// How a static load/store generates its effective addresses over time.
+#[derive(Debug, Clone)]
+pub enum MemPattern {
+    /// Sequential streaming through a region: `base + (k * stride) % span`.
+    Stride { base: u64, stride: u64, span: u64 },
+    /// Dependent pointer chase through a region (random successor chain).
+    Chase { base: u64, span: u64 },
+    /// Uniform random access within a region.
+    Rand { base: u64, span: u64 },
+    /// Stack-relative access (small hot region).
+    Stack { offset: u64 },
+}
+
+/// Branch outcome process for a block terminator.
+#[derive(Debug, Clone)]
+pub enum BranchBehavior {
+    /// Loop back-edge: taken `iters-1` times, then falls through.
+    Loop { iters: u64 },
+    /// Taken with probability `p` (data-dependent, hard for predictors
+    /// when p is near 0.5).
+    Bernoulli { p: f64 },
+    /// Deterministic repeating pattern of outcomes (bit i of `pattern`,
+    /// period `period` <= 64). Predictable by history-based predictors
+    /// (TAGE) but not by simple bimodal ones.
+    Pattern { pattern: u64, period: u32 },
+    /// Always taken.
+    AlwaysTaken,
+}
+
+/// Block terminator.
+#[derive(Debug, Clone)]
+pub enum Terminator {
+    /// Fall through to the next block in the function.
+    FallThrough,
+    /// Conditional branch: `taken` -> `target` block, else next block.
+    CondBranch { target: usize, behavior: BranchBehavior },
+    /// Unconditional jump to a block.
+    Jump { target: usize },
+    /// Indirect branch selecting among target blocks (weights uniform).
+    Indirect { targets: Vec<usize> },
+    /// Call a function (returns to the next block).
+    Call { func: usize },
+    /// Return from the current function.
+    Ret,
+}
+
+/// A static (non-terminator) instruction inside a block.
+#[derive(Debug, Clone)]
+pub struct StaticInst {
+    pub op: OpClass,
+    pub srcs: [RegId; MAX_SRC_REGS],
+    pub dsts: [RegId; MAX_DST_REGS],
+    /// Memory behaviour for loads/stores; `None` otherwise.
+    pub mem: Option<MemPattern>,
+    /// Access size in bytes for loads/stores.
+    pub mem_size: u8,
+}
+
+impl StaticInst {
+    /// A plain ALU op with no operands (placeholder / nop-like).
+    pub fn simple(op: OpClass) -> Self {
+        StaticInst {
+            op,
+            srcs: [REG_NONE; MAX_SRC_REGS],
+            dsts: [REG_NONE; MAX_DST_REGS],
+            mem: None,
+            mem_size: 0,
+        }
+    }
+
+    /// Materialize a dynamic instance at a PC with a resolved address.
+    pub fn instantiate(&self, pc: u64) -> Inst {
+        Inst {
+            pc,
+            op: self.op,
+            srcs: self.srcs,
+            dsts: self.dsts,
+            mem_addr: 0,
+            mem_size: self.mem_size,
+            target: 0,
+            taken: false,
+        }
+    }
+}
+
+/// A basic block: straight-line instructions plus a terminator.
+#[derive(Debug, Clone)]
+pub struct Block {
+    /// PC of the first instruction (instructions are 4 bytes each).
+    pub pc: u64,
+    pub insts: Vec<StaticInst>,
+    pub term: Terminator,
+}
+
+impl Block {
+    /// PC of the terminator instruction.
+    pub fn term_pc(&self) -> u64 {
+        self.pc + 4 * self.insts.len() as u64
+    }
+
+    /// PC just past this block (start of the fall-through successor).
+    pub fn end_pc(&self) -> u64 {
+        self.term_pc() + 4
+    }
+}
+
+/// A function: a contiguous range of blocks. Execution enters at
+/// `blocks[0]` and leaves via `Ret`.
+#[derive(Debug, Clone)]
+pub struct Function {
+    pub blocks: Vec<Block>,
+}
+
+/// A whole synthetic program: functions plus an entry.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub funcs: Vec<Function>,
+    /// Entry function index.
+    pub entry: usize,
+}
+
+impl Program {
+    /// Total static instruction count (including terminators).
+    pub fn static_size(&self) -> usize {
+        self.funcs
+            .iter()
+            .flat_map(|f| f.blocks.iter())
+            .map(|b| b.insts.len() + 1)
+            .sum()
+    }
+
+    /// Sanity-check CFG target indices; panics on malformed programs.
+    /// Used by tests and the builder.
+    pub fn validate(&self) {
+        assert!(self.entry < self.funcs.len(), "entry out of range");
+        for (fi, f) in self.funcs.iter().enumerate() {
+            assert!(!f.blocks.is_empty(), "function {fi} empty");
+            for (bi, b) in f.blocks.iter().enumerate() {
+                match &b.term {
+                    Terminator::FallThrough => {
+                        assert!(bi + 1 < f.blocks.len(), "fallthrough off the end of fn {fi}")
+                    }
+                    Terminator::CondBranch { target, .. } => {
+                        assert!(*target < f.blocks.len());
+                        assert!(bi + 1 < f.blocks.len(), "cond branch at end of fn {fi}");
+                    }
+                    Terminator::Jump { target } => assert!(*target < f.blocks.len()),
+                    Terminator::Indirect { targets } => {
+                        assert!(!targets.is_empty());
+                        for t in targets {
+                            assert!(*t < f.blocks.len());
+                        }
+                    }
+                    Terminator::Call { func } => {
+                        assert!(*func < self.funcs.len());
+                        assert!(bi + 1 < f.blocks.len(), "call at end of fn {fi}");
+                    }
+                    Terminator::Ret => {}
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_program() -> Program {
+        let b0 = Block {
+            pc: 0x1000,
+            insts: vec![StaticInst::simple(OpClass::IntAlu)],
+            term: Terminator::CondBranch {
+                target: 0,
+                behavior: BranchBehavior::Loop { iters: 3 },
+            },
+        };
+        let b1 = Block { pc: 0x2000, insts: vec![], term: Terminator::Ret };
+        Program { funcs: vec![Function { blocks: vec![b0, b1] }], entry: 0 }
+    }
+
+    #[test]
+    fn validate_accepts_wellformed() {
+        tiny_program().validate();
+    }
+
+    #[test]
+    #[should_panic]
+    fn validate_rejects_bad_target() {
+        let mut p = tiny_program();
+        p.funcs[0].blocks[0].term = Terminator::Jump { target: 99 };
+        p.validate();
+    }
+
+    #[test]
+    fn pc_layout() {
+        let p = tiny_program();
+        let b = &p.funcs[0].blocks[0];
+        assert_eq!(b.term_pc(), 0x1004);
+        assert_eq!(b.end_pc(), 0x1008);
+        assert_eq!(p.static_size(), 3);
+    }
+}

@@ -1,0 +1,279 @@
+//! The synthetic benchmark suite: 25 named workloads standing in for SPEC
+//! CPU 2017 (paper Table 3).
+//!
+//! Each entry gets a personality tuned to the published character of its
+//! namesake (memory-bound, branchy, fp-streaming, phased, ...). The split
+//! into a 4-benchmark ML set and a 21-benchmark simulation-only set mirrors
+//! the paper; simulation runs additionally use a different input seed
+//! ("reference workload") than dataset generation ("test workload").
+
+use super::builder::Personality;
+use super::Workload;
+
+/// Benchmark category (paper Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Category {
+    /// Integer benchmark.
+    Int,
+    /// Floating-point benchmark.
+    Fp,
+}
+
+/// A named benchmark in the suite.
+#[derive(Debug, Clone)]
+pub struct Benchmark {
+    pub name: &'static str,
+    pub category: Category,
+    /// Member of the 4-benchmark ML training set?
+    pub training: bool,
+    /// Phase schedule: (instructions, personality). Cycled when exhausted.
+    pub phases: Vec<(u64, Personality)>,
+    /// Base seed; combined with the input-set seed at build time.
+    pub seed: u64,
+}
+
+impl Benchmark {
+    /// Build the runnable workload for an input set. `input_seed` plays the
+    /// role of SPEC's test vs. reference inputs: a different seed yields a
+    /// different dynamic stream over the same static program structure.
+    pub fn workload(&self, input_seed: u64) -> Workload {
+        Workload::new(self.phases.clone(), self.seed, input_seed)
+    }
+}
+
+fn p() -> Personality {
+    Personality::default()
+}
+
+/// Integer, branchy, irregular (interpreter-like).
+fn branchy(mispredict: f64, ws_kb: u64) -> Personality {
+    Personality {
+        fp_frac: 0.02,
+        simd_frac: 0.0,
+        load_frac: 0.28,
+        store_frac: 0.12,
+        stride_frac: 0.25,
+        chase_frac: 0.45,
+        hot_bytes: 24 << 10,
+        warm_bytes: ws_kb << 10,
+        cold_bytes: 16 << 20,
+        hot_p: 0.55,
+        warm_p: 0.35,
+        block_len: 4.0,
+        bernoulli_frac: 0.55,
+        bernoulli_p: mispredict,
+        indirect_frac: 0.08,
+        call_frac: 0.12,
+        ..p()
+    }
+}
+
+/// Memory-latency-bound pointer chaser.
+fn pointer_chaser(cold_mb: u64) -> Personality {
+    Personality {
+        fp_frac: 0.02,
+        load_frac: 0.35,
+        store_frac: 0.08,
+        stride_frac: 0.1,
+        chase_frac: 0.75,
+        hot_bytes: 8 << 10,
+        warm_bytes: 128 << 10,
+        cold_bytes: cold_mb << 20,
+        hot_p: 0.25,
+        warm_p: 0.25,
+        block_len: 5.0,
+        bernoulli_frac: 0.4,
+        bernoulli_p: 0.2,
+        loop_iters: 6.0,
+        ..p()
+    }
+}
+
+/// FP streaming kernel (regular strides, long loops, wide blocks).
+fn fp_stream(simd: f64, cold_mb: u64) -> Personality {
+    Personality {
+        fp_frac: 0.55,
+        simd_frac: simd,
+        mul_frac: 0.3,
+        div_frac: 0.015,
+        load_frac: 0.3,
+        store_frac: 0.14,
+        stride_frac: 0.9,
+        chase_frac: 0.02,
+        hot_bytes: 32 << 10,
+        warm_bytes: 512 << 10,
+        cold_bytes: cold_mb << 20,
+        hot_p: 0.35,
+        warm_p: 0.3,
+        block_len: 12.0,
+        bernoulli_frac: 0.08,
+        bernoulli_p: 0.04,
+        loop_iters: 64.0,
+        indirect_frac: 0.01,
+        call_frac: 0.04,
+        ..p()
+    }
+}
+
+/// Compute-bound integer (game tree search: predictable-ish branches,
+/// small working set, lots of ALU).
+fn int_compute(bern: f64) -> Personality {
+    Personality {
+        fp_frac: 0.03,
+        load_frac: 0.2,
+        store_frac: 0.08,
+        stride_frac: 0.4,
+        chase_frac: 0.25,
+        hot_bytes: 48 << 10,
+        warm_bytes: 256 << 10,
+        cold_bytes: 4 << 20,
+        hot_p: 0.7,
+        warm_p: 0.25,
+        block_len: 6.0,
+        bernoulli_frac: 0.45,
+        bernoulli_p: bern,
+        call_frac: 0.15,
+        loop_iters: 8.0,
+        ..p()
+    }
+}
+
+/// FP compute with mixed locality (multiphysics style).
+fn fp_mixed(div: f64, cold_mb: u64) -> Personality {
+    Personality {
+        fp_frac: 0.45,
+        simd_frac: 0.12,
+        mul_frac: 0.3,
+        div_frac: div,
+        load_frac: 0.27,
+        store_frac: 0.12,
+        stride_frac: 0.6,
+        chase_frac: 0.15,
+        hot_bytes: 24 << 10,
+        warm_bytes: 768 << 10,
+        cold_bytes: cold_mb << 20,
+        hot_p: 0.45,
+        warm_p: 0.3,
+        block_len: 9.0,
+        bernoulli_frac: 0.2,
+        bernoulli_p: 0.08,
+        loop_iters: 24.0,
+        ..p()
+    }
+}
+
+fn phases1(len: u64, a: Personality) -> Vec<(u64, Personality)> {
+    vec![(len, a)]
+}
+
+fn phases2(la: u64, a: Personality, lb: u64, b: Personality) -> Vec<(u64, Personality)> {
+    vec![(la, a), (lb, b)]
+}
+
+/// Build the full 25-benchmark suite.
+pub fn suite() -> Vec<Benchmark> {
+    use Category::*;
+    let mut v = Vec::new();
+    let mut seed = 0xC0FFEE00u64;
+    let mut add = |name: &'static str,
+                   category: Category,
+                   training: bool,
+                   phases: Vec<(u64, Personality)>| {
+        seed = seed.wrapping_add(0x9E37_79B9);
+        v.push(Benchmark { name, category, training, phases, seed });
+    };
+
+    // ---- ML (training) set: Table 3 top row ----
+    add("perlbench", Int, true, phases2(400_000, branchy(0.35, 512), 250_000, int_compute(0.3)));
+    add("gcc", Int, true, phases2(300_000, branchy(0.3, 2048), 300_000, pointer_chaser(8)));
+    add("bwaves", Fp, true, phases2(600_000, fp_stream(0.25, 64), 150_000, fp_mixed(0.02, 16)));
+    add("namd", Fp, true, phases1(500_000, fp_mixed(0.01, 8)));
+
+    // ---- Simulation-only set: Table 3 bottom rows ----
+    add("mcf", Int, false, phases1(500_000, pointer_chaser(32)));
+    add("omnetpp", Int, false, phases1(500_000, branchy(0.25, 4096)));
+    add("xalancbmk", Int, false, phases2(200_000, branchy(0.4, 1024), 200_000, pointer_chaser(4)));
+    add("x264", Int, false, phases2(350_000, fp_stream(0.5, 8), 200_000, int_compute(0.15)));
+    add("deepsjeng", Int, false, phases1(500_000, int_compute(0.4)));
+    add("leela", Int, false, phases1(500_000, int_compute(0.25)));
+    add("exchange2", Int, false, phases1(500_000, int_compute(0.1)));
+    add("xz", Int, false, phases2(300_000, branchy(0.2, 8192), 300_000, int_compute(0.35)));
+    add("specrand_i", Int, false, phases2(150_000, int_compute(0.5), 150_000, branchy(0.5, 64)));
+    add("cactuBSSN", Fp, false, phases2(400_000, fp_mixed(0.04, 32), 250_000, fp_stream(0.1, 32)));
+    add("parest", Fp, false, phases1(500_000, fp_mixed(0.02, 16)));
+    add("povray", Fp, false, phases1(500_000, fp_mixed(0.05, 2)));
+    add("lbm", Fp, false, phases1(600_000, fp_stream(0.4, 128)));
+    add("wrf", Fp, false, phases2(300_000, fp_mixed(0.03, 24), 300_000, fp_stream(0.2, 48)));
+    add("blender", Fp, false, phases2(250_000, fp_mixed(0.06, 8), 250_000, branchy(0.3, 512)));
+    add("cam4", Fp, false, phases2(200_000, fp_mixed(0.03, 16), 350_000, fp_stream(0.15, 96)));
+    add("imagick", Fp, false, phases1(500_000, fp_stream(0.35, 4)));
+    add("nab", Fp, false, phases1(500_000, fp_mixed(0.02, 4)));
+    add("fotonik3d", Fp, false, phases1(600_000, fp_stream(0.3, 192)));
+    add("roms", Fp, false, phases2(350_000, fp_stream(0.2, 64), 250_000, fp_mixed(0.02, 32)));
+    add("specrand_f", Fp, false, phases2(150_000, fp_mixed(0.08, 1), 150_000, int_compute(0.5)));
+    v
+}
+
+/// Look up a benchmark by name.
+pub fn find(name: &str) -> Option<Benchmark> {
+    suite().into_iter().find(|b| b.name == name)
+}
+
+/// Names of the training (ML-set) benchmarks.
+pub fn training_set() -> Vec<&'static str> {
+    suite().iter().filter(|b| b.training).map(|b| b.name).collect()
+}
+
+/// The extended 15-benchmark training set used by the §4.5 dataset-size
+/// study: the 4 ML benchmarks plus the next 11 from the suite.
+pub fn large_training_set() -> Vec<&'static str> {
+    suite().iter().take(15).map(|b| b.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_25_benchmarks() {
+        let s = suite();
+        assert_eq!(s.len(), 25);
+        assert_eq!(s.iter().filter(|b| b.training).count(), 4);
+    }
+
+    #[test]
+    fn names_unique() {
+        let s = suite();
+        let names: std::collections::HashSet<_> = s.iter().map(|b| b.name).collect();
+        assert_eq!(names.len(), s.len());
+    }
+
+    #[test]
+    fn find_works() {
+        assert!(find("mcf").is_some());
+        assert!(find("perlbench").unwrap().training);
+        assert!(find("nonexistent").is_none());
+    }
+
+    #[test]
+    fn workloads_produce_instructions() {
+        for b in suite().iter().take(6) {
+            let wl = b.workload(0);
+            let insts: Vec<_> = wl.stream().take(1000).collect();
+            assert_eq!(insts.len(), 1000, "{} produced too few", b.name);
+        }
+    }
+
+    #[test]
+    fn input_seed_changes_stream() {
+        let b = find("gcc").unwrap();
+        let a: Vec<_> = b.workload(0).stream().take(2000).collect();
+        let c: Vec<_> = b.workload(1).stream().take(2000).collect();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn large_training_set_is_15() {
+        assert_eq!(large_training_set().len(), 15);
+    }
+}

@@ -1,0 +1,222 @@
+//! Property-based tests over randomized inputs.
+//!
+//! The proptest crate is not vendored in this image, so these use the
+//! repo's own deterministic RNG to sweep hundreds of random cases per
+//! property — same idea, explicit seeds, fully reproducible failures
+//! (every assertion message carries the case seed).
+
+use simnet::des::{DesCpu, SimConfig};
+use simnet::features::{ContextMode, ContextTracker, NUM_FEATURES};
+use simnet::history::tagarray::TagArray;
+use simnet::history::HistoryInfo;
+use simnet::isa::{Inst, OpClass, REG_NONE};
+use simnet::runtime::{decode_row, OutputMode, HEAD_OUT};
+use simnet::trace::{TraceRecord, RECORD_SIZE};
+use simnet::workload::rng::Rng;
+use simnet::workload::{build_program, Executor, Personality};
+
+/// Random instruction generator for property sweeps.
+fn random_inst(rng: &mut Rng) -> Inst {
+    let op = OpClass::ALL[rng.index(OpClass::ALL.len())];
+    let mut inst = Inst {
+        pc: rng.below(1 << 30) & !3,
+        op,
+        mem_addr: if op.is_mem() { rng.below(1 << 34).max(8) & !7 } else { 0 },
+        mem_size: if op.is_mem() { [1, 2, 4, 8, 16][rng.index(5)] } else { 0 },
+        target: if op.is_control() { rng.below(1 << 30) & !3 } else { 0 },
+        taken: op.is_control() && rng.chance(0.7),
+        ..Default::default()
+    };
+    for s in inst.srcs.iter_mut() {
+        *s = if rng.chance(0.4) { rng.index(64) as i8 } else { REG_NONE };
+    }
+    for d in inst.dsts.iter_mut() {
+        *d = if rng.chance(0.25) { rng.index(64) as i8 } else { REG_NONE };
+    }
+    inst
+}
+
+fn random_hist(rng: &mut Rng, inst: &Inst) -> HistoryInfo {
+    HistoryInfo {
+        mispredict: inst.op.is_control() && rng.chance(0.1),
+        fetch_level: 1 + rng.index(3) as u8,
+        fetch_walk: [rng.chance(0.05), rng.chance(0.05), rng.chance(0.05)],
+        fetch_wb: [false, rng.chance(0.02)],
+        data_level: if inst.op.is_mem() { 1 + rng.index(3) as u8 } else { 0 },
+        data_walk: [rng.chance(0.05), rng.chance(0.05), rng.chance(0.05)],
+        data_wb: [rng.chance(0.05), rng.chance(0.02), rng.chance(0.02)],
+    }
+}
+
+#[test]
+fn prop_trace_record_roundtrip() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..500 {
+        let inst = random_inst(&mut rng);
+        let rec = TraceRecord {
+            hist: random_hist(&mut rng, &inst),
+            inst,
+            f_lat: rng.below(10_000) as u32,
+            e_lat: rng.below(10_000) as u32,
+            s_lat: rng.below(10_000) as u32,
+        };
+        let mut buf = [0u8; RECORD_SIZE];
+        rec.encode(&mut buf);
+        assert_eq!(TraceRecord::decode(&buf), rec, "case {case}");
+    }
+}
+
+#[test]
+fn prop_tagarray_matches_reference_lru() {
+    // Reference model: per-set Vec with MRU-front ordering.
+    let mut rng = Rng::new(0xCACE);
+    for case in 0..40 {
+        let sets = 1 << rng.index(5);
+        let ways = 1 + rng.index(7);
+        let mut tags = TagArray::new(sets, ways, 64);
+        let mut reference: Vec<Vec<u64>> = vec![Vec::new(); sets];
+        for _ in 0..2_000 {
+            let addr = rng.below(1 << 16) * 64;
+            let block = addr >> 6;
+            let set = (block as usize) % sets;
+            let expect_hit = reference[set].contains(&block);
+            let got = tags.access(addr, false);
+            assert_eq!(got.hit, expect_hit, "case {case} sets={sets} ways={ways}");
+            // Update reference LRU.
+            reference[set].retain(|&b| b != block);
+            reference[set].insert(0, block);
+            reference[set].truncate(ways);
+        }
+    }
+}
+
+#[test]
+fn prop_context_tracker_invariants() {
+    let cfg = SimConfig::default_o3();
+    let cap = cfg.max_context() + cfg.sq_entries;
+    for seed in 0..30 {
+        let mut rng = Rng::new(seed);
+        let mut tracker = ContextTracker::new(&cfg);
+        let mut last_tick = 0;
+        for _ in 0..400 {
+            let inst = random_inst(&mut rng);
+            let hist = random_hist(&mut rng, &inst);
+            let f = rng.below(20) as u32;
+            let e = 1 + rng.below(300) as u32;
+            let s = if inst.is_store() { e + 1 + rng.below(200) as u32 } else { 0 };
+            tracker.push(&inst, &hist, f, e, s);
+            assert!(tracker.len() <= cap, "seed {seed}: len {} > cap {cap}", tracker.len());
+            assert!(tracker.cur_tick >= last_tick, "seed {seed}: clock went backwards");
+            last_tick = tracker.cur_tick;
+        }
+        tracker.drain();
+        assert!(tracker.is_empty(), "seed {seed}: drain left instructions");
+    }
+}
+
+#[test]
+fn prop_ithemal_window_is_exact_recency() {
+    let cfg = SimConfig::default_o3();
+    for seed in 100..110 {
+        let mut rng = Rng::new(seed);
+        let mut tracker = ContextTracker::with_mode(&cfg, ContextMode::Ithemal);
+        let mut pcs = Vec::new();
+        for _ in 0..300 {
+            let inst = random_inst(&mut rng);
+            pcs.push(inst.pc);
+            tracker.push(&inst, &HistoryInfo::default(), 1, 5, 0);
+        }
+        // Encode with a window of 8: slots 1..8 must be the last 7 pushed
+        // instructions in reverse order (checked via the op-independent
+        // residence feature being 0 and the fetch-line dep flag path is
+        // exercised elsewhere; here check count only).
+        let probe = random_inst(&mut rng);
+        let mut buf = vec![0.0f32; 8 * NUM_FEATURES];
+        tracker.encode_input(&probe, &HistoryInfo::default(), 8, &mut buf);
+        // All 7 context slots are populated (fixed window never shrinks).
+        for slot in 1..8 {
+            let s = &buf[slot * NUM_FEATURES..(slot + 1) * NUM_FEATURES];
+            assert!(
+                s.iter().any(|&x| x != 0.0),
+                "seed {seed}: ithemal context slot {slot} empty"
+            );
+            // Latency features are always zero in Ithemal mode.
+            assert_eq!(s[41], 0.0, "residence leaked into ithemal features");
+            assert_eq!(s[42], 0.0, "exec lat leaked into ithemal features");
+        }
+    }
+}
+
+#[test]
+fn prop_des_latency_invariants_random_workloads() {
+    for seed in 0..12 {
+        let mut rng = Rng::new(seed * 31 + 7);
+        // Random personality within sane bounds.
+        let p = Personality {
+            load_frac: 0.05 + rng.f64() * 0.35,
+            store_frac: 0.02 + rng.f64() * 0.15,
+            fp_frac: rng.f64() * 0.6,
+            chase_frac: rng.f64() * 0.6,
+            bernoulli_p: rng.f64() * 0.5,
+            block_len: 2.0 + rng.f64() * 10.0,
+            ..Default::default()
+        };
+        let prog = build_program(&p, seed);
+        let cfg = SimConfig::default_o3();
+        let mut cpu = DesCpu::new(&cfg);
+        let mut last_fetch = 0u64;
+        for inst in Executor::new(&prog, seed).take(5_000) {
+            let e = cpu.step(&inst);
+            assert!(e.fetch_cycle >= last_fetch, "seed {seed}: fetch not monotone");
+            assert_eq!(e.fetch_cycle - last_fetch, e.f_lat as u64, "seed {seed}: F mismatch");
+            assert!(e.e_lat >= 1, "seed {seed}: E < 1");
+            if inst.is_store() {
+                assert!(e.s_lat > e.e_lat, "seed {seed}: store S <= E");
+            } else {
+                assert_eq!(e.s_lat, 0, "seed {seed}: non-store with S");
+            }
+            last_fetch = e.fetch_cycle;
+        }
+        let stats = cpu.finish();
+        let cpi = stats.cpi();
+        assert!((0.2..100.0).contains(&cpi), "seed {seed}: cpi {cpi}");
+    }
+}
+
+#[test]
+fn prop_decode_row_bounds() {
+    let mut rng = Rng::new(0xDEC0DE);
+    for case in 0..500 {
+        let row: Vec<f32> =
+            (0..HEAD_OUT).map(|_| (rng.f64() as f32 - 0.5) * 20.0).collect();
+        for mode in [OutputMode::Hybrid, OutputMode::Regression] {
+            let (f, e, s) = decode_row(&row, mode);
+            // Latencies are bounded by the regression ceiling.
+            let ceil = (10.0 * 20.0 * 256.0) as u32;
+            assert!(f < ceil && e < ceil && s < ceil, "case {case}: runaway decode");
+            if mode == OutputMode::Hybrid {
+                // Hybrid never returns 1..=8 from the regression path, and
+                // class path returns < 9; so any value in 0..=8 is a class.
+                // (Consistency: re-decoding is deterministic.)
+                assert_eq!((f, e, s), decode_row(&row, mode));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_workload_streams_are_infinite_and_valid() {
+    for seed in 0..10 {
+        let p = Personality::default();
+        let prog = build_program(&p, seed + 1000);
+        let mut count = 0u64;
+        for inst in Executor::new(&prog, seed).take(20_000) {
+            count += 1;
+            if inst.op.is_mem() {
+                assert!(inst.mem_addr > 0, "seed {seed}: mem op without address");
+            }
+            assert_eq!(inst.pc % 4, 0, "seed {seed}: misaligned pc");
+        }
+        assert_eq!(count, 20_000, "seed {seed}: stream ended early");
+    }
+}
