@@ -1,0 +1,16 @@
+"""Collection guard: skip the suite gracefully when heavy deps are absent.
+
+Every test module imports JAX (directly or through ``compile.*``), and
+``test_kernel.py`` additionally needs hypothesis. On environments without
+them (e.g. the rust-only CI leg) collecting the modules would error out,
+so we ignore them instead — pytest then exits with "no tests collected",
+which CI treats as success.
+"""
+
+import importlib.util
+
+collect_ignore_glob = []
+if importlib.util.find_spec("jax") is None:
+    collect_ignore_glob = ["test_*.py"]
+elif importlib.util.find_spec("hypothesis") is None:
+    collect_ignore_glob = ["test_kernel.py"]

@@ -10,8 +10,10 @@ fn main() {
     let n = common::bench_n(32_000);
     let cfg = SimConfig::default_o3();
     let choice = common::choice_or_fallback("c3");
-    let benches: Vec<String> =
-        ["perlbench", "xalancbmk", "deepsjeng", "specrand_i"].iter().map(|s| s.to_string()).collect();
+    let benches: Vec<String> = ["perlbench", "xalancbmk", "deepsjeng", "specrand_i"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
     common::hr("Table 5 (branch predictors)");
     match sweeps::table5(&cfg, &choice, n, Some(&benches)) {
         Ok(r) => print!("{r}"),

@@ -7,7 +7,7 @@
 use std::path::Path;
 
 use simnet::coordinator::pool::PoolPredictor;
-use simnet::coordinator::{simulate_parallel, simulate_pool, PoolOptions};
+use simnet::coordinator::{simulate_parallel, simulate_pool_report, PoolOptions};
 use simnet::des::{simulate, SimConfig};
 use simnet::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
 use simnet::stats::Table;
@@ -40,23 +40,27 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", t.render());
 
-    println!("\n=== worker scaling (256 sub-traces each) ===");
+    println!("\n=== shared-engine scaling (256 sub-traces per job) ===");
     let pool_pred = if have_artifacts {
         PoolPredictor::Ml { artifacts: artifacts.to_path_buf(), model: "c3".into(), weights: None }
     } else {
         PoolPredictor::Table { seq: 32 }
     };
-    let mut t = Table::new(&["workers", "MIPS", "speedup_vs_des"]);
+    let mut t = Table::new(&["jobs", "MIPS", "speedup_vs_des", "batch_occupancy"]);
     for w in [1usize, 2, 4] {
-        let out = simulate_pool(
-            &recs,
-            &cfg,
-            &PoolOptions { workers: w, subtraces: 256 * w, predictor: pool_pred.clone(), window: 0 },
-        )?;
+        let opts = PoolOptions {
+            workers: w,
+            subtraces: 256 * w,
+            predictor: pool_pred.clone(),
+            window: 0,
+            target_batch: 0,
+        };
+        let (out, stats) = simulate_pool_report(&recs, &cfg, &opts)?;
         t.row(vec![
             w.to_string(),
             format!("{:.3}", out.mips()),
             format!("{:.2}x", out.mips() / des_mips),
+            format!("{:.1}", stats.mean_occupancy()),
         ]);
     }
     print!("{}", t.render());

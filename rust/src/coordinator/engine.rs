@@ -1,0 +1,417 @@
+//! Shared dynamic-batching simulation engine (paper §3.3, Figures 4/9).
+//!
+//! SimNet's throughput comes entirely from turning the inherently
+//! sequential prediction chain into accelerator-sized batches: §3.3
+//! splits one trace into sub-traces and batches their per-step
+//! predictions (Figure 4), and Figure 9 scales that across devices by
+//! sharding sub-traces over workers. The seed implementation capped the
+//! batch at one worker's private sub-trace count — each pool worker
+//! owned its own predictor, so batches never crossed worker or job
+//! boundaries and predictor occupancy collapsed as workers grew.
+//!
+//! [`BatchEngine`] inverts that: a job-queue front end accepts many
+//! concurrent simulation jobs ([`JobSpec`]: trace slice + `SimConfig` +
+//! config feature), and the scheduler multiplexes the next-instruction
+//! slots of *all* active sub-traces across *all* jobs into shared
+//! [`LatencyPredictor`] batches with a configurable target batch size.
+//! This is the software analogue of the paper's multi-GPU claim ("no
+//! inter-device communication is required"): sub-traces only meet inside
+//! a predictor batch, so scheduling order cannot change any job's
+//! result — each prediction depends only on that sub-trace's own context
+//! queue. Results are demuxed deterministically back to each job's
+//! `ContextTracker`s and CPI windows, and per-batch occupancy /
+//! starvation counters ([`EngineStats`]) expose how full the
+//! accelerator batches actually ran — the quantity Figures 8/9 sweep.
+//!
+//! One simulation round advances every active sub-trace by exactly one
+//! instruction: slots are gathered in deterministic (job, sub-trace)
+//! submission order, chunked to the target batch size, predicted, and
+//! scattered back. Total cycles per job remain the sum of its sub-trace
+//! `curTick`s plus drain (Eq. 1), exactly as in [`super::parallel`].
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::des::SimConfig;
+use crate::features::{ContextTracker, NUM_FEATURES};
+use crate::predictor::LatencyPredictor;
+use crate::trace::TraceRecord;
+
+use super::SimOutcome;
+
+/// One simulation job submitted to the engine.
+pub struct JobSpec<'a> {
+    /// Trace slice to simulate (contiguous instruction records).
+    pub records: &'a [TraceRecord],
+    /// Machine configuration for the job's context trackers.
+    pub cfg: &'a SimConfig,
+    /// Sub-trace parallelism within the job (clamped to the trace size).
+    pub subtraces: usize,
+    /// CPI window in instructions (0 = no windows).
+    pub window: u64,
+    /// Configuration input feature (§5 ROB study), 0.0 when unused.
+    pub cfg_feature: f32,
+}
+
+/// Per-run predictor-batch statistics.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// Predictor calls issued.
+    pub batches: u64,
+    /// Total filled slots across all batches (== total inferences).
+    pub slots: u64,
+    /// Effective batch-size target (configured target, or the initial
+    /// active sub-trace count when running unbounded).
+    pub target_batch: usize,
+    /// Batches that went out with fewer slots than the target.
+    pub starved: u64,
+    /// Sub-traces created across all jobs.
+    pub subtraces: u64,
+}
+
+impl EngineStats {
+    /// Mean filled slots per predictor call.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.slots as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean batch fill as a fraction of the target batch size.
+    pub fn fill_ratio(&self) -> f64 {
+        if self.target_batch == 0 {
+            0.0
+        } else {
+            self.mean_occupancy() / self.target_batch as f64
+        }
+    }
+}
+
+/// Outcome of an engine run: one [`SimOutcome`] per job (submission
+/// order) plus shared batching statistics.
+#[derive(Debug, Clone, Default)]
+pub struct EngineReport {
+    pub jobs: Vec<SimOutcome>,
+    pub stats: EngineStats,
+    pub wall_seconds: f64,
+}
+
+impl EngineReport {
+    /// Merge all per-job outcomes into one (window lists concatenate in
+    /// job submission order; wall time is the shared engine wall time).
+    pub fn merged(self) -> SimOutcome {
+        let wall = self.wall_seconds;
+        let mut merged = SimOutcome::default();
+        for job in self.jobs {
+            merged.instructions += job.instructions;
+            merged.cycles += job.cycles;
+            merged.inferences += job.inferences;
+            merged.windows.extend(job.windows);
+        }
+        merged.wall_seconds = wall;
+        merged
+    }
+}
+
+struct SubTrace<'a> {
+    records: &'a [TraceRecord],
+    pos: usize,
+    tracker: ContextTracker,
+    windows: Vec<(u64, u64)>,
+    window_insts: u64,
+    window_start: u64,
+}
+
+struct JobState<'a> {
+    subs: Vec<SubTrace<'a>>,
+    window: u64,
+    outcome: SimOutcome,
+}
+
+/// Multi-job shared-batch simulation engine. Construct with a predictor
+/// and a target batch size (0 = one batch per round over every active
+/// sub-trace), [`submit`](Self::submit) any number of jobs, then
+/// [`run`](Self::run).
+pub struct BatchEngine<'a, 'p> {
+    predictor: &'p mut dyn LatencyPredictor,
+    target_batch: usize,
+    seq: usize,
+    width: usize,
+    jobs: Vec<JobState<'a>>,
+}
+
+impl<'a, 'p> BatchEngine<'a, 'p> {
+    pub fn new(predictor: &'p mut dyn LatencyPredictor, target_batch: usize) -> Self {
+        let seq = predictor.seq_len();
+        BatchEngine { predictor, target_batch, seq, width: seq * NUM_FEATURES, jobs: Vec::new() }
+    }
+
+    /// Queue a job; returns its index into [`EngineReport::jobs`].
+    pub fn submit(&mut self, spec: JobSpec<'a>) -> usize {
+        let n = spec.records.len();
+        let mode = self.predictor.context_mode();
+        let subs: Vec<SubTrace<'a>> = if n == 0 {
+            Vec::new()
+        } else {
+            let s = spec.subtraces.clamp(1, n);
+            let chunk = n.div_ceil(s);
+            spec.records
+                .chunks(chunk)
+                .map(|c| {
+                    let mut tracker = ContextTracker::with_mode(spec.cfg, mode);
+                    tracker.cfg_feature = spec.cfg_feature;
+                    SubTrace {
+                        records: c,
+                        pos: 0,
+                        tracker,
+                        windows: Vec::new(),
+                        window_insts: 0,
+                        window_start: 0,
+                    }
+                })
+                .collect()
+        };
+        self.jobs.push(JobState { subs, window: spec.window, outcome: SimOutcome::default() });
+        self.jobs.len() - 1
+    }
+
+    /// Number of jobs queued so far.
+    pub fn job_count(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Drive every queued job to completion, multiplexing all active
+    /// sub-traces into shared predictor batches.
+    pub fn run(mut self) -> Result<EngineReport> {
+        let mut active: Vec<(usize, usize)> = Vec::new();
+        for (ji, job) in self.jobs.iter().enumerate() {
+            for si in 0..job.subs.len() {
+                active.push((ji, si));
+            }
+        }
+        // Clamp to the active sub-trace count: a batch can never hold
+        // more slots than sub-traces, and the gather buffer is sized by
+        // this (an unclamped huge --target-batch must not OOM).
+        let cap = if self.target_batch == 0 {
+            active.len().max(1)
+        } else {
+            self.target_batch.min(active.len()).max(1)
+        };
+        let mut stats = EngineStats {
+            target_batch: cap,
+            subtraces: active.len() as u64,
+            ..EngineStats::default()
+        };
+        let mut batch = vec![0.0f32; cap * self.width];
+        let t0 = Instant::now();
+
+        while !active.is_empty() {
+            // One round advances every active sub-trace by one
+            // instruction, in chunks of at most `cap` slots.
+            let mut base = 0;
+            while base < active.len() {
+                let take = cap.min(active.len() - base);
+                // Gather: encode the next instruction of each slot.
+                for k in 0..take {
+                    let (ji, si) = active[base + k];
+                    let sub = &self.jobs[ji].subs[si];
+                    let rec = &sub.records[sub.pos];
+                    sub.tracker.encode_input(
+                        &rec.inst,
+                        &rec.hist,
+                        self.seq,
+                        &mut batch[k * self.width..(k + 1) * self.width],
+                    );
+                }
+                // One shared inference across jobs and sub-traces.
+                let preds = self.predictor.predict(&batch[..take * self.width], take)?;
+                stats.batches += 1;
+                stats.slots += take as u64;
+                if take < cap {
+                    stats.starved += 1;
+                }
+                // Scatter: demux predictions back to each slot's job.
+                for k in 0..take {
+                    let (ji, si) = active[base + k];
+                    let job = &mut self.jobs[ji];
+                    let window = job.window;
+                    job.outcome.instructions += 1;
+                    let sub = &mut job.subs[si];
+                    let rec = &sub.records[sub.pos];
+                    let (f, e, s_lat) = preds[k];
+                    let s_lat = if rec.inst.is_store() { s_lat.max(e + 1) } else { 0 };
+                    sub.tracker.push(&rec.inst, &rec.hist, f, e.max(1), s_lat);
+                    sub.pos += 1;
+                    sub.window_insts += 1;
+                    if window > 0 && sub.window_insts == window {
+                        let cyc = sub.tracker.cur_tick - sub.window_start;
+                        sub.windows.push((sub.window_insts, cyc));
+                        sub.window_start = sub.tracker.cur_tick;
+                        sub.window_insts = 0;
+                    }
+                }
+                base += take;
+            }
+            active.retain(|&(ji, si)| {
+                let sub = &self.jobs[ji].subs[si];
+                sub.pos < sub.records.len()
+            });
+        }
+
+        let wall = t0.elapsed().as_secs_f64();
+        for job in &mut self.jobs {
+            for sub in &mut job.subs {
+                if job.window > 0 && sub.window_insts > 0 {
+                    sub.windows.push((sub.window_insts, sub.tracker.cur_tick - sub.window_start));
+                }
+                sub.tracker.drain();
+                // Per paper §3.3: total time is the sum of sub-trace
+                // curTicks; windows concatenate in original trace order.
+                job.outcome.cycles += sub.tracker.cur_tick;
+                job.outcome.windows.extend(sub.windows.drain(..));
+            }
+            job.outcome.inferences = job.outcome.instructions;
+            job.outcome.wall_seconds = wall;
+        }
+        Ok(EngineReport {
+            jobs: self.jobs.into_iter().map(|j| j.outcome).collect(),
+            stats,
+            wall_seconds: wall,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::simulate_parallel;
+    use crate::des::simulate;
+    use crate::predictor::TablePredictor;
+    use crate::workload::find;
+
+    fn make_records(bench: &str, n: u64) -> Vec<TraceRecord> {
+        let cfg = SimConfig::default_o3();
+        let b = find(bench).unwrap();
+        let mut recs = Vec::new();
+        simulate(&cfg, b.workload(0).stream(), n, |e| recs.push(TraceRecord::from(e)));
+        recs
+    }
+
+    fn job<'a>(records: &'a [TraceRecord], cfg: &'a SimConfig, subtraces: usize) -> JobSpec<'a> {
+        JobSpec { records, cfg, subtraces, window: 1_000, cfg_feature: 0.0 }
+    }
+
+    #[test]
+    fn single_job_engine_equals_simulate_parallel() {
+        let cfg = SimConfig::default_o3();
+        let recs = make_records("gcc", 6_000);
+        let mut p1 = TablePredictor::new(16);
+        let par = simulate_parallel(&recs, &cfg, &mut p1, 4, 1_000).unwrap();
+        let mut p2 = TablePredictor::new(16);
+        let mut engine = BatchEngine::new(&mut p2, 0);
+        engine.submit(job(&recs, &cfg, 4));
+        let report = engine.run().unwrap();
+        assert_eq!(report.jobs.len(), 1);
+        let out = &report.jobs[0];
+        assert_eq!(out.instructions, par.instructions);
+        assert_eq!(out.cycles, par.cycles);
+        assert_eq!(out.windows, par.windows);
+        assert_eq!(report.stats.subtraces, 4);
+    }
+
+    #[test]
+    fn submission_order_does_not_change_per_job_results() {
+        let cfg = SimConfig::default_o3();
+        let a = make_records("gcc", 5_000);
+        let b = make_records("mcf", 4_000);
+        let mut p1 = TablePredictor::new(16);
+        let mut e1 = BatchEngine::new(&mut p1, 0);
+        e1.submit(job(&a, &cfg, 4));
+        e1.submit(job(&b, &cfg, 3));
+        let r1 = e1.run().unwrap();
+        let mut p2 = TablePredictor::new(16);
+        let mut e2 = BatchEngine::new(&mut p2, 0);
+        e2.submit(job(&b, &cfg, 3));
+        e2.submit(job(&a, &cfg, 4));
+        let r2 = e2.run().unwrap();
+        // Per-job results must be identical regardless of submission order.
+        assert_eq!(r1.jobs[0].cycles, r2.jobs[1].cycles);
+        assert_eq!(r1.jobs[0].windows, r2.jobs[1].windows);
+        assert_eq!(r1.jobs[1].cycles, r2.jobs[0].cycles);
+        assert_eq!(r1.jobs[1].windows, r2.jobs[0].windows);
+        assert_eq!(r1.stats.subtraces, r2.stats.subtraces);
+    }
+
+    #[test]
+    fn occupancy_slots_sum_to_total_inferences() {
+        let cfg = SimConfig::default_o3();
+        let a = make_records("leela", 3_000);
+        let b = make_records("xz", 2_000);
+        let mut p = TablePredictor::new(16);
+        let mut engine = BatchEngine::new(&mut p, 8);
+        engine.submit(job(&a, &cfg, 5));
+        engine.submit(job(&b, &cfg, 4));
+        let report = engine.run().unwrap();
+        let inferences: u64 = report.jobs.iter().map(|j| j.inferences).sum();
+        assert_eq!(inferences, 5_000);
+        assert_eq!(report.stats.slots, inferences);
+        assert_eq!(p.served(), 5_000);
+        assert!(report.stats.batches > 0);
+        assert!(report.stats.slots <= report.stats.batches * report.stats.target_batch as u64);
+        assert!(report.stats.mean_occupancy() > 0.0);
+        assert_eq!(report.stats.target_batch, 8);
+        assert_eq!(report.stats.subtraces, 9);
+    }
+
+    #[test]
+    fn target_batch_size_does_not_change_results() {
+        let cfg = SimConfig::default_o3();
+        let recs = make_records("namd", 4_000);
+        let mut outs = Vec::new();
+        for target in [0usize, 3, 16] {
+            let mut p = TablePredictor::new(16);
+            let mut engine = BatchEngine::new(&mut p, target);
+            engine.submit(job(&recs, &cfg, 6));
+            outs.push(engine.run().unwrap().jobs.remove(0));
+        }
+        assert_eq!(outs[0].cycles, outs[1].cycles);
+        assert_eq!(outs[0].cycles, outs[2].cycles);
+        assert_eq!(outs[0].windows, outs[1].windows);
+        assert_eq!(outs[0].windows, outs[2].windows);
+    }
+
+    #[test]
+    fn empty_job_completes_immediately() {
+        let cfg = SimConfig::default_o3();
+        let recs = make_records("xz", 100);
+        let mut p = TablePredictor::new(8);
+        let mut engine = BatchEngine::new(&mut p, 0);
+        engine.submit(job(&[], &cfg, 4));
+        engine.submit(job(&recs, &cfg, 2));
+        assert_eq!(engine.job_count(), 2);
+        let report = engine.run().unwrap();
+        assert_eq!(report.jobs[0].instructions, 0);
+        assert_eq!(report.jobs[0].cycles, 0);
+        assert_eq!(report.jobs[1].instructions, 100);
+        assert_eq!(report.stats.subtraces, 2);
+    }
+
+    #[test]
+    fn merged_report_concatenates_jobs() {
+        let cfg = SimConfig::default_o3();
+        let a = make_records("gcc", 2_000);
+        let b = make_records("mcf", 1_000);
+        let mut p = TablePredictor::new(16);
+        let mut engine = BatchEngine::new(&mut p, 0);
+        engine.submit(job(&a, &cfg, 2));
+        engine.submit(job(&b, &cfg, 1));
+        let merged = engine.run().unwrap().merged();
+        assert_eq!(merged.instructions, 3_000);
+        assert_eq!(merged.inferences, 3_000);
+        let w: u64 = merged.windows.iter().map(|(n, _)| n).sum();
+        assert_eq!(w, 3_000);
+    }
+}

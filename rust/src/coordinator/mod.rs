@@ -7,16 +7,21 @@
 //!   split into equally sized contiguous sub-traces, each simulated
 //!   sequentially with its own context/clock, with the per-step
 //!   predictions of all sub-traces batched into single accelerator calls.
-//! * [`pool`] — the multi-worker orchestration standing in for the paper's
-//!   multi-GPU scaling: sub-traces are sharded across OS threads, each
-//!   owning its own PJRT executable (one "device stream" per worker).
+//! * [`engine`] — the shared dynamic-batching engine: many concurrent
+//!   jobs, all of whose sub-traces are multiplexed into common predictor
+//!   batches with a configurable target batch size (paper §3.3/Figure 9).
+//! * [`pool`] — multi-job pooling over the engine, standing in for the
+//!   paper's multi-GPU scaling: shards share one predictor and one batch
+//!   stream instead of loading a private executable per thread.
 
+pub mod engine;
 pub mod parallel;
 pub mod pool;
 pub mod sequential;
 
+pub use engine::{BatchEngine, EngineReport, EngineStats, JobSpec};
 pub use parallel::{simulate_parallel, simulate_parallel_cfg};
-pub use pool::{simulate_pool, PoolOptions};
+pub use pool::{simulate_pool, simulate_pool_report, PoolOptions};
 pub use sequential::simulate_sequential;
 
 /// Result of an ML-simulated run.

@@ -8,27 +8,19 @@
 //! prediction chain into accelerator-sized batches. Total time is the sum
 //! of the per-sub-trace clocks; the loss of cross-boundary context is the
 //! accuracy cost Figure 7 studies.
-
-use std::time::Instant;
+//!
+//! Since the [`super::engine`] refactor this module is a thin single-job
+//! wrapper over [`BatchEngine`] (unbounded target batch = the original
+//! one-batch-per-round behavior), kept for backward compatibility.
 
 use anyhow::Result;
 
 use crate::des::SimConfig;
-use crate::features::{ContextTracker, NUM_FEATURES};
 use crate::predictor::LatencyPredictor;
 use crate::trace::TraceRecord;
 
+use super::engine::{BatchEngine, JobSpec};
 use super::SimOutcome;
-
-struct SubTrace<'a> {
-    records: &'a [TraceRecord],
-    pos: usize,
-    tracker: ContextTracker,
-    /// Windowed CPI bookkeeping (concatenated in trace order afterwards).
-    windows: Vec<(u64, u64)>,
-    window_insts: u64,
-    window_start: u64,
-}
 
 /// Simulate with `num_subtraces`-way sub-trace parallelism. `window` > 0
 /// emits CPI-series windows (in original trace order).
@@ -52,77 +44,8 @@ pub fn simulate_parallel_cfg(
     window: u64,
     cfg_feature: f32,
 ) -> Result<SimOutcome> {
-    let n = records.len();
-    let s = num_subtraces.clamp(1, n.max(1));
-    let chunk = n.div_ceil(s);
-    let seq = predictor.seq_len();
-    let width = seq * NUM_FEATURES;
-    let mode = predictor.context_mode();
-
-    let mut subs: Vec<SubTrace> = records
-        .chunks(chunk)
-        .map(|c| {
-            let mut tracker = ContextTracker::with_mode(cfg, mode);
-            tracker.cfg_feature = cfg_feature;
-            SubTrace {
-            records: c,
-            pos: 0,
-            tracker,
-            windows: Vec::new(),
-            window_insts: 0,
-            window_start: 0,
-        }})
-        .collect();
-
-    let mut batch = vec![0.0f32; subs.len() * width];
-    let mut active: Vec<usize> = (0..subs.len()).collect();
-    let mut out = SimOutcome::default();
-    let t0 = Instant::now();
-
-    while !active.is_empty() {
-        // Gather: encode the next instruction of every active sub-trace.
-        for (k, &si) in active.iter().enumerate() {
-            let sub = &subs[si];
-            let rec = &sub.records[sub.pos];
-            sub.tracker.encode_input(
-                &rec.inst,
-                &rec.hist,
-                seq,
-                &mut batch[k * width..(k + 1) * width],
-            );
-        }
-        // One batched inference across sub-traces.
-        let preds = predictor.predict(&batch, active.len())?;
-        // Scatter: apply predictions, advance cursors.
-        for (k, &si) in active.iter().enumerate() {
-            let sub = &mut subs[si];
-            let rec = &sub.records[sub.pos];
-            let (f, e, s_lat) = preds[k];
-            let s_lat = if rec.inst.is_store() { s_lat.max(e + 1) } else { 0 };
-            sub.tracker.push(&rec.inst, &rec.hist, f, e.max(1), s_lat);
-            sub.pos += 1;
-            out.instructions += 1;
-            sub.window_insts += 1;
-            if window > 0 && sub.window_insts == window {
-                sub.windows.push((sub.window_insts, sub.tracker.cur_tick - sub.window_start));
-                sub.window_start = sub.tracker.cur_tick;
-                sub.window_insts = 0;
-            }
-        }
-        active.retain(|&si| subs[si].pos < subs[si].records.len());
-    }
-
-    // Total cycles = sum of per-sub-trace clocks (paper: "we sum up their
-    // curTicks to get the total execution time").
-    for sub in &mut subs {
-        if window > 0 && sub.window_insts > 0 {
-            sub.windows.push((sub.window_insts, sub.tracker.cur_tick - sub.window_start));
-        }
-        sub.tracker.drain();
-        out.cycles += sub.tracker.cur_tick;
-        out.windows.extend(sub.windows.drain(..));
-    }
-    out.inferences = out.instructions;
-    out.wall_seconds = t0.elapsed().as_secs_f64();
-    Ok(out)
+    let mut engine = BatchEngine::new(predictor, 0);
+    engine.submit(JobSpec { records, cfg, subtraces: num_subtraces, window, cfg_feature });
+    let report = engine.run()?;
+    Ok(report.merged())
 }

@@ -1,29 +1,36 @@
-//! Multi-worker orchestration — the paper's multi-GPU scaling (§3.3,
-//! Figure 9) mapped onto worker threads.
+//! Multi-job pooling — the paper's multi-GPU scaling (§3.3, Figure 9)
+//! mapped onto the shared [`BatchEngine`].
 //!
-//! Sub-traces are sharded across `workers` OS threads. Each worker owns a
-//! private predictor instance (its own compiled PJRT executable — one
-//! "device stream"), so no cross-worker communication happens during
-//! simulation, mirroring the paper's "no inter-GPU communication is
-//! required" property. Results are reduced at the end.
+//! The trace is sharded into `workers` contiguous slices, but unlike the
+//! seed implementation (one OS thread + one private predictor + private
+//! batches per worker), every shard is submitted as a job to ONE engine
+//! sharing ONE predictor: the next-instruction slots of all shards'
+//! sub-traces are multiplexed into common accelerator batches. At equal
+//! total sub-trace count this sustains far higher predictor-batch
+//! occupancy than per-worker pooling (see `benches/bench_engine.rs`),
+//! which is what DL-based simulators live or die on.
+//!
+//! The requested sub-trace total is distributed across shards with its
+//! remainder (12 sub-traces over 8 workers yields 12, not 8 — the seed
+//! silently dropped the remainder).
 
 use std::path::PathBuf;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::des::SimConfig;
 use crate::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
 use crate::trace::TraceRecord;
 
-use super::parallel::simulate_parallel;
+use super::engine::{BatchEngine, EngineStats, JobSpec};
 use super::SimOutcome;
 
-/// How each worker constructs its predictor.
+/// How the pool constructs its shared predictor.
 #[derive(Debug, Clone)]
 pub enum PoolPredictor {
-    /// Load the AOT model from the artifacts dir (one PJRT stream per
-    /// worker). (artifacts, model, optional weights file)
+    /// Load the AOT model from the artifacts dir.
+    /// (artifacts, model, optional weights file)
     Ml { artifacts: PathBuf, model: String, weights: Option<PathBuf> },
     /// Analytical table predictor (tests / ablation).
     Table { seq: usize },
@@ -32,62 +39,77 @@ pub enum PoolPredictor {
 /// Options for a pooled run.
 #[derive(Debug, Clone)]
 pub struct PoolOptions {
+    /// Shards (jobs) the trace is split into.
     pub workers: usize,
     /// Total sub-traces across all workers.
     pub subtraces: usize,
     pub predictor: PoolPredictor,
     /// CPI window (0 = none).
     pub window: u64,
+    /// Target predictor-batch size (0 = all active sub-traces per batch).
+    pub target_batch: usize,
 }
 
-/// Shard the trace over a worker pool; each worker runs sub-trace-parallel
-/// simulation over its shard. Returns the merged outcome (wall time is the
-/// max over workers — they run concurrently).
-pub fn simulate_pool(records: &[TraceRecord], cfg: &SimConfig, opts: &PoolOptions) -> Result<SimOutcome> {
+/// Shard the trace over `workers` jobs of one shared [`BatchEngine`];
+/// returns the merged outcome.
+pub fn simulate_pool(
+    records: &[TraceRecord],
+    cfg: &SimConfig,
+    opts: &PoolOptions,
+) -> Result<SimOutcome> {
+    let (out, _) = simulate_pool_report(records, cfg, opts)?;
+    Ok(out)
+}
+
+/// [`simulate_pool`] returning the engine's batching statistics as well.
+pub fn simulate_pool_report(
+    records: &[TraceRecord],
+    cfg: &SimConfig,
+    opts: &PoolOptions,
+) -> Result<(SimOutcome, EngineStats)> {
     let workers = opts.workers.max(1);
     let n = records.len();
-    let shard = n.div_ceil(workers);
-    let sub_per_worker = (opts.subtraces / workers).max(1);
+    let shard = n.div_ceil(workers).max(1);
     let t0 = Instant::now();
 
-    let results: Vec<Result<SimOutcome>> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for w in 0..workers {
-            let lo = (w * shard).min(n);
-            let hi = ((w + 1) * shard).min(n);
-            let slice = &records[lo..hi];
-            let opts = opts.clone();
-            let cfg = cfg.clone();
-            handles.push(scope.spawn(move || -> Result<SimOutcome> {
-                if slice.is_empty() {
-                    return Ok(SimOutcome::default());
-                }
-                let mut predictor: Box<dyn LatencyPredictor> = match &opts.predictor {
-                    PoolPredictor::Ml { artifacts, model, weights } => Box::new(
-                        MlPredictor::load(artifacts, model, weights.as_deref())?,
-                    ),
-                    PoolPredictor::Table { seq } => Box::new(TablePredictor::new(*seq)),
-                };
-                simulate_parallel(slice, &cfg, predictor.as_mut(), sub_per_worker, opts.window)
-            }));
+    let mut predictor: Box<dyn LatencyPredictor> = match &opts.predictor {
+        PoolPredictor::Ml { artifacts, model, weights } => {
+            Box::new(MlPredictor::load(artifacts, model, weights.as_deref())?)
         }
-        handles.into_iter().map(|h| h.join().map_err(|_| anyhow!("worker panicked"))?).map(Ok)
-            .collect::<Vec<_>>()
-            .into_iter()
-            .map(|r| r.and_then(|x| x))
-            .collect()
-    });
+        PoolPredictor::Table { seq } => Box::new(TablePredictor::new(*seq)),
+    };
+    let mut engine = BatchEngine::new(predictor.as_mut(), opts.target_batch);
 
-    let mut merged = SimOutcome::default();
-    for r in results {
-        let r = r?;
-        merged.instructions += r.instructions;
-        merged.cycles += r.cycles;
-        merged.inferences += r.inferences;
-        merged.windows.extend(r.windows);
+    // Distribute the requested sub-trace total across the NON-EMPTY
+    // shards (with fewer records than workers, trailing shards are
+    // empty and must not swallow their sub-trace allotment), spreading
+    // the remainder over the leading shards. The engine still clamps
+    // each job to its record count, so physically impossible requests
+    // degrade gracefully.
+    let nshards = if n == 0 { 0 } else { n.div_ceil(shard).min(workers) };
+    let base = if nshards == 0 { 0 } else { opts.subtraces / nshards };
+    let rem = if nshards == 0 { 0 } else { opts.subtraces % nshards };
+    for w in 0..nshards {
+        let lo = (w * shard).min(n);
+        let hi = ((w + 1) * shard).min(n);
+        if lo >= hi {
+            continue;
+        }
+        let subtraces = (base + usize::from(w < rem)).max(1);
+        engine.submit(JobSpec {
+            records: &records[lo..hi],
+            cfg,
+            subtraces,
+            window: opts.window,
+            cfg_feature: 0.0,
+        });
     }
+
+    let report = engine.run()?;
+    let stats = report.stats.clone();
+    let mut merged = report.merged();
     merged.wall_seconds = t0.elapsed().as_secs_f64();
-    Ok(merged)
+    Ok((merged, stats))
 }
 
 #[cfg(test)]
@@ -96,52 +118,81 @@ mod tests {
     use crate::des::simulate;
     use crate::workload::find;
 
-    #[test]
-    fn pool_with_table_predictor_scales_shards() {
+    fn records(bench: &str, n: u64) -> (Vec<TraceRecord>, SimConfig) {
         let cfg = SimConfig::default_o3();
-        let b = find("povray").unwrap();
+        let b = find(bench).unwrap();
         let mut recs = Vec::new();
-        simulate(&cfg, b.workload(0).stream(), 6_000, |e| recs.push(TraceRecord::from(e)));
-        let opts = PoolOptions {
-            workers: 3,
-            subtraces: 12,
+        simulate(&cfg, b.workload(0).stream(), n, |e| recs.push(TraceRecord::from(e)));
+        (recs, cfg)
+    }
+
+    fn table_opts(workers: usize, subtraces: usize) -> PoolOptions {
+        PoolOptions {
+            workers,
+            subtraces,
             predictor: PoolPredictor::Table { seq: 16 },
             window: 0,
-        };
-        let out = simulate_pool(&recs, &cfg, &opts).unwrap();
+            target_batch: 0,
+        }
+    }
+
+    #[test]
+    fn pool_with_table_predictor_scales_shards() {
+        let (recs, cfg) = records("povray", 6_000);
+        let out = simulate_pool(&recs, &cfg, &table_opts(3, 12)).unwrap();
         assert_eq!(out.instructions, 6_000);
         assert!(out.cycles > 0);
-        // Same totals as a single-worker run with the same sub-trace count
-        // per shard boundary structure is not guaranteed, but the CPI must
-        // be in the same ballpark.
-        let one = simulate_pool(
-            &recs,
-            &cfg,
-            &PoolOptions {
-                workers: 1,
-                subtraces: 12,
-                predictor: PoolPredictor::Table { seq: 16 },
-                window: 0,
-            },
-        )
-        .unwrap();
+        // Shard boundary structure differs from a single-worker run, but
+        // the CPI must be in the same ballpark.
+        let one = simulate_pool(&recs, &cfg, &table_opts(1, 12)).unwrap();
         let ratio = out.cpi() / one.cpi();
         assert!((0.8..1.25).contains(&ratio), "ratio={ratio}");
     }
 
     #[test]
     fn pool_handles_more_workers_than_records() {
-        let cfg = SimConfig::default_o3();
-        let b = find("nab").unwrap();
-        let mut recs = Vec::new();
-        simulate(&cfg, b.workload(0).stream(), 10, |e| recs.push(TraceRecord::from(e)));
-        let opts = PoolOptions {
-            workers: 8,
-            subtraces: 8,
-            predictor: PoolPredictor::Table { seq: 8 },
-            window: 0,
-        };
-        let out = simulate_pool(&recs, &cfg, &opts).unwrap();
+        // 10 records over 8 workers -> 5 non-empty 2-record shards; the
+        // 8 requested sub-traces must be redistributed over those 5
+        // shards (2+2+2+1+1), not dropped with the empty ones.
+        let (recs, cfg) = records("nab", 10);
+        let mut opts = table_opts(8, 8);
+        opts.predictor = PoolPredictor::Table { seq: 8 };
+        let (out, stats) = simulate_pool_report(&recs, &cfg, &opts).unwrap();
         assert_eq!(out.instructions, 10);
+        assert_eq!(stats.subtraces, 8);
+    }
+
+    #[test]
+    fn pool_distributes_subtrace_remainder() {
+        // The seed computed (subtraces / workers).max(1) per worker: 12
+        // sub-traces over 8 workers silently became 8. The engine must
+        // create all 12.
+        let (recs, cfg) = records("gcc", 6_000);
+        let (out, stats) = simulate_pool_report(&recs, &cfg, &table_opts(8, 12)).unwrap();
+        assert_eq!(out.instructions, 6_000);
+        assert_eq!(stats.subtraces, 12);
+        // Exact division still works.
+        let (_, stats) = simulate_pool_report(&recs, &cfg, &table_opts(4, 12)).unwrap();
+        assert_eq!(stats.subtraces, 12);
+    }
+
+    #[test]
+    fn pool_shares_one_predictor_across_jobs() {
+        // All shards' slots must flow through the one shared engine:
+        // total batch slots == total instructions, and with an unbounded
+        // target every full round spans every active sub-trace.
+        let (recs, cfg) = records("xz", 4_000);
+        let (out, stats) = simulate_pool_report(&recs, &cfg, &table_opts(4, 16)).unwrap();
+        assert_eq!(stats.slots, out.inferences);
+        assert_eq!(stats.target_batch, 16);
+        assert!(stats.mean_occupancy() > 8.0, "occupancy={}", stats.mean_occupancy());
+    }
+
+    #[test]
+    fn pool_empty_trace_is_ok() {
+        let (_, cfg) = records("xz", 1);
+        let out = simulate_pool(&[], &cfg, &table_opts(4, 8)).unwrap();
+        assert_eq!(out.instructions, 0);
+        assert_eq!(out.cycles, 0);
     }
 }

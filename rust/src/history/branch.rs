@@ -22,7 +22,11 @@ pub trait BranchPredictor: Send {
 }
 
 /// Build a predictor from the config choice.
-pub fn make_predictor(choice: BpChoice, btb_entries: usize, ras_entries: usize) -> Box<dyn BranchPredictor> {
+pub fn make_predictor(
+    choice: BpChoice,
+    btb_entries: usize,
+    ras_entries: usize,
+) -> Box<dyn BranchPredictor> {
     match choice {
         BpChoice::BiMode => Box::new(BiMode::new(10, btb_entries / 2, ras_entries)),
         BpChoice::BiModeLarge => Box::new(BiMode::new(14, btb_entries * 4, ras_entries)),
@@ -421,8 +425,10 @@ mod tests {
     fn ras_predicts_matched_call_ret() {
         let mut bp = BiMode::new(12, 1024, 16);
         // call from 0x100 -> ret to 0x104
-        let call = Inst { pc: 0x100, op: OpClass::Call, target: 0x500, taken: true, ..Default::default() };
-        let ret = Inst { pc: 0x520, op: OpClass::Ret, target: 0x104, taken: true, ..Default::default() };
+        let call =
+            Inst { pc: 0x100, op: OpClass::Call, target: 0x500, taken: true, ..Default::default() };
+        let ret =
+            Inst { pc: 0x520, op: OpClass::Ret, target: 0x104, taken: true, ..Default::default() };
         bp.resolve(&call); // first call: BTB cold -> may mispredict
         bp.resolve(&call);
         let wrong = bp.resolve(&ret);

@@ -22,7 +22,9 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use simnet::coordinator::pool::PoolPredictor;
-use simnet::coordinator::{simulate_parallel, simulate_pool, simulate_sequential, PoolOptions};
+use simnet::coordinator::{
+    simulate_parallel, simulate_pool_report, simulate_sequential, BatchEngine, JobSpec, PoolOptions,
+};
 use simnet::des::{simulate, BpChoice, SimConfig};
 use simnet::reports::{self, attribution, figs, sweeps, table4, PredictorChoice};
 use simnet::trace::{build_dataset, DatasetOptions, TraceReader, TraceRecord, TraceWriter};
@@ -150,7 +152,7 @@ fn print_usage() {
          \x20 gen-dataset  --out data.smd [--benches a,b,c] [--n-per N] [--seq S] [--limit L]\n\
          \x20 simulate-des --bench NAME --n N [--config ...]\n\
          \x20 simulate-ml  --bench NAME --n N [--model c3] [--table] [--subtraces S] [--workers W]\n\
-         \x20              [--trace file.smt] [--artifacts DIR] [--window W]\n\
+         \x20              [--target-batch B] [--trace file.smt] [--artifacts DIR] [--window W]\n\
          \x20 report       table4|fig5|fig6|fig10|attribution [--models a,b] [--n N] [--benches ...]\n\
          \x20 sweep        subtrace-size|subtraces|workers|branch-predictor|l2-size|rob-size [...]\n\
          \x20 list-benches"
@@ -235,7 +237,13 @@ fn cmd_gen_dataset(args: &Args) -> Result<()> {
                 let b = find(name).ok_or_else(|| anyhow!("unknown benchmark {name}"))?;
                 let (recs, _) = reports::des_trace(&rcfg, &b, n_per / mix.len() as u64, 0);
                 total_dups +=
-                    simnet::trace::append_dataset(recs.iter(), &rcfg, &opts, &mut writer, &mut seen)?;
+                    simnet::trace::append_dataset(
+                        recs.iter(),
+                        &rcfg,
+                        &opts,
+                        &mut writer,
+                        &mut seen,
+                    )?;
             }
             println!("  rob={rob}: dataset now {} samples", writer.count());
         }
@@ -293,7 +301,9 @@ fn cmd_simulate_ml(args: &Args) -> Result<()> {
 
     let workers: usize = args.num("workers", 1)?;
     let subtraces: usize = args.num("subtraces", 1)?;
+    let target_batch: usize = args.num("target-batch", 0)?;
     let choice = predictor_from(args, "c3");
+    let mut engine_stats = None;
     let out = if workers > 1 {
         let predictor = match &choice {
             PredictorChoice::Ml { artifacts, model, weights } => PoolPredictor::Ml {
@@ -303,11 +313,19 @@ fn cmd_simulate_ml(args: &Args) -> Result<()> {
             },
             PredictorChoice::Table { seq } => PoolPredictor::Table { seq: *seq },
         };
-        simulate_pool(&recs, &cfg, &PoolOptions { workers, subtraces, predictor, window })?
+        let opts = PoolOptions { workers, subtraces, predictor, window, target_batch };
+        let (out, stats) = simulate_pool_report(&recs, &cfg, &opts)?;
+        engine_stats = Some(stats);
+        out
     } else {
         let mut p = choice.build()?;
         if subtraces > 1 {
-            simulate_parallel(&recs, &cfg, p.as_mut(), subtraces, window)?
+            let mut engine = BatchEngine::new(p.as_mut(), target_batch);
+            let job = JobSpec { records: &recs, cfg: &cfg, subtraces, window, cfg_feature: 0.0 };
+            engine.submit(job);
+            let report = engine.run()?;
+            engine_stats = Some(report.stats.clone());
+            report.merged()
         } else {
             simulate_sequential(&recs, &cfg, p.as_mut(), window)?
         }
@@ -321,6 +339,16 @@ fn cmd_simulate_ml(args: &Args) -> Result<()> {
         simnet::stats::cpi_error(out.cpi(), des_cpi) * 100.0,
         out.mips()
     );
+    if let Some(stats) = engine_stats {
+        println!(
+            "engine: batches={} mean_occupancy={:.1} target_batch={} starved={} subtraces={}",
+            stats.batches,
+            stats.mean_occupancy(),
+            stats.target_batch,
+            stats.starved,
+            stats.subtraces
+        );
+    }
     if window > 0 {
         print!("{}", simnet::stats::render_cpi_series("windows", &out.windows));
     }

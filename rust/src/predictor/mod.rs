@@ -163,7 +163,8 @@ mod tests {
         let mut p = TablePredictor::new(8);
         let mut buf = vec![0.0f32; 8 * NUM_FEATURES];
 
-        let ld = Inst { pc: 0x100, op: OpClass::Load, mem_addr: 0x9000, mem_size: 8, ..Default::default() };
+        let ld =
+            Inst { pc: 0x100, op: OpClass::Load, mem_addr: 0x9000, mem_size: 8, ..Default::default() };
         let h1 = HistoryInfo { fetch_level: 1, data_level: 1, ..Default::default() };
         tracker.encode_input(&ld, &h1, 8, &mut buf);
         let (f1, e1, _) = p.predict(&buf, 1).unwrap()[0];
@@ -181,7 +182,13 @@ mod tests {
         let tracker = ContextTracker::new(&cfg);
         let mut p = TablePredictor::new(4);
         let mut buf = vec![0.0f32; 4 * NUM_FEATURES];
-        let br = Inst { pc: 0x200, op: OpClass::CondBranch, taken: true, target: 0x300, ..Default::default() };
+        let br = Inst {
+            pc: 0x200,
+            op: OpClass::CondBranch,
+            taken: true,
+            target: 0x300,
+            ..Default::default()
+        };
         let h = HistoryInfo { mispredict: true, fetch_level: 1, ..Default::default() };
         tracker.encode_input(&br, &h, 4, &mut buf);
         let (f, _, _) = p.predict(&buf, 1).unwrap()[0];

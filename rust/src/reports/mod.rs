@@ -58,7 +58,12 @@ pub const REFERENCE_SEED: u64 = 1;
 /// Run the DES over a benchmark and collect (records, stats). This is the
 /// ground-truth generator used throughout the reports; results are
 /// deterministic so no caching subtleties arise.
-pub fn des_trace(cfg: &SimConfig, bench: &Benchmark, n: u64, seed: u64) -> (Vec<TraceRecord>, DesStats) {
+pub fn des_trace(
+    cfg: &SimConfig,
+    bench: &Benchmark,
+    n: u64,
+    seed: u64,
+) -> (Vec<TraceRecord>, DesStats) {
     let wl = bench.workload(seed);
     let mut recs = Vec::with_capacity(n as usize);
     let stats = simulate(cfg, wl.stream(), n, |e| recs.push(TraceRecord::from(e)));

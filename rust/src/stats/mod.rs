@@ -139,7 +139,10 @@ pub fn render_cpi_series(name: &str, windows: &[(u64, u64)]) -> String {
         .collect();
     let lo = cpis.iter().cloned().fold(f64::INFINITY, f64::min);
     let hi = cpis.iter().cloned().fold(0.0f64, f64::max);
-    let ticks = ['\u{2581}', '\u{2582}', '\u{2583}', '\u{2584}', '\u{2585}', '\u{2586}', '\u{2587}', '\u{2588}'];
+    let ticks = [
+        '\u{2581}', '\u{2582}', '\u{2583}', '\u{2584}', '\u{2585}', '\u{2586}', '\u{2587}',
+        '\u{2588}',
+    ];
     let spark: String = cpis
         .iter()
         .map(|&c| {

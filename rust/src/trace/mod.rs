@@ -217,7 +217,13 @@ pub struct DatasetOptions {
 
 impl Default for DatasetOptions {
     fn default() -> Self {
-        DatasetOptions { seq_len: 64, dedup: true, limit: 0, mode: ContextMode::SimNet, cfg_feature: 0.0 }
+        DatasetOptions {
+            seq_len: 64,
+            dedup: true,
+            limit: 0,
+            mode: ContextMode::SimNet,
+            cfg_feature: 0.0,
+        }
     }
 }
 
@@ -416,7 +422,13 @@ mod tests {
         let (written, dups) = build_dataset(
             recs.iter(),
             &cfg,
-            &DatasetOptions { seq_len: 16, dedup: true, limit: 0, mode: ContextMode::SimNet, cfg_feature: 0.0 },
+            &DatasetOptions {
+                seq_len: 16,
+                dedup: true,
+                limit: 0,
+                mode: ContextMode::SimNet,
+                cfg_feature: 0.0,
+            },
             &ds_path,
         )
         .unwrap();
@@ -450,7 +462,13 @@ mod tests {
         let (written, _) = build_dataset(
             recs.iter(),
             &cfg,
-            &DatasetOptions { seq_len: 8, dedup: false, limit: 100, mode: ContextMode::SimNet, cfg_feature: 0.0 },
+            &DatasetOptions {
+                seq_len: 8,
+                dedup: false,
+                limit: 100,
+                mode: ContextMode::SimNet,
+                cfg_feature: 0.0,
+            },
             &ds_path,
         )
         .unwrap();

@@ -1,0 +1,142 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate so the
+//! workspace builds with no network access. It implements exactly the
+//! subset SimNet uses: [`Error`], [`Result`], the [`anyhow!`] and
+//! [`bail!`] macros, and the [`Context`] extension trait for `Result`
+//! and `Option`. Context is flattened into the message eagerly instead
+//! of kept as a source chain — good enough for CLI/test diagnostics.
+
+use std::fmt;
+
+/// A string-message error. Context layers are prepended `"{ctx}: {msg}"`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`, which is
+// what keeps this blanket conversion coherent (same trick as real anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Self {
+        Error { msg: err.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or turn `None` into an error.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format_args!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format_args!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built as in [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse().context("bad number")?;
+        if v > 100 {
+            bail!("too big: {v}");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn conversion_and_context() {
+        assert_eq!(parse("7").unwrap(), 7);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("bad number: "), "{e}");
+        let e = parse("101").unwrap_err();
+        assert_eq!(e.to_string(), "too big: 101");
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        let err: std::result::Result<(), std::io::Error> = Err(std::io::Error::other("boom"));
+        let e = err.with_context(|| format!("ctx {}", 1)).unwrap_err();
+        assert_eq!(e.to_string(), "ctx 1: boom");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        assert_eq!(anyhow!("x={}", 3).to_string(), "x=3");
+        let who = "y";
+        assert_eq!(anyhow!("inline {who}").to_string(), "inline y");
+        assert_eq!(anyhow!(String::from("owned")).to_string(), "owned");
+    }
+}
