@@ -1,156 +1,173 @@
-//! Bench: shared dynamic-batching engine throughput and predictor-batch
-//! occupancy (paper §3.3, Figures 8/9).
+//! Bench: pipelined shared-batch engine throughput (paper §3.3, Figures
+//! 8/9) — the encode-threads × target-batch sweep that anchors the repo's
+//! performance trajectory.
 //!
-//! Two sweeps over the TablePredictor backend (artifact-free, so this
-//! always runs):
+//! Runs the multi-job shared [`simnet::coordinator::BatchEngine`] over the
+//! artifact-free TablePredictor backend and reports, per configuration:
+//! MIPS, mean batch occupancy, fill ratio, and the predictor-idle
+//! fraction (share of wall time the predictor spent waiting on feature
+//! encoding — the quantity the pipeline exists to minimize).
 //!
-//! 1. Target-batch-size sweep at fixed concurrency — how the batch cap
-//!    trades batches-per-round against occupancy.
-//! 2. Shared engine vs per-worker pooling at EQUAL total sub-trace
-//!    count — the seed's per-worker batches top out at
-//!    `subtraces / workers` slots, while the shared engine keeps every
-//!    batch full across job boundaries. Occupancy is the metric a real
-//!    accelerator converts into throughput (Figure 9's device scaling).
+//! Flags / env:
+//! * `--quick` (or `SIMNET_BENCH_QUICK=1`) — small trace + trimmed sweep
+//!   for the CI bench-smoke job.
+//! * `--json PATH` — additionally write the results as JSON
+//!   (`BENCH_engine.json` in CI; compared against `bench/baseline.json`
+//!   by `scripts/compare_bench.py`).
+//! * `SIMNET_BENCH_N` — override the instruction count.
 
 mod common;
 
-use std::time::Instant;
+use std::fmt::Write as _;
 
 use simnet::coordinator::pool::PoolPredictor;
-use simnet::coordinator::{
-    simulate_pool_report, BatchEngine, EngineStats, JobSpec, PoolOptions, SimOutcome,
-};
+use simnet::coordinator::{simulate_pool_report, PoolOptions};
 use simnet::des::{simulate, SimConfig};
-use simnet::predictor::TablePredictor;
 use simnet::stats::Table;
 use simnet::trace::TraceRecord;
 use simnet::workload::find;
 
-fn run_shared(
+const JOBS: usize = 8;
+const SUBTRACES: usize = 256;
+
+struct Row {
+    name: String,
+    threads: usize,
+    depth: usize,
+    target: usize,
+    mips: f64,
+    occupancy: f64,
+    fill: f64,
+    idle: f64,
+}
+
+fn run_cfg(
     recs: &[TraceRecord],
     cfg: &SimConfig,
-    workers: usize,
-    subtraces: usize,
-    target_batch: usize,
-) -> (SimOutcome, EngineStats) {
+    target: usize,
+    threads: usize,
+    depth: usize,
+) -> Row {
     let opts = PoolOptions {
-        workers,
-        subtraces,
+        workers: JOBS,
+        subtraces: SUBTRACES,
         predictor: PoolPredictor::Table { seq: 16 },
         window: 0,
-        target_batch,
+        target_batch: target,
+        encode_threads: threads,
+        pipeline_depth: depth,
     };
-    simulate_pool_report(recs, cfg, &opts).expect("shared engine run")
-}
-
-/// The seed's pooling model: one thread per worker, each with a PRIVATE
-/// predictor batching only its own `subtraces / workers` sub-traces.
-fn run_legacy(
-    recs: &[TraceRecord],
-    cfg: &SimConfig,
-    workers: usize,
-    subtraces: usize,
-) -> (u64, f64, EngineStats) {
-    let n = recs.len();
-    let shard = n.div_ceil(workers).max(1);
-    let base = subtraces / workers;
-    let rem = subtraces % workers;
-    let t0 = Instant::now();
-    let results: Vec<(SimOutcome, EngineStats)> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for w in 0..workers {
-            let lo = (w * shard).min(n);
-            let hi = ((w + 1) * shard).min(n);
-            let slice = &recs[lo..hi];
-            let cfg = cfg.clone();
-            let subs = (base + usize::from(w < rem)).max(1);
-            handles.push(scope.spawn(move || {
-                let mut p = TablePredictor::new(16);
-                let mut engine = BatchEngine::new(&mut p, 0);
-                engine.submit(JobSpec {
-                    records: slice,
-                    cfg: &cfg,
-                    subtraces: subs,
-                    window: 0,
-                    cfg_feature: 0.0,
-                });
-                let report = engine.run().expect("legacy shard run");
-                let stats = report.stats.clone();
-                (report.merged(), stats)
-            }));
-        }
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    });
-    let wall = t0.elapsed().as_secs_f64();
-    let mut insts = 0u64;
-    let mut agg = EngineStats::default();
-    for (out, stats) in results {
-        insts += out.instructions;
-        agg.batches += stats.batches;
-        agg.slots += stats.slots;
-        agg.starved += stats.starved;
-        agg.subtraces += stats.subtraces;
-        agg.target_batch = agg.target_batch.max(stats.target_batch);
+    let (out, stats) = simulate_pool_report(recs, cfg, &opts).expect("engine run");
+    let idle = stats.predictor_idle();
+    Row {
+        name: format!("t{threads}_d{depth}_b{target}"),
+        threads,
+        depth,
+        target,
+        mips: out.mips(),
+        occupancy: stats.mean_occupancy(),
+        fill: stats.fill_ratio(),
+        idle,
     }
-    (insts, wall, agg)
 }
 
-fn mips(insts: u64, wall: f64) -> f64 {
-    insts as f64 / wall.max(1e-12) / 1e6
+/// Best serial (threads<=1) and threaded (threads>1) MIPS across rows —
+/// the pair the printed summary, the JSON, and the baseline gate consume.
+fn best_mips(rows: &[Row]) -> (f64, f64) {
+    let serial = rows.iter().filter(|r| r.threads <= 1).map(|r| r.mips).fold(0.0f64, f64::max);
+    let threaded = rows.iter().filter(|r| r.threads > 1).map(|r| r.mips).fold(0.0f64, f64::max);
+    (serial, threaded)
+}
+
+fn write_json(path: &str, n: u64, quick: bool, rows: &[Row]) {
+    let (serial, threaded) = best_mips(rows);
+    let mut s = String::from("{\n");
+    let _ = writeln!(s, "  \"bench\": \"engine\",");
+    let _ = writeln!(s, "  \"n\": {n},");
+    let _ = writeln!(s, "  \"quick\": {quick},");
+    let _ = writeln!(s, "  \"jobs\": {JOBS},");
+    let _ = writeln!(s, "  \"subtraces\": {SUBTRACES},");
+    let _ = writeln!(s, "  \"serial_mips\": {serial:.4},");
+    let _ = writeln!(s, "  \"best_threaded_mips\": {threaded:.4},");
+    let _ = writeln!(s, "  \"threaded_speedup\": {:.4},", threaded / serial.max(1e-12));
+    let _ = writeln!(s, "  \"configs\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(
+            s,
+            "    {{\"name\": \"{}\", \"encode_threads\": {}, \"pipeline_depth\": {}, \
+             \"target_batch\": {}, \"mips\": {:.4}, \"occupancy\": {:.2}, \"fill\": {:.3}, \
+             \"predictor_idle\": {:.3}}}{comma}",
+            r.name, r.threads, r.depth, r.target, r.mips, r.occupancy, r.fill, r.idle
+        );
+    }
+    let _ = writeln!(s, "  ]");
+    s.push_str("}\n");
+    std::fs::write(path, s).expect("write bench json");
+    println!("\nwrote {path}");
 }
 
 fn main() {
-    let n = common::bench_n(120_000);
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let quick = argv.iter().any(|a| a == "--quick")
+        || std::env::var("SIMNET_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
+
+    let n = common::bench_n(if quick { 30_000 } else { 120_000 });
     let cfg = SimConfig::default_o3();
     let b = find("xz").unwrap();
     let mut recs: Vec<TraceRecord> = Vec::new();
     simulate(&cfg, b.workload(1).stream(), n, |e| recs.push(TraceRecord::from(e)));
 
-    common::hr(&format!("engine batch-size sweep ({n} instructions, 8 jobs, 256 sub-traces)"));
-    let mut t = Table::new(&["target_batch", "MIPS", "mean_occupancy", "fill", "starved/batches"]);
-    for target in [8usize, 32, 64, 128, 256] {
-        let (out, stats) = run_shared(&recs, &cfg, 8, 256, target);
-        t.row(vec![
-            target.to_string(),
-            format!("{:.3}", out.mips()),
-            format!("{:.1}", stats.mean_occupancy()),
-            format!("{:.2}", stats.fill_ratio()),
-            format!("{}/{}", stats.starved, stats.batches),
-        ]);
-    }
-    print!("{}", t.render());
+    let threads_list: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    let target_list: &[usize] = if quick { &[64] } else { &[32, 64, 128, 256] };
 
-    common::hr("shared engine vs per-worker pooling (equal total sub-trace count)");
-    let mut t = Table::new(&["workers", "subtraces", "mode", "MIPS", "mean_occupancy"]);
-    let mut all_higher = true;
-    for workers in [2usize, 4, 8] {
-        let total_subs = 256;
-        let (legacy_insts, legacy_wall, legacy_stats) =
-            run_legacy(&recs, &cfg, workers, total_subs);
-        let (shared_out, shared_stats) = run_shared(&recs, &cfg, workers, total_subs, 0);
-        all_higher &= shared_stats.mean_occupancy() > legacy_stats.mean_occupancy();
-        t.row(vec![
-            workers.to_string(),
-            total_subs.to_string(),
-            "per-worker".to_string(),
-            format!("{:.3}", mips(legacy_insts, legacy_wall)),
-            format!("{:.1}", legacy_stats.mean_occupancy()),
-        ]);
-        t.row(vec![
-            workers.to_string(),
-            total_subs.to_string(),
-            "shared".to_string(),
-            format!("{:.3}", shared_out.mips()),
-            format!("{:.1}", shared_stats.mean_occupancy()),
-        ]);
+    common::hr(&format!(
+        "pipelined engine sweep: encode-threads x target-batch \
+         ({n} instructions, {JOBS} jobs, {SUBTRACES} sub-traces)"
+    ));
+    let mut table = Table::new(&[
+        "encode_threads",
+        "pipeline_depth",
+        "target_batch",
+        "MIPS",
+        "mean_occupancy",
+        "fill",
+        "predictor_idle",
+    ]);
+    let mut rows = Vec::new();
+    for &target in target_list {
+        for &threads in threads_list {
+            // Serial runs lockstep (depth 1); threaded runs double-buffer.
+            let depth = if threads > 1 { 2 } else { 1 };
+            let row = run_cfg(&recs, &cfg, target, threads, depth);
+            table.row(vec![
+                row.threads.to_string(),
+                row.depth.to_string(),
+                row.target.to_string(),
+                format!("{:.3}", row.mips),
+                format!("{:.1}", row.occupancy),
+                format!("{:.2}", row.fill),
+                format!("{:.2}", row.idle),
+            ]);
+            rows.push(row);
+        }
     }
-    print!("{}", t.render());
+    print!("{}", table.render());
+
+    let (serial, threaded) = best_mips(&rows);
     println!(
-        "shared engine sustains higher mean batch occupancy at every point: {}",
-        if all_higher { "YES" } else { "NO" }
+        "\nserial {serial:.3} MIPS vs best threaded {threaded:.3} MIPS \
+         ({:.2}x) — pipelined beats serial: {}",
+        threaded / serial.max(1e-12),
+        if threaded > serial { "YES" } else { "NO" }
     );
-    println!(
-        "(per-worker MIPS benefits from thread parallelism of the cheap table predictor; on a \
-         real accelerator, batch occupancy is what converts to throughput)"
-    );
+
+    if let Some(path) = json_path {
+        write_json(&path, n, quick, &rows);
+    }
 }

@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", t.render());
 
-    println!("\n=== shared-engine scaling (256 sub-traces per job) ===");
+    println!("\n=== shared-engine scaling (256 sub-traces per job, 4 encode threads) ===");
     let pool_pred = if have_artifacts {
         PoolPredictor::Ml { artifacts: artifacts.to_path_buf(), model: "c3".into(), weights: None }
     } else {
@@ -53,7 +53,11 @@ fn main() -> anyhow::Result<()> {
             subtraces: 256 * w,
             predictor: pool_pred.clone(),
             window: 0,
-            target_batch: 0,
+            // A bounded target gives several batches per round, which is
+            // what lets pipeline_depth 2 overlap encode with predict.
+            target_batch: 128,
+            encode_threads: 4,
+            pipeline_depth: 2,
         };
         let (out, stats) = simulate_pool_report(&recs, &cfg, &opts)?;
         t.row(vec![

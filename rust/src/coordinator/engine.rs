@@ -1,4 +1,5 @@
-//! Shared dynamic-batching simulation engine (paper §3.3, Figures 4/9).
+//! Shared dynamic-batching simulation engine (paper §3.3, Figures 4/9),
+//! pipelined across encode workers.
 //!
 //! SimNet's throughput comes entirely from turning the inherently
 //! sequential prediction chain into accelerator-sized batches: §3.3
@@ -28,10 +29,32 @@
 //! submission order, chunked to the target batch size, predicted, and
 //! scattered back. Total cycles per job remain the sum of its sub-trace
 //! `curTick`s plus drain (Eq. 1), exactly as in [`super::parallel`].
+//!
+//! # Pipelining
+//!
+//! The paper overlaps CPU-side feature preparation with accelerator
+//! inference so the predictor never waits on encoding. With
+//! [`EngineOptions::encode_threads`] > 1 the engine runs the same
+//! schedule on a pool of encode workers: sub-traces are sharded
+//! round-robin over workers (worker `w` owns global sub-trace `g` iff
+//! `g % workers == w`), and each worker both *encodes* its slots of
+//! every batch and *scatters* the predictions back into its own context
+//! trackers — no sub-trace is ever shared between threads. The caller
+//! thread only runs the predictor and orchestrates. With
+//! [`EngineOptions::pipeline_depth`] ≥ 2 the batch buffers are
+//! double-buffered (ring of `depth` buffers), so encoding of batch *k+1*
+//! overlaps prediction of batch *k* whenever the two batches touch
+//! disjoint sub-traces; a round-boundary frontier gate withholds encode
+//! commands that would race a pending scatter, which keeps the pipelined
+//! schedule *byte-identical* to the serial one (same batches, same
+//! predictions, same cycle counts, same occupancy statistics).
 
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::des::SimConfig;
 use crate::features::{ContextTracker, NUM_FEATURES};
@@ -54,6 +77,27 @@ pub struct JobSpec<'a> {
     pub cfg_feature: f32,
 }
 
+/// Execution knobs for [`BatchEngine`] (CLI: `--target-batch`,
+/// `--encode-threads`, `--pipeline-depth`).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOptions {
+    /// Target predictor-batch size (0 = all active sub-traces per batch).
+    pub target_batch: usize,
+    /// Encode/scatter worker threads (≤1 = serial in the caller thread).
+    pub encode_threads: usize,
+    /// Batch buffers in flight: 1 runs encode → predict in lockstep, ≥2
+    /// overlaps encoding of batch k+1 with prediction of batch k.
+    pub pipeline_depth: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        // Depth 2 = double-buffering, the documented default; it only
+        // takes effect once encode_threads > 1 (serial runs force 1).
+        EngineOptions { target_batch: 0, encode_threads: 1, pipeline_depth: 2 }
+    }
+}
+
 /// Per-run predictor-batch statistics.
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
@@ -68,6 +112,15 @@ pub struct EngineStats {
     pub starved: u64,
     /// Sub-traces created across all jobs.
     pub subtraces: u64,
+    /// Encode/scatter worker threads the run used (1 = serial loop).
+    pub encode_threads: usize,
+    /// Batch buffers in flight (1 = no encode/predict overlap).
+    pub pipeline_depth: usize,
+    /// Wall seconds spent inside `LatencyPredictor::predict` calls.
+    pub predict_seconds: f64,
+    /// Wall seconds of the engine run itself (excludes predictor
+    /// construction / artifact load, unlike a pool's reported wall time).
+    pub engine_seconds: f64,
 }
 
 impl EngineStats {
@@ -86,6 +139,18 @@ impl EngineStats {
             0.0
         } else {
             self.mean_occupancy() / self.target_batch as f64
+        }
+    }
+
+    /// Fraction of the engine's own wall time the predictor spent *not*
+    /// predicting (waiting on encode, scatter, and orchestration) — the
+    /// quantity the pipeline exists to minimize. Measured against
+    /// `engine_seconds`, so predictor construction does not count as idle.
+    pub fn predictor_idle(&self) -> f64 {
+        if self.engine_seconds <= 0.0 {
+            0.0
+        } else {
+            (1.0 - self.predict_seconds / self.engine_seconds).clamp(0.0, 1.0)
         }
     }
 }
@@ -114,6 +179,11 @@ impl EngineReport {
         merged.wall_seconds = wall;
         merged
     }
+
+    /// [`EngineStats::predictor_idle`] of this report's engine run.
+    pub fn predictor_idle_fraction(&self) -> f64 {
+        self.stats.predictor_idle()
+    }
 }
 
 struct SubTrace<'a> {
@@ -123,165 +193,546 @@ struct SubTrace<'a> {
     windows: Vec<(u64, u64)>,
     window_insts: u64,
     window_start: u64,
-}
-
-struct JobState<'a> {
-    subs: Vec<SubTrace<'a>>,
+    /// CPI window length in instructions (0 = none), from the job spec.
     window: u64,
-    outcome: SimOutcome,
+    /// Owning job index (for outcome reassembly).
+    job: usize,
 }
 
 /// Multi-job shared-batch simulation engine. Construct with a predictor
 /// and a target batch size (0 = one batch per round over every active
-/// sub-trace), [`submit`](Self::submit) any number of jobs, then
-/// [`run`](Self::run).
+/// sub-trace) — or [`with_options`](Self::with_options) for the pipelined
+/// multi-threaded configuration — then [`submit`](Self::submit) any
+/// number of jobs and [`run`](Self::run).
 pub struct BatchEngine<'a, 'p> {
     predictor: &'p mut dyn LatencyPredictor,
-    target_batch: usize,
+    opts: EngineOptions,
     seq: usize,
     width: usize,
-    jobs: Vec<JobState<'a>>,
+    subs: Vec<SubTrace<'a>>,
+    n_jobs: usize,
 }
 
 impl<'a, 'p> BatchEngine<'a, 'p> {
     pub fn new(predictor: &'p mut dyn LatencyPredictor, target_batch: usize) -> Self {
+        Self::with_options(predictor, EngineOptions { target_batch, ..EngineOptions::default() })
+    }
+
+    /// Construct with full execution options (threads + pipeline depth).
+    pub fn with_options(predictor: &'p mut dyn LatencyPredictor, opts: EngineOptions) -> Self {
         let seq = predictor.seq_len();
-        BatchEngine { predictor, target_batch, seq, width: seq * NUM_FEATURES, jobs: Vec::new() }
+        BatchEngine { predictor, opts, seq, width: seq * NUM_FEATURES, subs: Vec::new(), n_jobs: 0 }
     }
 
     /// Queue a job; returns its index into [`EngineReport::jobs`].
     pub fn submit(&mut self, spec: JobSpec<'a>) -> usize {
+        let job = self.n_jobs;
+        self.n_jobs += 1;
         let n = spec.records.len();
-        let mode = self.predictor.context_mode();
-        let subs: Vec<SubTrace<'a>> = if n == 0 {
-            Vec::new()
-        } else {
+        if n > 0 {
+            let mode = self.predictor.context_mode();
             let s = spec.subtraces.clamp(1, n);
             let chunk = n.div_ceil(s);
-            spec.records
-                .chunks(chunk)
-                .map(|c| {
-                    let mut tracker = ContextTracker::with_mode(spec.cfg, mode);
-                    tracker.cfg_feature = spec.cfg_feature;
-                    SubTrace {
-                        records: c,
-                        pos: 0,
-                        tracker,
-                        windows: Vec::new(),
-                        window_insts: 0,
-                        window_start: 0,
-                    }
-                })
-                .collect()
-        };
-        self.jobs.push(JobState { subs, window: spec.window, outcome: SimOutcome::default() });
-        self.jobs.len() - 1
+            for c in spec.records.chunks(chunk) {
+                let mut tracker = ContextTracker::with_mode(spec.cfg, mode);
+                tracker.cfg_feature = spec.cfg_feature;
+                self.subs.push(SubTrace {
+                    records: c,
+                    pos: 0,
+                    tracker,
+                    windows: Vec::new(),
+                    window_insts: 0,
+                    window_start: 0,
+                    window: spec.window,
+                    job,
+                });
+            }
+        }
+        job
     }
 
     /// Number of jobs queued so far.
     pub fn job_count(&self) -> usize {
-        self.jobs.len()
+        self.n_jobs
     }
 
     /// Drive every queued job to completion, multiplexing all active
     /// sub-traces into shared predictor batches.
-    pub fn run(mut self) -> Result<EngineReport> {
-        let mut active: Vec<(usize, usize)> = Vec::new();
-        for (ji, job) in self.jobs.iter().enumerate() {
-            for si in 0..job.subs.len() {
-                active.push((ji, si));
-            }
-        }
+    pub fn run(self) -> Result<EngineReport> {
+        let BatchEngine { predictor, opts, seq, width, mut subs, n_jobs } = self;
+        let total = subs.len();
         // Clamp to the active sub-trace count: a batch can never hold
-        // more slots than sub-traces, and the gather buffer is sized by
+        // more slots than sub-traces, and the gather buffers are sized by
         // this (an unclamped huge --target-batch must not OOM).
-        let cap = if self.target_batch == 0 {
-            active.len().max(1)
+        let cap = if opts.target_batch == 0 {
+            total.max(1)
         } else {
-            self.target_batch.min(active.len()).max(1)
+            opts.target_batch.min(total).max(1)
         };
+        let threads = opts.encode_threads.max(1).min(total.max(1));
+        let depth = if threads <= 1 { 1 } else { opts.pipeline_depth.max(1) };
         let mut stats = EngineStats {
             target_batch: cap,
-            subtraces: active.len() as u64,
+            subtraces: total as u64,
+            encode_threads: threads,
+            pipeline_depth: depth,
             ..EngineStats::default()
         };
-        let mut batch = vec![0.0f32; cap * self.width];
         let t0 = Instant::now();
+        if threads <= 1 {
+            serial_loop(predictor, &mut subs, cap, seq, width, &mut stats)?;
+        } else {
+            let pcfg = PipelineCfg { cap, threads, depth, seq, width };
+            subs = pipelined_loop(predictor, subs, &pcfg, &mut stats)?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        stats.engine_seconds = wall;
 
-        while !active.is_empty() {
-            // One round advances every active sub-trace by one
-            // instruction, in chunks of at most `cap` slots.
-            let mut base = 0;
-            while base < active.len() {
-                let take = cap.min(active.len() - base);
-                // Gather: encode the next instruction of each slot.
-                for k in 0..take {
-                    let (ji, si) = active[base + k];
-                    let sub = &self.jobs[ji].subs[si];
-                    let rec = &sub.records[sub.pos];
-                    sub.tracker.encode_input(
-                        &rec.inst,
-                        &rec.hist,
-                        self.seq,
-                        &mut batch[k * self.width..(k + 1) * self.width],
-                    );
+        // Per paper §3.3: each job's total time is the sum of its
+        // sub-trace curTicks (post-drain); windows concatenate in
+        // original trace order, which is submission order here.
+        let mut jobs = vec![SimOutcome::default(); n_jobs];
+        for sub in &mut subs {
+            let out = &mut jobs[sub.job];
+            out.instructions += sub.pos as u64;
+            out.cycles += sub.tracker.cur_tick;
+            out.windows.extend(sub.windows.drain(..));
+        }
+        for out in &mut jobs {
+            out.inferences = out.instructions;
+            out.wall_seconds = wall;
+        }
+        Ok(EngineReport { jobs, stats, wall_seconds: wall })
+    }
+}
+
+/// Apply one prediction to its sub-trace: push into the context tracker,
+/// advance the cursor, and roll the CPI window. Identical on the serial
+/// and pipelined paths — this is the only place latencies enter a job.
+fn scatter_one(sub: &mut SubTrace<'_>, pred: (u32, u32, u32)) {
+    let rec = &sub.records[sub.pos];
+    let (f, e, s_lat) = pred;
+    let s_lat = if rec.inst.is_store() { s_lat.max(e + 1) } else { 0 };
+    sub.tracker.push(&rec.inst, &rec.hist, f, e.max(1), s_lat);
+    sub.pos += 1;
+    sub.window_insts += 1;
+    if sub.window > 0 && sub.window_insts == sub.window {
+        let cyc = sub.tracker.cur_tick - sub.window_start;
+        sub.windows.push((sub.window_insts, cyc));
+        sub.window_start = sub.tracker.cur_tick;
+        sub.window_insts = 0;
+    }
+}
+
+/// Flush the trailing partial CPI window and drain the machine.
+fn finish_sub(sub: &mut SubTrace<'_>) {
+    if sub.window > 0 && sub.window_insts > 0 {
+        sub.windows.push((sub.window_insts, sub.tracker.cur_tick - sub.window_start));
+    }
+    sub.tracker.drain();
+}
+
+/// The single-threaded engine loop: gather → predict → scatter, one
+/// chunk of at most `cap` slots at a time.
+fn serial_loop(
+    predictor: &mut dyn LatencyPredictor,
+    subs: &mut [SubTrace<'_>],
+    cap: usize,
+    seq: usize,
+    width: usize,
+    stats: &mut EngineStats,
+) -> Result<()> {
+    let mut active: Vec<usize> = (0..subs.len()).filter(|&i| !subs[i].records.is_empty()).collect();
+    let mut batch = vec![0.0f32; cap * width];
+    while !active.is_empty() {
+        // One round advances every active sub-trace by one instruction,
+        // in chunks of at most `cap` slots.
+        let mut base = 0;
+        while base < active.len() {
+            let take = cap.min(active.len() - base);
+            // Gather: encode the next instruction of each slot.
+            for k in 0..take {
+                let sub = &subs[active[base + k]];
+                let rec = &sub.records[sub.pos];
+                sub.tracker.encode_input(
+                    &rec.inst,
+                    &rec.hist,
+                    seq,
+                    &mut batch[k * width..(k + 1) * width],
+                );
+            }
+            // One shared inference across jobs and sub-traces.
+            let t = Instant::now();
+            let preds = predictor.predict(&batch[..take * width], take)?;
+            stats.predict_seconds += t.elapsed().as_secs_f64();
+            stats.batches += 1;
+            stats.slots += take as u64;
+            if take < cap {
+                stats.starved += 1;
+            }
+            // Scatter: demux predictions back to each slot's sub-trace.
+            for k in 0..take {
+                scatter_one(&mut subs[active[base + k]], preds[k]);
+            }
+            base += take;
+        }
+        active.retain(|&i| subs[i].pos < subs[i].records.len());
+    }
+    for sub in subs.iter_mut() {
+        finish_sub(sub);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Pipelined multi-threaded loop
+// ---------------------------------------------------------------------
+
+/// Effective pipeline configuration (post-clamping).
+struct PipelineCfg {
+    cap: usize,
+    threads: usize,
+    depth: usize,
+    seq: usize,
+    width: usize,
+}
+
+/// One predictor batch in the precomputed schedule: `take` slots starting
+/// at rank `base` of round `round`'s active list.
+#[derive(Clone, Copy)]
+struct ChunkDesc {
+    round: usize,
+    base: usize,
+    take: usize,
+    round_last: bool,
+}
+
+/// Commands the coordinator sends to every encode worker (FIFO per
+/// worker; workers act only on the slots whose sub-traces they own).
+enum Cmd {
+    /// Encode chunk `q` into buffer `q % depth`.
+    Encode { q: usize },
+    /// Apply chunk `q`'s predictions to the owned sub-traces.
+    Scatter { q: usize, preds: Arc<Vec<(u32, u32, u32)>> },
+    /// Flush windows, drain trackers, and return the sub-traces.
+    Finish,
+}
+
+/// Raw pointer to a batch buffer, shared with the encode workers.
+///
+/// SAFETY: slot ownership partitions every batch (worker `w` writes only
+/// slots of sub-traces with `g % workers == w`), the coordinator reads a
+/// buffer only after all workers acknowledged encoding its chunk, and a
+/// buffer is reused for chunk `q` only after chunk `q - depth` was
+/// predicted. The backing allocations outlive the thread scope.
+#[derive(Clone, Copy)]
+struct BufPtr(*mut f32);
+
+unsafe impl Send for BufPtr {}
+unsafe impl Sync for BufPtr {}
+
+/// One run of consecutive rounds whose active count (and therefore chunk
+/// structure) is constant.
+struct Segment {
+    /// Index of the segment's first chunk in the global schedule.
+    first_chunk: usize,
+    first_round: usize,
+    /// Active sub-traces throughout the segment.
+    active: usize,
+    chunks_per_round: usize,
+}
+
+/// The deterministic batch schedule in O(#sub-traces) memory. Every
+/// sub-trace advances exactly one instruction per round, so round `r`'s
+/// active list is "every sub-trace with more than `r` records, in
+/// submission order" and the chunking mirrors [`serial_loop`] exactly.
+/// The active count only drops at the (sorted) distinct sub-trace
+/// lengths, so the schedule is a handful of constant-shape [`Segment`]s
+/// and per-chunk descriptors are computed on demand — nothing is
+/// materialized per round or per batch.
+struct Schedule {
+    cap: usize,
+    segments: Vec<Segment>,
+    total_chunks: usize,
+}
+
+impl Schedule {
+    fn plan(lens: &[usize], cap: usize) -> Schedule {
+        let mut sorted: Vec<usize> = lens.iter().copied().filter(|&l| l > 0).collect();
+        sorted.sort_unstable();
+        let n = sorted.len();
+        let mut segments = Vec::new();
+        let mut first_chunk = 0usize;
+        let mut round = 0usize;
+        let mut i = 0usize;
+        while i < n {
+            // lens[i..] are all still active; the segment runs until the
+            // smallest live length expires.
+            let active = n - i;
+            let seg_end = sorted[i];
+            let chunks_per_round = active.div_ceil(cap);
+            segments.push(Segment { first_chunk, first_round: round, active, chunks_per_round });
+            first_chunk += (seg_end - round) * chunks_per_round;
+            round = seg_end;
+            while i < n && sorted[i] == seg_end {
+                i += 1;
+            }
+        }
+        Schedule { cap, segments, total_chunks: first_chunk }
+    }
+
+    /// Descriptor of chunk `q` (requires `q < total_chunks`).
+    fn desc(&self, q: usize) -> ChunkDesc {
+        let si = self.segments.partition_point(|s| s.first_chunk <= q) - 1;
+        let s = &self.segments[si];
+        let idx = q - s.first_chunk;
+        let round = s.first_round + idx / s.chunks_per_round;
+        let k = idx % s.chunks_per_round;
+        let base = k * self.cap;
+        ChunkDesc {
+            round,
+            base,
+            take: self.cap.min(s.active - base),
+            round_last: k + 1 == s.chunks_per_round,
+        }
+    }
+}
+
+/// Sends a sentinel ack if the worker unwinds, so the coordinator turns a
+/// worker panic into an error (and the scope re-raises the panic at join)
+/// instead of waiting forever for an ack that will never come.
+struct PanicSentinel {
+    tx: mpsc::Sender<usize>,
+    armed: bool,
+}
+
+impl Drop for PanicSentinel {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = self.tx.send(usize::MAX);
+        }
+    }
+}
+
+/// Per-worker state moved into an encode thread.
+struct WorkerCtx<'a> {
+    /// This worker's index (owns sub-trace `g` iff `g % workers == w`).
+    w: usize,
+    workers: usize,
+    /// Owned sub-traces, in increasing global-index order (local = g / workers).
+    subs: Vec<SubTrace<'a>>,
+    rx: mpsc::Receiver<Cmd>,
+    done_tx: mpsc::Sender<usize>,
+    sched: Arc<Schedule>,
+    /// Record count of EVERY sub-trace (global order) — each worker
+    /// replays the global active list from these to find its slots.
+    lens: Arc<Vec<usize>>,
+    bufs: Vec<BufPtr>,
+    depth: usize,
+    seq: usize,
+    width: usize,
+}
+
+fn encode_worker<'a>(mut cx: WorkerCtx<'a>) -> (usize, Vec<SubTrace<'a>>) {
+    let mut sentinel = PanicSentinel { tx: cx.done_tx.clone(), armed: true };
+    let mut cur_round = 0usize;
+    let mut active: Vec<usize> = (0..cx.lens.len()).filter(|&g| cx.lens[g] > 0).collect();
+    while let Ok(cmd) = cx.rx.recv() {
+        match cmd {
+            Cmd::Encode { q } => {
+                let d = cx.sched.desc(q);
+                // Advance the replicated active list to the chunk's round
+                // (command order guarantees rounds arrive non-decreasing,
+                // and never before the previous round's scatter).
+                while cur_round < d.round {
+                    cur_round += 1;
+                    let r = cur_round;
+                    let lens = &cx.lens;
+                    active.retain(|&g| lens[g] > r);
                 }
-                // One shared inference across jobs and sub-traces.
-                let preds = self.predictor.predict(&batch[..take * self.width], take)?;
-                stats.batches += 1;
-                stats.slots += take as u64;
-                if take < cap {
-                    stats.starved += 1;
-                }
-                // Scatter: demux predictions back to each slot's job.
-                for k in 0..take {
-                    let (ji, si) = active[base + k];
-                    let job = &mut self.jobs[ji];
-                    let window = job.window;
-                    job.outcome.instructions += 1;
-                    let sub = &mut job.subs[si];
-                    let rec = &sub.records[sub.pos];
-                    let (f, e, s_lat) = preds[k];
-                    let s_lat = if rec.inst.is_store() { s_lat.max(e + 1) } else { 0 };
-                    sub.tracker.push(&rec.inst, &rec.hist, f, e.max(1), s_lat);
-                    sub.pos += 1;
-                    sub.window_insts += 1;
-                    if window > 0 && sub.window_insts == window {
-                        let cyc = sub.tracker.cur_tick - sub.window_start;
-                        sub.windows.push((sub.window_insts, cyc));
-                        sub.window_start = sub.tracker.cur_tick;
-                        sub.window_insts = 0;
+                let buf = cx.bufs[q % cx.depth];
+                for s in d.base..d.base + d.take {
+                    let g = active[s];
+                    if g % cx.workers == cx.w {
+                        let sub = &cx.subs[g / cx.workers];
+                        let rec = &sub.records[sub.pos];
+                        // SAFETY: see [`BufPtr`] — this worker exclusively
+                        // owns slot `s` of this chunk, and the protocol
+                        // serializes buffer reuse and the coordinator read.
+                        let out = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                buf.0.add((s - d.base) * cx.width),
+                                cx.width,
+                            )
+                        };
+                        sub.tracker.encode_input(&rec.inst, &rec.hist, cx.seq, out);
                     }
                 }
-                base += take;
-            }
-            active.retain(|&(ji, si)| {
-                let sub = &self.jobs[ji].subs[si];
-                sub.pos < sub.records.len()
-            });
-        }
-
-        let wall = t0.elapsed().as_secs_f64();
-        for job in &mut self.jobs {
-            for sub in &mut job.subs {
-                if job.window > 0 && sub.window_insts > 0 {
-                    sub.windows.push((sub.window_insts, sub.tracker.cur_tick - sub.window_start));
+                // Coordinator may be gone on an error path; just exit then.
+                if cx.done_tx.send(q).is_err() {
+                    break;
                 }
-                sub.tracker.drain();
-                // Per paper §3.3: total time is the sum of sub-trace
-                // curTicks; windows concatenate in original trace order.
-                job.outcome.cycles += sub.tracker.cur_tick;
-                job.outcome.windows.extend(sub.windows.drain(..));
             }
-            job.outcome.inferences = job.outcome.instructions;
-            job.outcome.wall_seconds = wall;
+            Cmd::Scatter { q, preds } => {
+                let d = cx.sched.desc(q);
+                for s in d.base..d.base + d.take {
+                    let g = active[s];
+                    if g % cx.workers == cx.w {
+                        scatter_one(&mut cx.subs[g / cx.workers], preds[s - d.base]);
+                    }
+                }
+            }
+            Cmd::Finish => {
+                for sub in cx.subs.iter_mut() {
+                    finish_sub(sub);
+                }
+                break;
+            }
         }
-        Ok(EngineReport {
-            jobs: self.jobs.into_iter().map(|j| j.outcome).collect(),
-            stats,
-            wall_seconds: wall,
-        })
     }
+    // A recv error means the coordinator bailed early; return the
+    // sub-traces as-is — the caller is about to discard them.
+    sentinel.armed = false;
+    (cx.w, cx.subs)
+}
+
+/// The pipelined engine loop. Runs the exact schedule of [`serial_loop`]
+/// on `threads` encode/scatter workers with a ring of `depth` batch
+/// buffers; the caller thread runs the predictor. Returns the sub-traces
+/// in their original submission order.
+fn pipelined_loop<'a>(
+    predictor: &mut dyn LatencyPredictor,
+    subs: Vec<SubTrace<'a>>,
+    pcfg: &PipelineCfg,
+    stats: &mut EngineStats,
+) -> Result<Vec<SubTrace<'a>>> {
+    let (cap, workers) = (pcfg.cap, pcfg.threads);
+    let (seq, width) = (pcfg.seq, pcfg.width);
+    let total = subs.len();
+    let lens: Arc<Vec<usize>> = Arc::new(subs.iter().map(|s| s.records.len()).collect());
+    let sched = Arc::new(Schedule::plan(&lens, cap));
+    let n_chunks = sched.total_chunks;
+    if n_chunks == 0 {
+        return Ok(subs);
+    }
+    // Buffers beyond the chunk count can never be in flight; clamping
+    // keeps the ring allocation bounded against a huge --pipeline-depth
+    // (mirrors the target-batch clamp in `run`).
+    let depth = pcfg.depth.min(n_chunks).max(1);
+    stats.pipeline_depth = depth;
+
+    // Shard sub-trace ownership round-robin over the workers. Each worker
+    // does all encoding AND scattering for its own sub-traces, so no
+    // tracker is ever touched by two threads.
+    let mut worker_subs: Vec<Vec<SubTrace<'a>>> = (0..workers).map(|_| Vec::new()).collect();
+    for (g, sub) in subs.into_iter().enumerate() {
+        worker_subs[g % workers].push(sub);
+    }
+
+    let mut buf_store: Vec<Vec<f32>> = (0..depth).map(|_| vec![0.0f32; cap * width]).collect();
+    let buf_ptrs: Vec<BufPtr> = buf_store.iter_mut().map(|b| BufPtr(b.as_mut_ptr())).collect();
+
+    let collected = thread::scope(|scope| -> Result<Vec<(usize, Vec<SubTrace<'a>>)>> {
+        let (done_tx, done_rx) = mpsc::channel::<usize>();
+        let mut cmd_txs: Vec<mpsc::Sender<Cmd>> = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for (w, mine) in worker_subs.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<Cmd>();
+            cmd_txs.push(tx);
+            let cx = WorkerCtx {
+                w,
+                workers,
+                subs: mine,
+                rx,
+                done_tx: done_tx.clone(),
+                sched: Arc::clone(&sched),
+                lens: Arc::clone(&lens),
+                bufs: buf_ptrs.clone(),
+                depth,
+                seq,
+                width,
+            };
+            handles.push(scope.spawn(move || encode_worker(cx)));
+        }
+        // Workers hold the only done senders: a dying worker surfaces as a
+        // recv error instead of a hang.
+        drop(done_tx);
+
+        // Ack counters for the in-flight chunk window [p, p + depth - 1]
+        // (distinct mod depth); each slot is reset as its wait completes.
+        let mut done = vec![0u32; depth];
+        let mut issued = 0usize;
+        // Rounds `< frontier + 1` have had every scatter command sent, so
+        // encode commands for rounds `<= frontier` cannot race a pending
+        // scatter on any worker (per-worker FIFO does the rest). This gate
+        // is what keeps the pipeline byte-identical to the serial loop.
+        let mut frontier = 0usize;
+        for p in 0..n_chunks {
+            // Issue encodes ahead, up to the buffer ring and the frontier.
+            while issued < n_chunks
+                && issued <= p + depth - 1
+                && sched.desc(issued).round <= frontier
+            {
+                for tx in &cmd_txs {
+                    tx.send(Cmd::Encode { q: issued })
+                        .map_err(|_| anyhow!("encode worker exited early"))?;
+                }
+                issued += 1;
+            }
+            // Predictor-idle time: waiting for the encode acks.
+            while done[p % depth] < workers as u32 {
+                let q = done_rx.recv().map_err(|_| anyhow!("encode worker exited early"))?;
+                if q == usize::MAX {
+                    // A worker's panic sentinel: bail out; the scope's join
+                    // re-raises the panic itself.
+                    return Err(anyhow!("encode worker panicked"));
+                }
+                done[q % depth] += 1;
+            }
+            done[p % depth] = 0;
+            let d = sched.desc(p);
+            // SAFETY: see [`BufPtr`] — every worker acknowledged chunk p,
+            // and no unpredicted chunk maps to this buffer.
+            let input = unsafe {
+                std::slice::from_raw_parts(buf_ptrs[p % depth].0.cast_const(), d.take * width)
+            };
+            let t = Instant::now();
+            let preds = predictor.predict(input, d.take)?;
+            stats.predict_seconds += t.elapsed().as_secs_f64();
+            stats.batches += 1;
+            stats.slots += d.take as u64;
+            if d.take < cap {
+                stats.starved += 1;
+            }
+            let preds = Arc::new(preds);
+            for tx in &cmd_txs {
+                tx.send(Cmd::Scatter { q: p, preds: Arc::clone(&preds) })
+                    .map_err(|_| anyhow!("encode worker exited early"))?;
+            }
+            if d.round_last {
+                frontier = d.round + 1;
+            }
+        }
+        for tx in &cmd_txs {
+            tx.send(Cmd::Finish).map_err(|_| anyhow!("encode worker exited early"))?;
+        }
+        let mut collected = Vec::with_capacity(workers);
+        for h in handles {
+            collected.push(h.join().expect("encode worker panicked"));
+        }
+        Ok(collected)
+    })?;
+    drop(buf_ptrs);
+    drop(buf_store);
+
+    // Reassemble global submission order (g = local * workers + w).
+    let mut out: Vec<Option<SubTrace<'a>>> = (0..total).map(|_| None).collect();
+    for (w, mine) in collected {
+        for (local, sub) in mine.into_iter().enumerate() {
+            out[local * workers + w] = Some(sub);
+        }
+    }
+    Ok(out.into_iter().map(|s| s.expect("sub-trace lost in pipeline")).collect())
 }
 
 #[cfg(test)]
@@ -413,5 +864,89 @@ mod tests {
         assert_eq!(merged.inferences, 3_000);
         let w: u64 = merged.windows.iter().map(|(n, _)| n).sum();
         assert_eq!(w, 3_000);
+    }
+
+    /// Acceptance criterion of the pipeline refactor: with ≥4 encode
+    /// threads the engine must be *byte-identical* to the serial loop —
+    /// cycles, windows, instruction counts, AND the occupancy stats.
+    #[test]
+    fn pipelined_engine_matches_serial_exactly() {
+        let cfg = SimConfig::default_o3();
+        let a = make_records("gcc", 6_000);
+        let b = make_records("leela", 4_000);
+        // target 0 = one chunk per round (no cross-chunk overlap possible);
+        // target 4 = multiple chunks per round, exercising the
+        // double-buffered encode-ahead path and the round-frontier gate.
+        for target in [0usize, 4] {
+            let mut p1 = TablePredictor::new(16);
+            let mut serial = BatchEngine::new(&mut p1, target);
+            serial.submit(job(&a, &cfg, 5));
+            serial.submit(job(&b, &cfg, 4));
+            let r1 = serial.run().unwrap();
+            for (threads, depth) in [(4usize, 2usize), (2, 3), (8, 1)] {
+                let mut p2 = TablePredictor::new(16);
+                let opts = EngineOptions {
+                    target_batch: target,
+                    encode_threads: threads,
+                    pipeline_depth: depth,
+                };
+                let mut piped = BatchEngine::with_options(&mut p2, opts);
+                piped.submit(job(&a, &cfg, 5));
+                piped.submit(job(&b, &cfg, 4));
+                let r2 = piped.run().unwrap();
+                assert_eq!(r1.jobs.len(), r2.jobs.len());
+                for (j1, j2) in r1.jobs.iter().zip(&r2.jobs) {
+                    assert_eq!(j1.instructions, j2.instructions, "t{threads} d{depth}");
+                    assert_eq!(j1.cycles, j2.cycles, "t{threads} d{depth}");
+                    assert_eq!(j1.windows, j2.windows, "t{threads} d{depth}");
+                }
+                assert_eq!(r1.stats.batches, r2.stats.batches);
+                assert_eq!(r1.stats.slots, r2.stats.slots);
+                assert_eq!(r1.stats.starved, r2.stats.starved);
+                assert_eq!(r1.stats.target_batch, r2.stats.target_batch);
+                assert_eq!(p1.served(), p2.served());
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_engine_handles_empty_and_tiny_jobs() {
+        let cfg = SimConfig::default_o3();
+        let recs = make_records("xz", 120);
+        // More threads than sub-traces, deeper ring than chunks.
+        let mut p = TablePredictor::new(8);
+        let opts = EngineOptions { target_batch: 2, encode_threads: 16, pipeline_depth: 8 };
+        let mut engine = BatchEngine::with_options(&mut p, opts);
+        engine.submit(job(&[], &cfg, 4));
+        engine.submit(job(&recs, &cfg, 3));
+        let report = engine.run().unwrap();
+        assert_eq!(report.jobs[0].instructions, 0);
+        assert_eq!(report.jobs[1].instructions, 120);
+        assert_eq!(report.stats.slots, 120);
+        // Threads clamp to the sub-trace count (3 here).
+        assert_eq!(report.stats.encode_threads, 3);
+        let mut p2 = TablePredictor::new(8);
+        let mut serial = BatchEngine::new(&mut p2, 2);
+        serial.submit(job(&[], &cfg, 4));
+        serial.submit(job(&recs, &cfg, 3));
+        let r2 = serial.run().unwrap();
+        assert_eq!(report.jobs[1].cycles, r2.jobs[1].cycles);
+        assert_eq!(report.jobs[1].windows, r2.jobs[1].windows);
+    }
+
+    #[test]
+    fn pipelined_stats_report_effective_configuration() {
+        let cfg = SimConfig::default_o3();
+        let recs = make_records("mcf", 2_000);
+        let mut p = TablePredictor::new(16);
+        let opts = EngineOptions { target_batch: 4, encode_threads: 2, pipeline_depth: 2 };
+        let mut engine = BatchEngine::with_options(&mut p, opts);
+        engine.submit(job(&recs, &cfg, 8));
+        let report = engine.run().unwrap();
+        assert_eq!(report.stats.encode_threads, 2);
+        assert_eq!(report.stats.pipeline_depth, 2);
+        assert!(report.stats.predict_seconds >= 0.0);
+        let idle = report.predictor_idle_fraction();
+        assert!((0.0..=1.0).contains(&idle), "idle={idle}");
     }
 }

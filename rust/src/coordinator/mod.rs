@@ -9,7 +9,9 @@
 //!   predictions of all sub-traces batched into single accelerator calls.
 //! * [`engine`] — the shared dynamic-batching engine: many concurrent
 //!   jobs, all of whose sub-traces are multiplexed into common predictor
-//!   batches with a configurable target batch size (paper §3.3/Figure 9).
+//!   batches with a configurable target batch size (paper §3.3/Figure 9),
+//!   optionally pipelined across a pool of encode workers that overlap
+//!   feature encoding with prediction ([`EngineOptions`]).
 //! * [`pool`] — multi-job pooling over the engine, standing in for the
 //!   paper's multi-GPU scaling: shards share one predictor and one batch
 //!   stream instead of loading a private executable per thread.
@@ -19,7 +21,7 @@ pub mod parallel;
 pub mod pool;
 pub mod sequential;
 
-pub use engine::{BatchEngine, EngineReport, EngineStats, JobSpec};
+pub use engine::{BatchEngine, EngineOptions, EngineReport, EngineStats, JobSpec};
 pub use parallel::{simulate_parallel, simulate_parallel_cfg};
 pub use pool::{simulate_pool, simulate_pool_report, PoolOptions};
 pub use sequential::simulate_sequential;

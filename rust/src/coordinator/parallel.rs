@@ -11,7 +11,9 @@
 //!
 //! Since the [`super::engine`] refactor this module is a thin single-job
 //! wrapper over [`BatchEngine`] (unbounded target batch = the original
-//! one-batch-per-round behavior), kept for backward compatibility.
+//! one-batch-per-round behavior, serial encode path), kept for backward
+//! compatibility; use [`BatchEngine::with_options`] directly for the
+//! pipelined multi-threaded configuration.
 
 use anyhow::Result;
 

@@ -23,7 +23,7 @@ use crate::des::SimConfig;
 use crate::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
 use crate::trace::TraceRecord;
 
-use super::engine::{BatchEngine, EngineStats, JobSpec};
+use super::engine::{BatchEngine, EngineOptions, EngineStats, JobSpec};
 use super::SimOutcome;
 
 /// How the pool constructs its shared predictor.
@@ -48,6 +48,10 @@ pub struct PoolOptions {
     pub window: u64,
     /// Target predictor-batch size (0 = all active sub-traces per batch).
     pub target_batch: usize,
+    /// Encode/scatter worker threads for the shared engine (≤1 = serial).
+    pub encode_threads: usize,
+    /// Batch buffers in flight (≥2 overlaps encoding with prediction).
+    pub pipeline_depth: usize,
 }
 
 /// Shard the trace over `workers` jobs of one shared [`BatchEngine`];
@@ -78,7 +82,14 @@ pub fn simulate_pool_report(
         }
         PoolPredictor::Table { seq } => Box::new(TablePredictor::new(*seq)),
     };
-    let mut engine = BatchEngine::new(predictor.as_mut(), opts.target_batch);
+    let mut engine = BatchEngine::with_options(
+        predictor.as_mut(),
+        EngineOptions {
+            target_batch: opts.target_batch,
+            encode_threads: opts.encode_threads,
+            pipeline_depth: opts.pipeline_depth,
+        },
+    );
 
     // Distribute the requested sub-trace total across the NON-EMPTY
     // shards (with fewer records than workers, trailing shards are
@@ -133,6 +144,8 @@ mod tests {
             predictor: PoolPredictor::Table { seq: 16 },
             window: 0,
             target_batch: 0,
+            encode_threads: 1,
+            pipeline_depth: 1,
         }
     }
 
@@ -186,6 +199,26 @@ mod tests {
         assert_eq!(stats.slots, out.inferences);
         assert_eq!(stats.target_batch, 16);
         assert!(stats.mean_occupancy() > 8.0, "occupancy={}", stats.mean_occupancy());
+    }
+
+    #[test]
+    fn pool_pipelined_matches_serial_pool_exactly() {
+        // The pipelined engine behind the pool must reproduce the serial
+        // pool's cycle counts, windows, and occupancy sums bit-for-bit.
+        let (recs, cfg) = records("gcc", 6_000);
+        let mut serial = table_opts(4, 12);
+        serial.window = 500;
+        let mut piped = serial.clone();
+        piped.encode_threads = 4;
+        piped.pipeline_depth = 2;
+        let (out_s, stats_s) = simulate_pool_report(&recs, &cfg, &serial).unwrap();
+        let (out_p, stats_p) = simulate_pool_report(&recs, &cfg, &piped).unwrap();
+        assert_eq!(out_s.instructions, out_p.instructions);
+        assert_eq!(out_s.cycles, out_p.cycles);
+        assert_eq!(out_s.windows, out_p.windows);
+        assert_eq!(stats_s.batches, stats_p.batches);
+        assert_eq!(stats_s.slots, stats_p.slots);
+        assert_eq!(stats_p.encode_threads, 4);
     }
 
     #[test]

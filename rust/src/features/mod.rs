@@ -163,6 +163,11 @@ pub enum ContextMode {
 }
 
 /// The paper's two context FIFOs plus the clock bookkeeping of §3.2.
+///
+/// Thread-safety contract: [`ContextTracker::encode_input`] takes `&self`
+/// and the tracker owns all of its state, so the pipelined `BatchEngine`
+/// encodes from multiple worker threads against *disjoint* trackers
+/// (each sub-trace's tracker is owned by exactly one encode worker).
 pub struct ContextTracker {
     processor_q: VecDeque<CtxInst>,
     memwrite_q: VecDeque<CtxInst>,
@@ -390,6 +395,14 @@ mod tests {
 
     fn hist() -> HistoryInfo {
         HistoryInfo { fetch_level: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn context_tracker_is_send_and_sync() {
+        // The pipelined BatchEngine moves trackers into encode workers and
+        // calls `encode_input` (&self) from them; this must stay true.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ContextTracker>();
     }
 
     #[test]

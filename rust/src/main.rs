@@ -23,7 +23,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use simnet::coordinator::pool::PoolPredictor;
 use simnet::coordinator::{
-    simulate_parallel, simulate_pool_report, simulate_sequential, BatchEngine, JobSpec, PoolOptions,
+    simulate_parallel, simulate_pool_report, simulate_sequential, BatchEngine, EngineOptions,
+    JobSpec, PoolOptions,
 };
 use simnet::des::{simulate, BpChoice, SimConfig};
 use simnet::reports::{self, attribution, figs, sweeps, table4, PredictorChoice};
@@ -152,7 +153,8 @@ fn print_usage() {
          \x20 gen-dataset  --out data.smd [--benches a,b,c] [--n-per N] [--seq S] [--limit L]\n\
          \x20 simulate-des --bench NAME --n N [--config ...]\n\
          \x20 simulate-ml  --bench NAME --n N [--model c3] [--table] [--subtraces S] [--workers W]\n\
-         \x20              [--target-batch B] [--trace file.smt] [--artifacts DIR] [--window W]\n\
+         \x20              [--target-batch B] [--encode-threads T] [--pipeline-depth D]\n\
+         \x20              [--trace file.smt] [--artifacts DIR] [--window W]\n\
          \x20 report       table4|fig5|fig6|fig10|attribution [--models a,b] [--n N] [--benches ...]\n\
          \x20 sweep        subtrace-size|subtraces|workers|branch-predictor|l2-size|rob-size [...]\n\
          \x20 list-benches"
@@ -302,6 +304,8 @@ fn cmd_simulate_ml(args: &Args) -> Result<()> {
     let workers: usize = args.num("workers", 1)?;
     let subtraces: usize = args.num("subtraces", 1)?;
     let target_batch: usize = args.num("target-batch", 0)?;
+    let encode_threads: usize = args.num("encode-threads", 1)?;
+    let pipeline_depth: usize = args.num("pipeline-depth", 2)?;
     let choice = predictor_from(args, "c3");
     let mut engine_stats = None;
     let out = if workers > 1 {
@@ -313,20 +317,37 @@ fn cmd_simulate_ml(args: &Args) -> Result<()> {
             },
             PredictorChoice::Table { seq } => PoolPredictor::Table { seq: *seq },
         };
-        let opts = PoolOptions { workers, subtraces, predictor, window, target_batch };
+        let opts = PoolOptions {
+            workers,
+            subtraces,
+            predictor,
+            window,
+            target_batch,
+            encode_threads,
+            pipeline_depth,
+        };
         let (out, stats) = simulate_pool_report(&recs, &cfg, &opts)?;
         engine_stats = Some(stats);
         out
     } else {
         let mut p = choice.build()?;
         if subtraces > 1 {
-            let mut engine = BatchEngine::new(p.as_mut(), target_batch);
+            let mut engine = BatchEngine::with_options(
+                p.as_mut(),
+                EngineOptions { target_batch, encode_threads, pipeline_depth },
+            );
             let job = JobSpec { records: &recs, cfg: &cfg, subtraces, window, cfg_feature: 0.0 };
             engine.submit(job);
             let report = engine.run()?;
             engine_stats = Some(report.stats.clone());
             report.merged()
         } else {
+            if encode_threads > 1 {
+                eprintln!(
+                    "note: --encode-threads/--pipeline-depth only apply to the batch engine; \
+                     pass --subtraces > 1 or --workers > 1 (running sequentially)"
+                );
+            }
             simulate_sequential(&recs, &cfg, p.as_mut(), window)?
         }
     };
@@ -340,13 +361,19 @@ fn cmd_simulate_ml(args: &Args) -> Result<()> {
         out.mips()
     );
     if let Some(stats) = engine_stats {
+        let busy = 1.0 - stats.predictor_idle();
         println!(
-            "engine: batches={} mean_occupancy={:.1} target_batch={} starved={} subtraces={}",
+            "engine: batches={} mean_occupancy={:.1} target_batch={} starved={} subtraces={} \
+             encode_threads={} pipeline_depth={} predictor_busy={:.0}% predictor_idle={:.0}%",
             stats.batches,
             stats.mean_occupancy(),
             stats.target_batch,
             stats.starved,
-            stats.subtraces
+            stats.subtraces,
+            stats.encode_threads,
+            stats.pipeline_depth,
+            busy * 100.0,
+            (1.0 - busy) * 100.0
         );
     }
     if window > 0 {

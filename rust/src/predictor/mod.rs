@@ -14,7 +14,16 @@ use crate::features::{self, ContextMode, NUM_FEATURES};
 use crate::runtime::{decode_row, ModelBank, HEAD_OUT};
 
 /// A batched fetch/execution/store latency predictor.
-pub trait LatencyPredictor {
+///
+/// `Send` is a supertrait so predictors can sit behind the pipelined
+/// [`crate::coordinator::BatchEngine`]. Today the engine calls `predict`
+/// only from the coordinating thread inside its thread scope, so the
+/// bound is not yet exercised — it is a forward guarantee for a dedicated
+/// predict thread / multi-engine pools. The vendored `xla` stub types are
+/// plain structs, so `MlPredictor` satisfies it automatically; when
+/// swapping in the real PJRT bindings, keep the handle types `Send` or
+/// wrap them.
+pub trait LatencyPredictor: Send {
     /// Instruction slots per encoded input.
     fn seq_len(&self) -> usize;
 

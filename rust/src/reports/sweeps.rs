@@ -126,6 +126,8 @@ pub fn fig9(
             predictor: pool_pred.clone(),
             window: 0,
             target_batch: 0,
+            encode_threads: 1,
+            pipeline_depth: 1,
         };
         let (out, stats) = simulate_pool_report(&recs, cfg, &opts)?;
         let mips = out.mips();

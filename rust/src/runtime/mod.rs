@@ -48,7 +48,20 @@ impl ExportManifest {
             match it.next() {
                 Some("model") => model = it.next().unwrap_or("").to_string(),
                 Some("seq_len") => seq_len = it.next().unwrap_or("0").parse()?,
-                Some("batches") => batches = it.map(|b| b.parse().unwrap_or(0)).collect(),
+                Some("batches") => {
+                    // A malformed batch size must fail loudly (it used to
+                    // be swallowed into batch-size 0, which later selects
+                    // executables that do not exist).
+                    batches = it
+                        .map(|b| match b.parse::<usize>() {
+                            Ok(0) | Err(_) => Err(anyhow!(
+                                "manifest {}: bad batch size {b:?} in `batches` line",
+                                path.display()
+                            )),
+                            Ok(v) => Ok(v),
+                        })
+                        .collect::<Result<Vec<usize>>>()?;
+                }
                 Some("weights") => weights = it.map(|s| s.to_string()).collect(),
                 _ => {}
             }
@@ -331,5 +344,27 @@ mod tests {
         let p = dir.join("bad.export");
         std::fs::write(&p, "hello world\n").unwrap();
         assert!(ExportManifest::read(&p).is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_unparseable_batch_size_naming_token() {
+        let dir = std::env::temp_dir().join("simnet_runtime_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("badbatch.export");
+        std::fs::write(&p, "model c3\nseq_len 32\nbatches 1 x8 64\nweights a\n").unwrap();
+        let err = ExportManifest::read(&p).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("x8"), "error must name the offending token: {msg}");
+        assert!(msg.contains("batch size"), "error must say what is wrong: {msg}");
+    }
+
+    #[test]
+    fn manifest_rejects_zero_batch_size() {
+        let dir = std::env::temp_dir().join("simnet_runtime_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("zerobatch.export");
+        std::fs::write(&p, "model c3\nseq_len 32\nbatches 0 8\nweights a\n").unwrap();
+        let err = ExportManifest::read(&p).unwrap_err();
+        assert!(format!("{err}").contains("\"0\""), "zero batch must be rejected: {err}");
     }
 }

@@ -408,6 +408,46 @@ mod tests {
     }
 
     #[test]
+    fn reader_rejects_bad_magic() {
+        let p = tmp("bad_magic.smt");
+        std::fs::write(&p, b"NOPE\x00\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        let err = TraceReader::open(&p).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn reader_rejects_truncated_header() {
+        // Valid magic but the 8-byte record count is cut short.
+        let p = tmp("short_header.smt");
+        std::fs::write(&p, b"SMT1\x02\x00").unwrap();
+        let err = TraceReader::open(&p).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn reader_surfaces_short_final_record() {
+        // Header promises 2 records but the last one is truncated: the
+        // reader must yield the intact record, then an error, then stop.
+        let p = tmp("short_tail.smt");
+        let cfg = SimConfig::default_o3();
+        let b = find("xz").unwrap();
+        let mut w = TraceWriter::create(&p).unwrap();
+        simulate(&cfg, b.workload(0).stream(), 2, |e| {
+            w.write(&TraceRecord::from(e)).unwrap();
+        });
+        assert_eq!(w.finish().unwrap(), 2);
+        let full = std::fs::metadata(&p).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&p).unwrap();
+        f.set_len(full - 10).unwrap();
+        drop(f);
+        let mut r = TraceReader::open(&p).unwrap();
+        assert_eq!(r.count, 2);
+        assert!(r.next().unwrap().is_ok(), "first record is intact");
+        assert!(r.next().unwrap().is_err(), "short final record must error");
+        assert!(r.next().is_none(), "reader stops after the error");
+    }
+
+    #[test]
     fn dataset_builds_and_dedups() {
         let trace_path = tmp("ds.smt");
         let ds_path = tmp("ds.smd");

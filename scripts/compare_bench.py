@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Compare a bench JSON report against a committed baseline.
+
+Usage: compare_bench.py CURRENT.json BASELINE.json [--max-regression 2.0]
+
+For every config named in the baseline, the current MIPS must be at least
+``baseline_mips / max_regression``. The threshold is deliberately generous
+(default 2x) so CI-runner noise does not flake the gate; it exists to
+catch order-of-magnitude regressions in the engine hot path, and to be
+ratcheted tighter as baselines firm up. Configs present in the current
+report but not in the baseline are informational only.
+"""
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="bench JSON produced by bench_engine --json")
+    ap.add_argument("baseline", help="committed baseline JSON (bench/baseline.json)")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=2.0,
+        help="fail when current MIPS < baseline / this factor (default 2.0)",
+    )
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    current_by_name = {c["name"]: c for c in current.get("configs", [])}
+    failures = []
+    matched = 0
+    for base_cfg in baseline.get("configs", []):
+        name = base_cfg["name"]
+        cur = current_by_name.get(name)
+        if cur is None:
+            print(f"[warn] baseline config {name!r} missing from current results")
+            continue
+        matched += 1
+        floor = base_cfg["mips"] / args.max_regression
+        ok = cur["mips"] >= floor
+        status = "ok" if ok else "REGRESSION"
+        print(
+            f"{name}: current {cur['mips']:.3f} MIPS vs baseline "
+            f"{base_cfg['mips']:.3f} (floor {floor:.3f}) -> {status}"
+        )
+        if not ok:
+            failures.append(name)
+
+    extra = sorted(set(current_by_name) - {c["name"] for c in baseline.get("configs", [])})
+    if extra:
+        print(f"[info] configs without a baseline: {', '.join(extra)}")
+    speedup = current.get("threaded_speedup")
+    if speedup is not None:
+        print(f"[info] threaded speedup over serial: {speedup:.2f}x")
+
+    if matched == 0 and baseline.get("configs"):
+        # A rename of the sweep configs must not silently disable the gate.
+        print(
+            "FAIL: no baseline config matched the current report — "
+            "update bench/baseline.json to the new config names",
+            file=sys.stderr,
+        )
+        return 1
+    if failures:
+        print(
+            f"FAIL: regression beyond {args.max_regression}x on: {', '.join(failures)}",
+            file=sys.stderr,
+        )
+        return 1
+    print("bench within regression threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
