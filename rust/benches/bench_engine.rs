@@ -2,26 +2,29 @@
 //! 8/9) — the encode-threads × target-batch sweep that anchors the repo's
 //! performance trajectory.
 //!
-//! Runs the multi-job shared [`simnet::coordinator::BatchEngine`] over the
-//! artifact-free TablePredictor backend and reports, per configuration:
-//! MIPS, mean batch occupancy, fill ratio, and the predictor-idle
-//! fraction (share of wall time the predictor spent waiting on feature
-//! encoding — the quantity the pipeline exists to minimize).
+//! Runs the multi-job shared engine (through `simnet::api::Simulation`
+//! in pool mode) over the artifact-free TablePredictor backend and
+//! reports, per configuration: MIPS, mean batch occupancy, fill ratio,
+//! and the predictor-idle fraction (share of wall time the predictor
+//! spent waiting on feature encoding — the quantity the pipeline exists
+//! to minimize).
 //!
 //! Flags / env:
 //! * `--quick` (or `SIMNET_BENCH_QUICK=1`) — small trace + trimmed sweep
 //!   for the CI bench-smoke job.
 //! * `--json PATH` — additionally write the results as JSON
 //!   (`BENCH_engine.json` in CI; compared against `bench/baseline.json`
-//!   by `scripts/compare_bench.py`).
+//!   by `scripts/compare_bench.py`). Each config entry embeds the run's
+//!   full `SimReport` fields (`SimReport::json_fields`), so the bench
+//!   JSON and `repro simulate-ml --json` share one report format.
 //! * `SIMNET_BENCH_N` — override the instruction count.
 
 mod common;
 
 use std::fmt::Write as _;
 
-use simnet::coordinator::pool::PoolPredictor;
-use simnet::coordinator::{simulate_pool_report, PoolOptions};
+use simnet::api::{PredictorSpec, SimReport, Simulation};
+use simnet::coordinator::EngineOptions;
 use simnet::des::{simulate, SimConfig};
 use simnet::stats::Table;
 use simnet::trace::TraceRecord;
@@ -35,10 +38,13 @@ struct Row {
     threads: usize,
     depth: usize,
     target: usize,
-    mips: f64,
-    occupancy: f64,
-    fill: f64,
-    idle: f64,
+    report: SimReport,
+}
+
+impl Row {
+    fn mips(&self) -> f64 {
+        self.report.mips()
+    }
 }
 
 fn run_cfg(
@@ -48,34 +54,27 @@ fn run_cfg(
     threads: usize,
     depth: usize,
 ) -> Row {
-    let opts = PoolOptions {
-        workers: JOBS,
-        subtraces: SUBTRACES,
-        predictor: PoolPredictor::Table { seq: 16 },
-        window: 0,
-        target_batch: target,
-        encode_threads: threads,
-        pipeline_depth: depth,
-    };
-    let (out, stats) = simulate_pool_report(recs, cfg, &opts).expect("engine run");
-    let idle = stats.predictor_idle();
-    Row {
-        name: format!("t{threads}_d{depth}_b{target}"),
-        threads,
-        depth,
-        target,
-        mips: out.mips(),
-        occupancy: stats.mean_occupancy(),
-        fill: stats.fill_ratio(),
-        idle,
-    }
+    let report = Simulation::new()
+        .records(recs)
+        .config(cfg)
+        .predictor(PredictorSpec::table(16))
+        .workers(JOBS)
+        .subtraces(SUBTRACES)
+        .engine(EngineOptions {
+            target_batch: target,
+            encode_threads: threads,
+            pipeline_depth: depth,
+        })
+        .run()
+        .expect("engine run");
+    Row { name: format!("t{threads}_d{depth}_b{target}"), threads, depth, target, report }
 }
 
 /// Best serial (threads<=1) and threaded (threads>1) MIPS across rows —
 /// the pair the printed summary, the JSON, and the baseline gate consume.
 fn best_mips(rows: &[Row]) -> (f64, f64) {
-    let serial = rows.iter().filter(|r| r.threads <= 1).map(|r| r.mips).fold(0.0f64, f64::max);
-    let threaded = rows.iter().filter(|r| r.threads > 1).map(|r| r.mips).fold(0.0f64, f64::max);
+    let serial = rows.iter().filter(|r| r.threads <= 1).map(|r| r.mips()).fold(0.0f64, f64::max);
+    let threaded = rows.iter().filter(|r| r.threads > 1).map(|r| r.mips()).fold(0.0f64, f64::max);
     (serial, threaded)
 }
 
@@ -93,13 +92,17 @@ fn write_json(path: &str, n: u64, quick: bool, rows: &[Row]) {
     let _ = writeln!(s, "  \"configs\": [");
     for (i, r) in rows.iter().enumerate() {
         let comma = if i + 1 < rows.len() { "," } else { "" };
-        let _ = writeln!(
-            s,
-            "    {{\"name\": \"{}\", \"encode_threads\": {}, \"pipeline_depth\": {}, \
-             \"target_batch\": {}, \"mips\": {:.4}, \"occupancy\": {:.2}, \"fill\": {:.3}, \
-             \"predictor_idle\": {:.3}}}{comma}",
-            r.name, r.threads, r.depth, r.target, r.mips, r.occupancy, r.fill, r.idle
-        );
+        // One object per config: the swept knobs plus the run's full
+        // SimReport — same fields `repro simulate-ml --json` writes.
+        let mut fields = vec![
+            ("name", format!("\"{}\"", r.name)),
+            ("encode_threads", r.threads.to_string()),
+            ("pipeline_depth", r.depth.to_string()),
+            ("target_batch", r.target.to_string()),
+        ];
+        fields.extend(r.report.json_fields().into_iter().filter(|(k, _)| *k != "windows"));
+        let body: Vec<String> = fields.into_iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+        let _ = writeln!(s, "    {{{}}}{comma}", body.join(", "));
     }
     let _ = writeln!(s, "  ]");
     s.push_str("}\n");
@@ -145,14 +148,15 @@ fn main() {
             // Serial runs lockstep (depth 1); threaded runs double-buffer.
             let depth = if threads > 1 { 2 } else { 1 };
             let row = run_cfg(&recs, &cfg, target, threads, depth);
+            let stats = row.report.engine.clone().unwrap_or_default();
             table.row(vec![
                 row.threads.to_string(),
                 row.depth.to_string(),
                 row.target.to_string(),
-                format!("{:.3}", row.mips),
-                format!("{:.1}", row.occupancy),
-                format!("{:.2}", row.fill),
-                format!("{:.2}", row.idle),
+                format!("{:.3}", row.mips()),
+                format!("{:.1}", stats.mean_occupancy()),
+                format!("{:.2}", stats.fill_ratio()),
+                format!("{:.2}", stats.predictor_idle()),
             ]);
             rows.push(row);
         }

@@ -3,9 +3,8 @@
 
 mod common;
 
-use simnet::coordinator::simulate_parallel;
 use simnet::des::SimConfig;
-use simnet::reports::{attribution, des_trace, figs, table4, PredictorChoice, REFERENCE_SEED};
+use simnet::reports::{attribution, des_trace, figs, REFERENCE_SEED};
 use simnet::workload::find;
 
 fn main() {
@@ -17,23 +16,20 @@ fn main() {
     let t0 = std::time::Instant::now();
     let (recs, _) = des_trace(&cfg, &b, n, REFERENCE_SEED);
     let des_mips = n as f64 / t0.elapsed().as_secs_f64() / 1e6;
-    let mut sim_mips = Vec::new();
-    for m in &models {
-        let choice = PredictorChoice::ml(&common::artifacts(), &table4::export_name(m));
-        if let Ok(mut p) = choice.build() {
-            if let Ok(out) = simulate_parallel(&recs, &cfg, p.as_mut(), 64, 0) {
-                sim_mips.push((m.clone(), out.mips()));
-            }
-        }
-    }
-    match figs::fig10(&common::artifacts(), &models, &cfg, &sim_mips, des_mips) {
+    // Unloadable models are skipped with the error on stderr
+    // (fig10_sim_mips), never silently; simulation failures surface here.
+    let report = match figs::fig10_sim_mips(&common::artifacts(), &models, &cfg, &recs, 64) {
+        Ok(sim_mips) => figs::fig10(&common::artifacts(), &models, &cfg, &sim_mips, des_mips),
+        Err(e) => Err(e),
+    };
+    match report {
         Ok(r) => print!("{r}"),
         Err(e) => eprintln!("fig10 failed: {e}"),
     }
     common::hr("Figure 11 (feature attribution)");
-    let choice = common::choice_or_fallback("c3");
+    let spec = common::spec_or_fallback("c3");
     let benches: Vec<String> = vec!["gcc".into(), "mcf".into()];
-    match attribution::attribution(&cfg, &choice, 192, Some(&benches)) {
+    match attribution::attribution(&cfg, &spec, 192, Some(&benches)) {
         Ok(attr) => print!("{}", attribution::render(&attr)),
         Err(e) => eprintln!("attribution failed: {e}"),
     }

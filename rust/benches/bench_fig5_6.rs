@@ -9,7 +9,7 @@ use simnet::reports::figs;
 fn main() {
     let n = common::bench_n(20_000);
     let cfg = SimConfig::default_o3();
-    let choices = vec![common::choice_or_fallback("c3"), common::choice_or_fallback("rb")];
+    let choices = vec![common::spec_or_fallback("c3"), common::spec_or_fallback("rb")];
     common::hr(&format!("Figure 5 ({n} instructions/benchmark)"));
     match figs::fig5(&cfg, &choices, n, 3_000, None) {
         Ok(r) => print!("{r}"),

@@ -9,7 +9,7 @@ use simnet::reports::sweeps;
 fn main() {
     let n = common::bench_n(24_000);
     let cfg = SimConfig::default_o3();
-    let choice = common::choice_or_fallback("c3");
+    let choice = common::spec_or_fallback("c3");
     let benches: Vec<String> = ["gcc", "mcf", "lbm"].iter().map(|s| s.to_string()).collect();
     common::hr("Figure 7 (parallel error vs sub-trace size)");
     match sweeps::fig7(&cfg, &choice, n, &[750, 1_500, 3_000, 6_000, 12_000], Some(&benches)) {

@@ -9,7 +9,7 @@ use simnet::reports::sweeps;
 fn main() {
     let n = common::bench_n(32_000);
     let cfg = SimConfig::default_o3();
-    let choice = common::choice_or_fallback("c3");
+    let choice = common::spec_or_fallback("c3");
     let benches: Vec<String> = ["perlbench", "xalancbmk", "deepsjeng", "specrand_i"]
         .iter()
         .map(|s| s.to_string())

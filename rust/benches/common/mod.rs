@@ -4,7 +4,7 @@
 
 use std::path::PathBuf;
 
-use simnet::reports::PredictorChoice;
+use simnet::api::PredictorSpec;
 
 /// Artifacts dir (env override: SIMNET_ARTIFACTS).
 pub fn artifacts() -> PathBuf {
@@ -13,20 +13,17 @@ pub fn artifacts() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-/// ML predictor choice if the model's artifacts exist, else the analytical
+/// ML predictor spec if the model's artifacts exist, else the analytical
 /// fallback (so `cargo bench` always runs).
 #[allow(dead_code)]
-pub fn choice_or_fallback(model: &str) -> PredictorChoice {
+pub fn spec_or_fallback(model: &str) -> PredictorSpec {
     let dir = artifacts();
     if dir.join(format!("{model}.export")).exists() {
-        PredictorChoice::Ml {
-            artifacts: dir.clone(),
-            model: model.to_string(),
-            weights: Some(dir.join(format!("{model}.smw"))).filter(|p: &PathBuf| p.exists()),
-        }
+        // ml_tag resolves default weights (`<tag>.smw` when present).
+        PredictorSpec::ml_tag(&dir, model, None)
     } else {
         eprintln!("[bench] artifacts for '{model}' missing — falling back to TablePredictor");
-        PredictorChoice::Table { seq: 32 }
+        PredictorSpec::table(32)
     }
 }
 

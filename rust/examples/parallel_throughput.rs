@@ -2,14 +2,17 @@
 //! sub-trace batching and worker streams turn an inherently sequential
 //! prediction chain into accelerator-sized batches.
 //!
+//! Everything runs through the unified `simnet::api::Simulation` builder:
+//! the same session, re-run with different knobs, walks from sequential
+//! to sub-trace parallel to multi-job pooled execution.
+//!
 //! Usage: cargo run --release --example parallel_throughput [-- <n>]
 
 use std::path::Path;
 
-use simnet::coordinator::pool::PoolPredictor;
-use simnet::coordinator::{simulate_parallel, simulate_pool_report, PoolOptions};
+use simnet::api::{PredictorSpec, Simulation};
+use simnet::coordinator::EngineOptions;
 use simnet::des::{simulate, SimConfig};
-use simnet::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
 use simnet::stats::Table;
 use simnet::trace::TraceRecord;
 use simnet::workload::find;
@@ -24,47 +27,46 @@ fn main() -> anyhow::Result<()> {
     let des_mips = n as f64 / t0.elapsed().as_secs_f64() / 1e6;
 
     let artifacts = Path::new("artifacts");
-    let have_artifacts = artifacts.join("c3.export").exists();
-    let mut predictor: Box<dyn LatencyPredictor> = if have_artifacts {
-        Box::new(MlPredictor::load(artifacts, "c3", None)?)
+    let spec = if artifacts.join("c3.export").exists() {
+        PredictorSpec::ml(artifacts, "c3")
     } else {
         println!("(artifacts missing; using analytical TablePredictor)");
-        Box::new(TablePredictor::new(32))
+        PredictorSpec::table(32)
     };
+    let mut predictor = spec.build()?;
 
     println!("=== sub-trace scaling (single worker) ===");
     let mut t = Table::new(&["subtraces", "MIPS", "cpi"]);
     for subs in [1usize, 8, 64, 256, 1024] {
-        let out = simulate_parallel(&recs, &cfg, predictor.as_mut(), subs, 0)?;
+        let out = Simulation::new()
+            .records(&recs)
+            .config(&cfg)
+            .predictor_ref(predictor.as_mut())
+            .subtraces(subs)
+            .run()?;
         t.row(vec![subs.to_string(), format!("{:.3}", out.mips()), format!("{:.3}", out.cpi())]);
     }
     print!("{}", t.render());
 
     println!("\n=== shared-engine scaling (256 sub-traces per job, 4 encode threads) ===");
-    let pool_pred = if have_artifacts {
-        PoolPredictor::Ml { artifacts: artifacts.to_path_buf(), model: "c3".into(), weights: None }
-    } else {
-        PoolPredictor::Table { seq: 32 }
-    };
     let mut t = Table::new(&["jobs", "MIPS", "speedup_vs_des", "batch_occupancy"]);
     for w in [1usize, 2, 4] {
-        let opts = PoolOptions {
-            workers: w,
-            subtraces: 256 * w,
-            predictor: pool_pred.clone(),
-            window: 0,
+        let report = Simulation::new()
+            .records(&recs)
+            .config(&cfg)
+            .predictor_ref(predictor.as_mut())
+            .workers(w)
+            .subtraces(256 * w)
             // A bounded target gives several batches per round, which is
             // what lets pipeline_depth 2 overlap encode with predict.
-            target_batch: 128,
-            encode_threads: 4,
-            pipeline_depth: 2,
-        };
-        let (out, stats) = simulate_pool_report(&recs, &cfg, &opts)?;
+            .engine(EngineOptions { target_batch: 128, encode_threads: 4, pipeline_depth: 2 })
+            .run()?;
+        let occupancy = report.engine.as_ref().map(|s| s.mean_occupancy()).unwrap_or(0.0);
         t.row(vec![
             w.to_string(),
-            format!("{:.3}", out.mips()),
-            format!("{:.2}x", out.mips() / des_mips),
-            format!("{:.1}", stats.mean_occupancy()),
+            format!("{:.3}", report.mips()),
+            format!("{:.2}x", report.mips() / des_mips),
+            format!("{occupancy:.1}"),
         ]);
     }
     print!("{}", t.render());

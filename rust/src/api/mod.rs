@@ -1,0 +1,377 @@
+//! # The unified simulation session API
+//!
+//! One builder, one predictor spec, one machine-readable report —
+//! whatever execution mode a run needs.
+//!
+//! SimNet's core claim (paper §3.2–3.3) is that a single ML latency
+//! predictor serves every simulation style: sequential, sub-trace
+//! parallel, dynamically batched, and pooled across concurrent jobs.
+//! This module makes that true at the API level too: every report,
+//! sweep, CLI command, and bench constructs its runs through
+//! [`Simulation`], selects predictors with [`PredictorSpec`], and gets a
+//! [`SimReport`] back — including the JSON the `repro simulate-ml
+//! --json` flag and the bench harnesses emit.
+//!
+//! ```no_run
+//! use simnet::api::{PredictorSpec, Simulation};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // Sequential run over a benchmark with the analytical predictor.
+//! let report = Simulation::new()
+//!     .bench("gcc", 20_000)
+//!     .predictor(PredictorSpec::table(32))
+//!     .run()?;
+//! println!("cpi={:.3} err={:.2}%", report.cpi(), report.cpi_error().unwrap() * 100.0);
+//!
+//! // Same session, batched + pooled: the knobs pick the execution mode.
+//! let report = Simulation::new()
+//!     .bench("gcc", 20_000)
+//!     .predictor(PredictorSpec::table(32))
+//!     .subtraces(256)
+//!     .workers(4)
+//!     .run()?;
+//! std::fs::write("report.json", report.to_json())?;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! [`Simulation::run`] picks the mode from the knobs:
+//!
+//! | knobs | mode | backend |
+//! |---|---|---|
+//! | defaults | [`ExecMode::Sequential`] | [`crate::coordinator::simulate_sequential`] |
+//! | `.subtraces(n > 1)` (or a config feature) | [`ExecMode::Engine`] | one [`crate::coordinator::BatchEngine`] job |
+//! | `.workers(n > 1)` | [`ExecMode::Pool`] | trace sharded over jobs of one shared engine |
+//!
+//! All three are byte-identical to the underlying entry points they wrap
+//! (pinned by `tests/api_equivalence.rs`).
+
+pub mod report;
+pub mod spec;
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+pub use report::{ExecMode, SimReport};
+pub use spec::{export_name, PredictorSpec};
+
+use crate::coordinator::{
+    simulate_pool_report, simulate_sequential, BatchEngine, EngineOptions, JobSpec, PoolOptions,
+};
+use crate::des::SimConfig;
+use crate::predictor::LatencyPredictor;
+use crate::reports::{des_trace, REFERENCE_SEED};
+use crate::trace::{TraceReader, TraceRecord};
+use crate::workload::find;
+
+/// Where a run's instruction records come from.
+enum Source<'a> {
+    Unset,
+    /// Caller-held trace records (no copy).
+    Records(&'a [TraceRecord]),
+    /// Benchmark run through the reference DES for `n` instructions.
+    Bench { name: String, n: u64 },
+    /// An `.smt` trace file.
+    TraceFile(PathBuf),
+}
+
+/// Where a run's predictor comes from.
+enum Predictor<'a> {
+    Unset,
+    /// Built from a spec at run time.
+    Spec(PredictorSpec),
+    /// Borrowed, so callers can reuse one predictor (and its served /
+    /// artifact state) across many runs.
+    Borrowed(&'a mut dyn LatencyPredictor),
+}
+
+/// Builder for one simulation session. See the [module docs](self) for
+/// the mode-selection table and a full example.
+pub struct Simulation<'a> {
+    source: Source<'a>,
+    cfg: Option<&'a SimConfig>,
+    predictor: Predictor<'a>,
+    label: Option<String>,
+    subtraces: usize,
+    workers: usize,
+    engine: EngineOptions,
+    window: u64,
+    cfg_feature: f32,
+    seed: u64,
+}
+
+impl Default for Simulation<'_> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<'a> Simulation<'a> {
+    /// A session with the default o3 machine, sequential execution, and
+    /// the reference input seed; input and predictor must still be set.
+    pub fn new() -> Self {
+        Simulation {
+            source: Source::Unset,
+            cfg: None,
+            predictor: Predictor::Unset,
+            label: None,
+            subtraces: 1,
+            workers: 1,
+            engine: EngineOptions::default(),
+            window: 0,
+            cfg_feature: 0.0,
+            seed: REFERENCE_SEED,
+        }
+    }
+
+    /// Simulate caller-held trace records (the reference CPI is derived
+    /// from the records' own fetch latencies).
+    pub fn records(mut self, records: &'a [TraceRecord]) -> Self {
+        self.source = Source::Records(records);
+        self
+    }
+
+    /// Run the reference DES over benchmark `name` for `n` instructions
+    /// and simulate the resulting trace (the DES CPI becomes the
+    /// reference).
+    pub fn bench(mut self, name: impl Into<String>, n: u64) -> Self {
+        self.source = Source::Bench { name: name.into(), n };
+        self
+    }
+
+    /// Simulate an `.smt` trace file.
+    pub fn trace_file(mut self, path: impl Into<PathBuf>) -> Self {
+        self.source = Source::TraceFile(path.into());
+        self
+    }
+
+    /// Machine configuration (default: `SimConfig::default_o3()`).
+    /// Borrowed, so sweeps re-running one config need no clone per run.
+    pub fn config(mut self, cfg: &'a SimConfig) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// Predictor to build for this run.
+    pub fn predictor(mut self, spec: PredictorSpec) -> Self {
+        self.predictor = Predictor::Spec(spec);
+        self
+    }
+
+    /// Reuse an already-built predictor (reports that sweep many
+    /// configurations build once and pass it here).
+    pub fn predictor_ref(mut self, predictor: &'a mut dyn LatencyPredictor) -> Self {
+        self.predictor = Predictor::Borrowed(predictor);
+        self
+    }
+
+    /// Override the predictor label recorded in the report (mainly for
+    /// [`predictor_ref`](Self::predictor_ref) runs).
+    pub fn labeled(mut self, label: impl Into<String>) -> Self {
+        self.label = Some(label.into());
+        self
+    }
+
+    /// Sub-trace parallelism (> 1 selects the batching engine).
+    pub fn subtraces(mut self, n: usize) -> Self {
+        self.subtraces = n;
+        self
+    }
+
+    /// Concurrent jobs sharing one engine (> 1 selects pool mode;
+    /// `subtraces` then counts the total across all jobs).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Engine execution knobs (target batch, encode threads, pipeline
+    /// depth); only engine and pool modes consult them.
+    pub fn engine(mut self, opts: EngineOptions) -> Self {
+        self.engine = opts;
+        self
+    }
+
+    /// CPI window in instructions (0 = no windows).
+    pub fn window(mut self, w: u64) -> Self {
+        self.window = w;
+        self
+    }
+
+    /// Configuration input feature for conditioned models (§5 ROB study);
+    /// non-zero values run through the engine so every context tracker
+    /// carries the feature.
+    pub fn cfg_feature(mut self, f: f32) -> Self {
+        self.cfg_feature = f;
+        self
+    }
+
+    /// Workload input seed for `.bench(..)` sources (default: the
+    /// reference seed used by all accuracy reports).
+    pub fn input_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Execute the session: resolve the input, build (or borrow) the
+    /// predictor, pick the execution mode from the knobs, and return the
+    /// unified report.
+    pub fn run(self) -> Result<SimReport> {
+        let Simulation {
+            source,
+            cfg,
+            predictor,
+            label,
+            subtraces,
+            workers,
+            engine,
+            window,
+            cfg_feature,
+            seed,
+        } = self;
+
+        // Default config is materialized here only when none was given.
+        let default_cfg;
+        let cfg: &SimConfig = match cfg {
+            Some(c) => c,
+            None => {
+                default_cfg = SimConfig::default_o3();
+                &default_cfg
+            }
+        };
+
+        // Holds records materialized by the bench / trace-file sources;
+        // deferred so the caller-records path never allocates.
+        let owned: Vec<TraceRecord>;
+        let (records, des_cpi, bench) = match source {
+            Source::Unset => {
+                bail!("no input: call .records(..), .bench(..), or .trace_file(..)")
+            }
+            Source::Records(r) => (r, Some(trace_reference_cpi(r)), None),
+            Source::Bench { name, n } => {
+                let b = find(&name).ok_or_else(|| anyhow!("unknown benchmark {name}"))?;
+                let (recs, stats) = des_trace(cfg, &b, n, seed);
+                owned = recs;
+                (&owned[..], Some(stats.cpi()), Some(name))
+            }
+            Source::TraceFile(path) => {
+                let recs: Vec<TraceRecord> =
+                    TraceReader::open(&path)?.collect::<std::io::Result<_>>()?;
+                owned = recs;
+                let cpi = trace_reference_cpi(&owned);
+                (&owned[..], Some(cpi), None)
+            }
+        };
+
+        let mut built: Option<Box<dyn LatencyPredictor>> = None;
+        let (predictor, spec_label): (&mut dyn LatencyPredictor, String) = match predictor {
+            Predictor::Unset => {
+                bail!("no predictor: call .predictor(spec) or .predictor_ref(..)")
+            }
+            Predictor::Spec(spec) => {
+                let l = spec.label();
+                (built.insert(spec.build()?).as_mut(), l)
+            }
+            Predictor::Borrowed(p) => (p, "external".to_string()),
+        };
+
+        let workers = workers.max(1);
+        let subtraces = subtraces.max(1);
+        let mode = if workers > 1 {
+            ExecMode::Pool
+        } else if subtraces > 1 || cfg_feature != 0.0 {
+            ExecMode::Engine
+        } else {
+            ExecMode::Sequential
+        };
+
+        let (outcome, stats) = match mode {
+            ExecMode::Sequential => (simulate_sequential(records, cfg, predictor, window)?, None),
+            ExecMode::Engine => {
+                let mut eng = BatchEngine::with_options(predictor, engine);
+                eng.submit(JobSpec { records, cfg, subtraces, window, cfg_feature });
+                let report = eng.run()?;
+                let stats = report.stats.clone();
+                (report.merged(), Some(stats))
+            }
+            ExecMode::Pool => {
+                let opts = PoolOptions { workers, subtraces, window, cfg_feature, engine };
+                let (out, stats) = simulate_pool_report(records, cfg, predictor, &opts)?;
+                (out, Some(stats))
+            }
+        };
+
+        Ok(SimReport {
+            predictor: label.unwrap_or(spec_label),
+            mode,
+            bench,
+            config: cfg.name.to_string(),
+            outcome,
+            engine: stats,
+            des_cpi,
+        })
+    }
+}
+
+/// Reference CPI embedded in a trace: its own fetch latencies are the
+/// per-instruction cycle deltas the DES observed when writing it.
+fn trace_reference_cpi(records: &[TraceRecord]) -> f64 {
+    let cycles: u64 = records.iter().map(|r| r.f_lat as u64).sum();
+    cycles as f64 / records.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_without_input_or_predictor_errors() {
+        let err = Simulation::new().predictor(PredictorSpec::table(8)).run().unwrap_err();
+        assert!(err.to_string().contains("no input"), "err: {err}");
+        let err = Simulation::new().bench("gcc", 100).run().unwrap_err();
+        assert!(err.to_string().contains("no predictor"), "err: {err}");
+    }
+
+    #[test]
+    fn unknown_bench_errors() {
+        let err = Simulation::new()
+            .bench("not_a_bench", 100)
+            .predictor(PredictorSpec::table(8))
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("not_a_bench"), "err: {err}");
+    }
+
+    #[test]
+    fn mode_selection_follows_knobs() {
+        let base = || Simulation::new().bench("xz", 400).predictor(PredictorSpec::table(8));
+        let r = base().run().unwrap();
+        assert_eq!(r.mode, ExecMode::Sequential);
+        assert!(r.engine.is_none());
+        assert_eq!(r.outcome.instructions, 400);
+        let r = base().subtraces(4).run().unwrap();
+        assert_eq!(r.mode, ExecMode::Engine);
+        assert_eq!(r.engine.as_ref().unwrap().subtraces, 4);
+        let r = base().workers(2).subtraces(4).run().unwrap();
+        assert_eq!(r.mode, ExecMode::Pool);
+        assert_eq!(r.engine.as_ref().unwrap().subtraces, 4);
+    }
+
+    #[test]
+    fn bench_source_reports_des_reference() {
+        let r = Simulation::new()
+            .bench("gcc", 2_000)
+            .predictor(PredictorSpec::table(16))
+            .run()
+            .unwrap();
+        assert_eq!(r.bench.as_deref(), Some("gcc"));
+        let des = r.des_cpi.unwrap();
+        assert!(des > 0.0);
+        // Same coarse sanity band as the table4 tests: the analytical
+        // predictor is an approximation, so this only guards against a
+        // wrong-reference regression (err is a fraction, 5.0 = 500%).
+        assert!(r.cpi_error().unwrap() < 5.0);
+        assert_eq!(r.predictor, "table");
+    }
+}

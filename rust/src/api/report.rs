@@ -1,0 +1,184 @@
+//! [`SimReport`] — the one machine-readable result of a [`super::Simulation`]
+//! run, whatever execution mode produced it.
+//!
+//! JSON serialization is hand-rolled (serde is not vendored in this
+//! image): [`SimReport::to_json`] emits one pretty-printed object, and
+//! [`SimReport::json_fields`] exposes the same key/value pairs as
+//! already-rendered JSON fragments so other writers (e.g.
+//! `benches/bench_engine.rs`) can embed a report inside their own
+//! top-level objects without duplicating the format.
+
+use crate::coordinator::{EngineStats, SimOutcome};
+
+/// How [`super::Simulation::run`] executed the job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One instruction at a time (paper §3.2).
+    Sequential,
+    /// Sub-trace parallel over the shared [`crate::coordinator::BatchEngine`] (§3.3).
+    Engine,
+    /// Multi-job pooling: trace sharded over workers, one shared engine (§3.3/Fig. 9).
+    Pool,
+}
+
+impl ExecMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecMode::Sequential => "sequential",
+            ExecMode::Engine => "engine",
+            ExecMode::Pool => "pool",
+        }
+    }
+}
+
+/// Unified result of an ML-simulation run: the merged [`SimOutcome`],
+/// the engine's batching statistics when an engine ran, the predictor
+/// label, and the DES-reference CPI when one is known.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Predictor label ([`super::PredictorSpec::label`], or the label
+    /// given to a borrowed predictor).
+    pub predictor: String,
+    /// Execution mode [`super::Simulation::run`] selected.
+    pub mode: ExecMode,
+    /// Benchmark name when the input came from `.bench(..)`.
+    pub bench: Option<String>,
+    /// Machine configuration name (`SimConfig::name`).
+    pub config: String,
+    /// Merged simulation outcome (instructions, cycles, windows, wall).
+    pub outcome: SimOutcome,
+    /// Batching statistics (engine and pool modes; `None` for sequential).
+    pub engine: Option<EngineStats>,
+    /// Reference CPI: the DES's when the input was a benchmark, the
+    /// trace's own fetch-latency CPI when the input was a trace.
+    pub des_cpi: Option<f64>,
+}
+
+impl SimReport {
+    /// Simulated cycles per instruction.
+    pub fn cpi(&self) -> f64 {
+        self.outcome.cpi()
+    }
+
+    /// Simulation throughput in million instructions per second.
+    pub fn mips(&self) -> f64 {
+        self.outcome.mips()
+    }
+
+    /// Relative CPI error against the reference, when one is known.
+    pub fn cpi_error(&self) -> Option<f64> {
+        self.des_cpi.map(|des| crate::stats::cpi_error(self.cpi(), des))
+    }
+
+    /// The report's key/value pairs, values pre-rendered as JSON
+    /// fragments, in emission order. Shared by [`to_json`](Self::to_json)
+    /// and external writers that embed reports in larger objects.
+    pub fn json_fields(&self) -> Vec<(&'static str, String)> {
+        let mut fields: Vec<(&'static str, String)> = vec![
+            ("schema", json_str("simnet.sim_report/v1")),
+            ("predictor", json_str(&self.predictor)),
+            ("mode", json_str(self.mode.as_str())),
+            ("bench", self.bench.as_deref().map(json_str).unwrap_or_else(|| "null".into())),
+            ("config", json_str(&self.config)),
+            ("instructions", self.outcome.instructions.to_string()),
+            ("cycles", self.outcome.cycles.to_string()),
+            ("inferences", self.outcome.inferences.to_string()),
+            ("cpi", json_f(self.cpi())),
+            ("des_cpi", self.des_cpi.map(json_f).unwrap_or_else(|| "null".into())),
+            (
+                "cpi_err_pct",
+                self.cpi_error().map(|e| json_f(e * 100.0)).unwrap_or_else(|| "null".into()),
+            ),
+            ("mips", json_f(self.mips())),
+            ("wall_seconds", json_f(self.outcome.wall_seconds)),
+        ];
+        let windows: Vec<String> =
+            self.outcome.windows.iter().map(|(n, c)| format!("[{n}, {c}]")).collect();
+        fields.push(("windows", format!("[{}]", windows.join(", "))));
+        fields.push((
+            "engine",
+            match &self.engine {
+                None => "null".into(),
+                Some(s) => format!(
+                    "{{\"batches\": {}, \"slots\": {}, \"target_batch\": {}, \
+                     \"starved\": {}, \"subtraces\": {}, \"encode_threads\": {}, \
+                     \"pipeline_depth\": {}, \"mean_occupancy\": {}, \"fill\": {}, \
+                     \"predictor_idle\": {}, \"predict_seconds\": {}, \
+                     \"engine_seconds\": {}}}",
+                    s.batches,
+                    s.slots,
+                    s.target_batch,
+                    s.starved,
+                    s.subtraces,
+                    s.encode_threads,
+                    s.pipeline_depth,
+                    json_f(s.mean_occupancy()),
+                    json_f(s.fill_ratio()),
+                    json_f(s.predictor_idle()),
+                    json_f(s.predict_seconds),
+                    json_f(s.engine_seconds),
+                ),
+            },
+        ));
+        fields
+    }
+
+    /// Render the report as one pretty-printed JSON object.
+    pub fn to_json(&self) -> String {
+        let fields = self.json_fields();
+        let mut s = String::from("{\n");
+        for (i, (k, v)) in fields.iter().enumerate() {
+            let comma = if i + 1 < fields.len() { "," } else { "" };
+            s.push_str(&format!("  \"{k}\": {v}{comma}\n"));
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// Render a float as a JSON number with a stable, parseable format.
+fn json_f(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Render a string as a JSON string literal (escaping the characters a
+/// model tag / bench name / path could plausibly contain).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes_strings() {
+        assert_eq!(json_str("plain"), "\"plain\"");
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn non_finite_floats_become_null() {
+        assert_eq!(json_f(f64::NAN), "null");
+        assert_eq!(json_f(f64::INFINITY), "null");
+        assert_eq!(json_f(1.5), "1.500000");
+    }
+}

@@ -1,0 +1,187 @@
+//! [`PredictorSpec`] — the one way to say which latency predictor a run
+//! should use.
+//!
+//! Replaces the two historical per-layer predictor enums (one in
+//! `reports`, one in `coordinator::pool`) that every caller had to
+//! convert between by hand. The spec is plain data (`Clone + Send`), so
+//! it can be stored in
+//! option structs, shipped across threads, and built into a live
+//! [`LatencyPredictor`] any number of times.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
+
+/// Which predictor backs a simulation run.
+#[derive(Debug, Clone)]
+pub enum PredictorSpec {
+    /// AOT-compiled model from the artifacts directory. `model` is the
+    /// trained *tag* (e.g. `c3_rob`); the exported HLO is resolved from
+    /// its base architecture ([`export_name`]) at build time, so the tag
+    /// survives as the spec's identity (the §5 ROB sweep keys
+    /// conditioning off it). `weights` is an explicit `.smw` path;
+    /// `None` lets the runtime resolve the model's default weights (or
+    /// fall back to init weights).
+    Ml { artifacts: PathBuf, model: String, weights: Option<PathBuf> },
+    /// Deterministic analytical fallback (runs without artifacts; used by
+    /// tests, benches, and ablations).
+    Table { seq: usize },
+}
+
+impl PredictorSpec {
+    /// Analytical table predictor with `seq` context slots.
+    pub fn table(seq: usize) -> Self {
+        PredictorSpec::Table { seq }
+    }
+
+    /// ML predictor for a trained model tag; weights resolve to the
+    /// runtime default.
+    pub fn ml(artifacts: impl Into<PathBuf>, model: impl Into<String>) -> Self {
+        PredictorSpec::Ml { artifacts: artifacts.into(), model: model.into(), weights: None }
+    }
+
+    /// ML predictor from a *model tag* (e.g. `c3_reg`) with weight
+    /// resolution: the weights default to `<artifacts>/<tag>.smw` when
+    /// that file exists.
+    ///
+    /// A user-supplied `explicit_weights` path is kept verbatim, so
+    /// [`validate`](Self::validate) / [`build`](Self::build) error out
+    /// naming the path when it does not exist — never a silent fallback
+    /// to init weights (which is what the pre-API CLI did with
+    /// `--weights`).
+    pub fn ml_tag(artifacts: &Path, tag: &str, explicit_weights: Option<PathBuf>) -> Self {
+        let weights = explicit_weights
+            .or_else(|| Some(artifacts.join(format!("{tag}.smw"))).filter(|p| p.exists()));
+        PredictorSpec::Ml { artifacts: artifacts.to_path_buf(), model: tag.to_string(), weights }
+    }
+
+    /// Replace the weights path (explicit; validated by [`build`](Self::build)).
+    ///
+    /// # Panics
+    /// On a [`PredictorSpec::Table`] spec: the table predictor has no
+    /// weights, and silently dropping a caller's weights path is exactly
+    /// the misconfiguration class this type exists to eliminate.
+    pub fn with_weights(mut self, path: impl Into<PathBuf>) -> Self {
+        match &mut self {
+            PredictorSpec::Ml { weights, .. } => *weights = Some(path.into()),
+            PredictorSpec::Table { .. } => {
+                panic!("with_weights only applies to ML predictor specs")
+            }
+        }
+        self
+    }
+
+    /// Check the spec without constructing a predictor: a named weights
+    /// file must exist, and a table predictor needs at least one slot.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            PredictorSpec::Ml { weights: Some(p), .. } if !p.exists() => {
+                bail!("weights file {} does not exist", p.display())
+            }
+            PredictorSpec::Table { seq: 0 } => bail!("table predictor needs seq >= 1"),
+            _ => Ok(()),
+        }
+    }
+
+    /// Construct the live predictor this spec describes.
+    pub fn build(&self) -> Result<Box<dyn LatencyPredictor>> {
+        self.validate()?;
+        Ok(match self {
+            PredictorSpec::Ml { artifacts, model, weights } => {
+                Box::new(MlPredictor::load(artifacts, &export_name(model), weights.as_deref())?)
+            }
+            PredictorSpec::Table { seq } => Box::new(TablePredictor::new(*seq)),
+        })
+    }
+
+    /// Short human-readable name (report column headers, CLI output).
+    pub fn label(&self) -> String {
+        match self {
+            PredictorSpec::Ml { model, .. } => model.clone(),
+            PredictorSpec::Table { .. } => "table".into(),
+        }
+    }
+}
+
+/// Map a trained model *tag* to the architecture name its exported HLO is
+/// stored under: tags may carry suffixes (e.g. `c3_reg`, `c3_big`) while
+/// sharing the export of their base architecture.
+pub fn export_name(tag: &str) -> String {
+    for base in ["ithemal_lstm2", "lstm2", "fc2", "fc3", "c1", "c3", "rb", "tx2"] {
+        if tag == base || tag.starts_with(&format!("{base}_")) {
+            return base.to_string();
+        }
+    }
+    tag.to_string()
+}
+
+// The spec must stay shippable to worker threads and storable in option
+// structs — compile-time guarantee, not a doc promise.
+const _: fn() = || {
+    fn assert_send_clone<T: Send + Clone>() {}
+    assert_send_clone::<PredictorSpec>();
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn export_name_strips_suffixes() {
+        assert_eq!(export_name("c3"), "c3");
+        assert_eq!(export_name("c3_reg"), "c3");
+        assert_eq!(export_name("ithemal_lstm2"), "ithemal_lstm2");
+        assert_eq!(export_name("lstm2"), "lstm2");
+        assert_eq!(export_name("rb_big"), "rb");
+    }
+
+    #[test]
+    fn explicit_missing_weights_is_an_error() {
+        let dir = std::env::temp_dir().join("simnet_spec_nothing_here");
+        let missing = dir.join("no_such.smw");
+        // Whether set at construction or after the fact, a named weights
+        // file that does not exist fails validate/build naming the path.
+        for spec in [
+            PredictorSpec::ml_tag(&dir, "c3", Some(missing.clone())),
+            PredictorSpec::ml(&dir, "c3").with_weights(&missing),
+        ] {
+            let err = spec.validate().unwrap_err();
+            assert!(err.to_string().contains("no_such.smw"), "err: {err}");
+            assert!(spec.build().is_err());
+        }
+    }
+
+    #[test]
+    fn absent_default_weights_resolve_to_none() {
+        let dir = std::env::temp_dir().join("simnet_spec_nothing_here");
+        let spec = PredictorSpec::ml_tag(&dir, "c3", None);
+        match spec {
+            PredictorSpec::Ml { weights, model, .. } => {
+                assert_eq!(model, "c3");
+                assert!(weights.is_none());
+            }
+            other => panic!("unexpected spec {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ml_tag_keeps_tag_as_label() {
+        // The §5 ROB sweep keys conditioning off the tag ("c3_rob"), so
+        // the label must NOT collapse to the exported base architecture.
+        let dir = std::env::temp_dir().join("simnet_spec_nothing_here");
+        let spec = PredictorSpec::ml_tag(&dir, "c3_rob", None);
+        assert_eq!(spec.label(), "c3_rob");
+        assert_eq!(export_name("c3_rob"), "c3");
+    }
+
+    #[test]
+    fn table_spec_builds_and_labels() {
+        let spec = PredictorSpec::table(16);
+        assert_eq!(spec.label(), "table");
+        let p = spec.build().unwrap();
+        assert_eq!(p.seq_len(), 16);
+        assert!(PredictorSpec::table(0).build().is_err());
+    }
+}

@@ -13,45 +13,50 @@
 //! The requested sub-trace total is distributed across shards with its
 //! remainder (12 sub-traces over 8 workers yields 12, not 8 — the seed
 //! silently dropped the remainder).
+//!
+//! The predictor is supplied by the caller (built from an
+//! [`crate::api::PredictorSpec`] by [`crate::api::Simulation`], which is
+//! how every CLI/report/bench run reaches this module).
 
-use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::des::SimConfig;
-use crate::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
+use crate::predictor::LatencyPredictor;
 use crate::trace::TraceRecord;
 
 use super::engine::{BatchEngine, EngineOptions, EngineStats, JobSpec};
 use super::SimOutcome;
 
-/// How the pool constructs its shared predictor.
-#[derive(Debug, Clone)]
-pub enum PoolPredictor {
-    /// Load the AOT model from the artifacts dir.
-    /// (artifacts, model, optional weights file)
-    Ml { artifacts: PathBuf, model: String, weights: Option<PathBuf> },
-    /// Analytical table predictor (tests / ablation).
-    Table { seq: usize },
-}
-
-/// Options for a pooled run.
+/// Options for a pooled run (the predictor is passed separately so one
+/// predictor can serve many pooled runs).
 #[derive(Debug, Clone)]
 pub struct PoolOptions {
     /// Shards (jobs) the trace is split into.
     pub workers: usize,
     /// Total sub-traces across all workers.
     pub subtraces: usize,
-    pub predictor: PoolPredictor,
     /// CPI window (0 = none).
     pub window: u64,
-    /// Target predictor-batch size (0 = all active sub-traces per batch).
-    pub target_batch: usize,
-    /// Encode/scatter worker threads for the shared engine (≤1 = serial).
-    pub encode_threads: usize,
-    /// Batch buffers in flight (≥2 overlaps encoding with prediction).
-    pub pipeline_depth: usize,
+    /// Configuration input feature applied to every shard (§5 ROB
+    /// study), 0.0 when unused.
+    pub cfg_feature: f32,
+    /// Shared-engine execution knobs (target batch, encode threads,
+    /// pipeline depth).
+    pub engine: EngineOptions,
+}
+
+impl Default for PoolOptions {
+    fn default() -> Self {
+        PoolOptions {
+            workers: 1,
+            subtraces: 1,
+            window: 0,
+            cfg_feature: 0.0,
+            engine: EngineOptions::default(),
+        }
+    }
 }
 
 /// Shard the trace over `workers` jobs of one shared [`BatchEngine`];
@@ -59,9 +64,10 @@ pub struct PoolOptions {
 pub fn simulate_pool(
     records: &[TraceRecord],
     cfg: &SimConfig,
+    predictor: &mut dyn LatencyPredictor,
     opts: &PoolOptions,
 ) -> Result<SimOutcome> {
-    let (out, _) = simulate_pool_report(records, cfg, opts)?;
+    let (out, _) = simulate_pool_report(records, cfg, predictor, opts)?;
     Ok(out)
 }
 
@@ -69,6 +75,7 @@ pub fn simulate_pool(
 pub fn simulate_pool_report(
     records: &[TraceRecord],
     cfg: &SimConfig,
+    predictor: &mut dyn LatencyPredictor,
     opts: &PoolOptions,
 ) -> Result<(SimOutcome, EngineStats)> {
     let workers = opts.workers.max(1);
@@ -76,20 +83,7 @@ pub fn simulate_pool_report(
     let shard = n.div_ceil(workers).max(1);
     let t0 = Instant::now();
 
-    let mut predictor: Box<dyn LatencyPredictor> = match &opts.predictor {
-        PoolPredictor::Ml { artifacts, model, weights } => {
-            Box::new(MlPredictor::load(artifacts, model, weights.as_deref())?)
-        }
-        PoolPredictor::Table { seq } => Box::new(TablePredictor::new(*seq)),
-    };
-    let mut engine = BatchEngine::with_options(
-        predictor.as_mut(),
-        EngineOptions {
-            target_batch: opts.target_batch,
-            encode_threads: opts.encode_threads,
-            pipeline_depth: opts.pipeline_depth,
-        },
-    );
+    let mut engine = BatchEngine::with_options(predictor, opts.engine);
 
     // Distribute the requested sub-trace total across the NON-EMPTY
     // shards (with fewer records than workers, trailing shards are
@@ -112,7 +106,7 @@ pub fn simulate_pool_report(
             cfg,
             subtraces,
             window: opts.window,
-            cfg_feature: 0.0,
+            cfg_feature: opts.cfg_feature,
         });
     }
 
@@ -127,6 +121,7 @@ pub fn simulate_pool_report(
 mod tests {
     use super::*;
     use crate::des::simulate;
+    use crate::predictor::TablePredictor;
     use crate::workload::find;
 
     fn records(bench: &str, n: u64) -> (Vec<TraceRecord>, SimConfig) {
@@ -141,23 +136,31 @@ mod tests {
         PoolOptions {
             workers,
             subtraces,
-            predictor: PoolPredictor::Table { seq: 16 },
             window: 0,
-            target_batch: 0,
-            encode_threads: 1,
-            pipeline_depth: 1,
+            cfg_feature: 0.0,
+            engine: EngineOptions { target_batch: 0, encode_threads: 1, pipeline_depth: 1 },
         }
+    }
+
+    fn run(
+        recs: &[TraceRecord],
+        cfg: &SimConfig,
+        seq: usize,
+        opts: &PoolOptions,
+    ) -> (SimOutcome, EngineStats) {
+        let mut p = TablePredictor::new(seq);
+        simulate_pool_report(recs, cfg, &mut p, opts).unwrap()
     }
 
     #[test]
     fn pool_with_table_predictor_scales_shards() {
         let (recs, cfg) = records("povray", 6_000);
-        let out = simulate_pool(&recs, &cfg, &table_opts(3, 12)).unwrap();
+        let (out, _) = run(&recs, &cfg, 16, &table_opts(3, 12));
         assert_eq!(out.instructions, 6_000);
         assert!(out.cycles > 0);
         // Shard boundary structure differs from a single-worker run, but
         // the CPI must be in the same ballpark.
-        let one = simulate_pool(&recs, &cfg, &table_opts(1, 12)).unwrap();
+        let (one, _) = run(&recs, &cfg, 16, &table_opts(1, 12));
         let ratio = out.cpi() / one.cpi();
         assert!((0.8..1.25).contains(&ratio), "ratio={ratio}");
     }
@@ -168,9 +171,7 @@ mod tests {
         // 8 requested sub-traces must be redistributed over those 5
         // shards (2+2+2+1+1), not dropped with the empty ones.
         let (recs, cfg) = records("nab", 10);
-        let mut opts = table_opts(8, 8);
-        opts.predictor = PoolPredictor::Table { seq: 8 };
-        let (out, stats) = simulate_pool_report(&recs, &cfg, &opts).unwrap();
+        let (out, stats) = run(&recs, &cfg, 8, &table_opts(8, 8));
         assert_eq!(out.instructions, 10);
         assert_eq!(stats.subtraces, 8);
     }
@@ -181,11 +182,11 @@ mod tests {
         // sub-traces over 8 workers silently became 8. The engine must
         // create all 12.
         let (recs, cfg) = records("gcc", 6_000);
-        let (out, stats) = simulate_pool_report(&recs, &cfg, &table_opts(8, 12)).unwrap();
+        let (out, stats) = run(&recs, &cfg, 16, &table_opts(8, 12));
         assert_eq!(out.instructions, 6_000);
         assert_eq!(stats.subtraces, 12);
         // Exact division still works.
-        let (_, stats) = simulate_pool_report(&recs, &cfg, &table_opts(4, 12)).unwrap();
+        let (_, stats) = run(&recs, &cfg, 16, &table_opts(4, 12));
         assert_eq!(stats.subtraces, 12);
     }
 
@@ -195,7 +196,9 @@ mod tests {
         // total batch slots == total instructions, and with an unbounded
         // target every full round spans every active sub-trace.
         let (recs, cfg) = records("xz", 4_000);
-        let (out, stats) = simulate_pool_report(&recs, &cfg, &table_opts(4, 16)).unwrap();
+        let mut opts = table_opts(4, 16);
+        opts.engine.target_batch = 16;
+        let (out, stats) = run(&recs, &cfg, 16, &opts);
         assert_eq!(stats.slots, out.inferences);
         assert_eq!(stats.target_batch, 16);
         assert!(stats.mean_occupancy() > 8.0, "occupancy={}", stats.mean_occupancy());
@@ -209,10 +212,10 @@ mod tests {
         let mut serial = table_opts(4, 12);
         serial.window = 500;
         let mut piped = serial.clone();
-        piped.encode_threads = 4;
-        piped.pipeline_depth = 2;
-        let (out_s, stats_s) = simulate_pool_report(&recs, &cfg, &serial).unwrap();
-        let (out_p, stats_p) = simulate_pool_report(&recs, &cfg, &piped).unwrap();
+        piped.engine.encode_threads = 4;
+        piped.engine.pipeline_depth = 2;
+        let (out_s, stats_s) = run(&recs, &cfg, 16, &serial);
+        let (out_p, stats_p) = run(&recs, &cfg, 16, &piped);
         assert_eq!(out_s.instructions, out_p.instructions);
         assert_eq!(out_s.cycles, out_p.cycles);
         assert_eq!(out_s.windows, out_p.windows);
@@ -224,7 +227,7 @@ mod tests {
     #[test]
     fn pool_empty_trace_is_ok() {
         let (_, cfg) = records("xz", 1);
-        let out = simulate_pool(&[], &cfg, &table_opts(4, 8)).unwrap();
+        let (out, _) = run(&[], &cfg, 16, &table_opts(4, 8));
         assert_eq!(out.instructions, 0);
         assert_eq!(out.cycles, 0);
     }

@@ -19,8 +19,12 @@
 //!   based implementations.
 //! - [`coordinator`]: the SimNet simulators (sequential + parallel) and the
 //!   batching/worker orchestration.
+//! - [`api`]: the unified session API — [`api::Simulation`] builder,
+//!   [`api::PredictorSpec`], and the machine-readable [`api::SimReport`]
+//!   every CLI/report/bench caller drives runs through.
 //! - [`stats`]: error metrics, CPI series, report generation.
 
+pub mod api;
 pub mod coordinator;
 pub mod des;
 pub mod features;

@@ -14,22 +14,28 @@
 //! ```
 //!
 //! Hand-rolled argument parsing (clap is not vendored in this image); every
-//! flag is `--key value`.
+//! flag is `--key value`. Each subcommand rejects flags it does not accept,
+//! naming the ones it does. All ML-simulation runs are constructed through
+//! [`simnet::api::Simulation`]; `simulate-ml --json PATH` writes the run's
+//! [`simnet::api::SimReport`] as JSON.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use simnet::coordinator::pool::PoolPredictor;
-use simnet::coordinator::{
-    simulate_parallel, simulate_pool_report, simulate_sequential, BatchEngine, EngineOptions,
-    JobSpec, PoolOptions,
-};
+use simnet::api::{PredictorSpec, SimReport, Simulation};
+use simnet::coordinator::EngineOptions;
 use simnet::des::{simulate, BpChoice, SimConfig};
-use simnet::reports::{self, attribution, figs, sweeps, table4, PredictorChoice};
-use simnet::trace::{build_dataset, DatasetOptions, TraceReader, TraceRecord, TraceWriter};
+use simnet::reports::{self, attribution, figs, sweeps, table4};
+use simnet::trace::{build_dataset, DatasetOptions, TraceRecord, TraceWriter};
 use simnet::workload::{find, suite, training_set};
+
+/// Flags every simulation-flavored subcommand shares (machine config).
+const CONFIG_FLAGS: &[&str] = &["config", "bp", "l2-kb", "rob"];
+
+/// Flags that select a predictor ([`predictor_spec_from`]).
+const PREDICTOR_FLAGS: &[&str] = &["table", "seq", "model", "weights", "artifacts"];
 
 /// Parsed `--key value` flags plus positional words.
 struct Args {
@@ -70,6 +76,40 @@ impl Args {
     fn list(&self, key: &str) -> Option<Vec<String>> {
         self.get(key).map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
     }
+
+    /// Comma-separated numeric list; a malformed element is a clean CLI
+    /// error (`--key: bad value v`), never a panic.
+    fn num_list<T: std::str::FromStr>(&self, key: &str) -> Result<Option<Vec<T>>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(raw) => raw
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|_| anyhow!("--{key}: bad value {s}")))
+                .collect::<Result<Vec<T>>>()
+                .map(Some),
+        }
+    }
+
+    /// Reject flags the subcommand does not accept, listing the accepted
+    /// set (pre-API the parser silently ignored unknown `--flags`, so a
+    /// typo like `--subtrace` ran with the default and no warning).
+    fn check_flags(&self, cmd: &str, allowed: &[&[&str]]) -> Result<()> {
+        let allowed: Vec<&str> = allowed.concat();
+        let mut unknown: Vec<&str> =
+            self.flags.keys().map(|k| k.as_str()).filter(|k| !allowed.contains(k)).collect();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        unknown.sort_unstable();
+        let mut accepted: Vec<String> = allowed.iter().map(|f| format!("--{f}")).collect();
+        accepted.sort_unstable();
+        bail!(
+            "unknown flag{} --{} for `{cmd}`; accepted: {}",
+            if unknown.len() > 1 { "s" } else { "" },
+            unknown.join(", --"),
+            if accepted.is_empty() { "(none)".to_string() } else { accepted.join(" ") }
+        )
+    }
 }
 
 /// Build a SimConfig from common flags: --config o3|a64fx, --bp
@@ -101,22 +141,42 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get("artifacts").unwrap_or("artifacts"))
 }
 
-/// Predictor choice from flags: --table (analytical) or --model NAME.
-fn predictor_from(args: &Args, default_model: &str) -> PredictorChoice {
+/// Reject predictor-flag mixes that would silently shadow each other:
+/// `--table` with any ML-only flag, or `--seq` without `--table`. Shared
+/// by [`predictor_spec_from`] and [`report_specs`].
+fn reject_predictor_conflicts(args: &Args, ml_flags: &[&str]) -> Result<()> {
     if args.get("table").is_some() {
-        let seq = args.num("seq", 32usize).unwrap_or(32);
-        PredictorChoice::Table { seq }
-    } else {
-        let model = args.get("model").unwrap_or(default_model).to_string();
-        PredictorChoice::Ml {
-            artifacts: artifacts_dir(args),
-            model: table4::export_name(&model),
-            weights: args
-                .get("weights")
-                .map(PathBuf::from)
-                .or_else(|| Some(artifacts_dir(args).join(format!("{model}.smw"))))
-                .filter(|p| p.exists()),
+        for f in ml_flags {
+            if args.get(f).is_some() {
+                bail!("--table conflicts with --{f} (the analytical predictor takes only --seq)");
+            }
         }
+    } else if args.get("seq").is_some() {
+        bail!("--seq only applies to --table (ML models fix their own sequence length)");
+    }
+    Ok(())
+}
+
+/// Predictor spec from flags: --table (analytical) or --model NAME
+/// [--weights PATH]. An explicit `--weights` path that does not exist is
+/// an error (it used to fall back silently to init weights), and mixing
+/// --table with the ML-only flags is rejected instead of silently
+/// ignoring them.
+fn predictor_spec_from(args: &Args, default_model: &str) -> Result<PredictorSpec> {
+    reject_predictor_conflicts(args, &["model", "weights", "artifacts"])?;
+    if args.get("table").is_some() {
+        Ok(PredictorSpec::table(args.num("seq", 32usize)?))
+    } else {
+        let tag = args.get("model").unwrap_or(default_model);
+        let explicit = args.get("weights").map(PathBuf::from);
+        let has_explicit = explicit.is_some();
+        let spec = PredictorSpec::ml_tag(&artifacts_dir(args), tag, explicit);
+        if has_explicit {
+            // Fail now, with the flag named: a mistyped --weights must
+            // never fall back silently to init weights.
+            spec.validate().context("--weights")?;
+        }
+        Ok(spec)
     }
 }
 
@@ -135,7 +195,7 @@ fn main() -> Result<()> {
         "simulate-ml" => cmd_simulate_ml(&args),
         "report" => cmd_report(&args),
         "sweep" => cmd_sweep(&args),
-        "list-benches" => cmd_list_benches(),
+        "list-benches" => cmd_list_benches(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -152,16 +212,19 @@ fn print_usage() {
          \x20 gen-trace    --bench NAME --n N --out trace.smt [--config o3|a64fx] [--input-seed K]\n\
          \x20 gen-dataset  --out data.smd [--benches a,b,c] [--n-per N] [--seq S] [--limit L]\n\
          \x20 simulate-des --bench NAME --n N [--config ...]\n\
-         \x20 simulate-ml  --bench NAME --n N [--model c3] [--table] [--subtraces S] [--workers W]\n\
-         \x20              [--target-batch B] [--encode-threads T] [--pipeline-depth D]\n\
-         \x20              [--trace file.smt] [--artifacts DIR] [--window W]\n\
+         \x20 simulate-ml  --bench NAME --n N [--model c3] [--table] [--weights W.smw]\n\
+         \x20              [--subtraces S] [--workers W] [--target-batch B]\n\
+         \x20              [--encode-threads T] [--pipeline-depth D] [--trace file.smt]\n\
+         \x20              [--artifacts DIR] [--window W] [--json out.json]\n\
          \x20 report       table4|fig5|fig6|fig10|attribution [--models a,b] [--n N] [--benches ...]\n\
          \x20 sweep        subtrace-size|subtraces|workers|branch-predictor|l2-size|rob-size [...]\n\
-         \x20 list-benches"
+         \x20 list-benches\n\n\
+         Each subcommand rejects flags it does not accept and lists the accepted set."
     );
 }
 
-fn cmd_list_benches() -> Result<()> {
+fn cmd_list_benches(args: &Args) -> Result<()> {
+    args.check_flags("list-benches", &[])?;
     let mut t = simnet::stats::Table::new(&["benchmark", "category", "set"]);
     for b in suite() {
         t.row(vec![
@@ -175,6 +238,7 @@ fn cmd_list_benches() -> Result<()> {
 }
 
 fn cmd_gen_trace(args: &Args) -> Result<()> {
+    args.check_flags("gen-trace", &[CONFIG_FLAGS, &["bench", "n", "out", "input-seed"]])?;
     let bench = args.get("bench").ok_or_else(|| anyhow!("--bench required"))?;
     let n: u64 = args.num("n", 100_000)?;
     let out = args.get("out").ok_or_else(|| anyhow!("--out required"))?;
@@ -196,6 +260,10 @@ fn cmd_gen_trace(args: &Args) -> Result<()> {
 }
 
 fn cmd_gen_dataset(args: &Args) -> Result<()> {
+    args.check_flags(
+        "gen-dataset",
+        &[CONFIG_FLAGS, &["out", "benches", "n-per", "seq", "limit", "context", "rob-mix"]],
+    )?;
     let out = args.get("out").ok_or_else(|| anyhow!("--out required"))?;
     let benches = args
         .list("benches")
@@ -219,7 +287,7 @@ fn cmd_gen_dataset(args: &Args) -> Result<()> {
     };
     // --rob-mix 40,80,120: regenerate the traces under each ROB size and
     // emit one dataset with the ROB size as the config feature (the input
-    // the Â§5 ROB-conditioned model trains against).
+    // the §5 ROB-conditioned model trains against).
     if let Some(mix) = args.list("rob-mix") {
         let mut writer = simnet::trace::DatasetWriter::create(Path::new(out), seq)?;
         let mut seen = std::collections::HashSet::new();
@@ -260,6 +328,7 @@ fn cmd_gen_dataset(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate_des(args: &Args) -> Result<()> {
+    args.check_flags("simulate-des", &[CONFIG_FLAGS, &["bench", "n", "input-seed"]])?;
     let bench = args.get("bench").ok_or_else(|| anyhow!("--bench required"))?;
     let n: u64 = args.num("n", 100_000)?;
     let cfg = config_from(args)?;
@@ -283,84 +352,19 @@ fn cmd_simulate_des(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_simulate_ml(args: &Args) -> Result<()> {
-    let cfg = config_from(args)?;
-    let n: u64 = args.num("n", 100_000)?;
-    let window: u64 = args.num("window", 0)?;
-    // Source: an .smt trace file or a benchmark run through the DES.
-    let (recs, des_cpi) = if let Some(path) = args.get("trace") {
-        let recs: Vec<TraceRecord> =
-            TraceReader::open(Path::new(path))?.collect::<std::io::Result<_>>()?;
-        let cycles: u64 = recs.iter().map(|r| r.f_lat as u64).sum();
-        let cpi = cycles as f64 / recs.len().max(1) as f64;
-        (recs, cpi)
-    } else {
-        let bench = args.get("bench").ok_or_else(|| anyhow!("--bench or --trace required"))?;
-        let b = find(bench).ok_or_else(|| anyhow!("unknown benchmark {bench}"))?;
-        let (recs, stats) = reports::des_trace(&cfg, &b, n, reports::REFERENCE_SEED);
-        (recs, stats.cpi())
-    };
-
-    let workers: usize = args.num("workers", 1)?;
-    let subtraces: usize = args.num("subtraces", 1)?;
-    let target_batch: usize = args.num("target-batch", 0)?;
-    let encode_threads: usize = args.num("encode-threads", 1)?;
-    let pipeline_depth: usize = args.num("pipeline-depth", 2)?;
-    let choice = predictor_from(args, "c3");
-    let mut engine_stats = None;
-    let out = if workers > 1 {
-        let predictor = match &choice {
-            PredictorChoice::Ml { artifacts, model, weights } => PoolPredictor::Ml {
-                artifacts: artifacts.clone(),
-                model: model.clone(),
-                weights: weights.clone(),
-            },
-            PredictorChoice::Table { seq } => PoolPredictor::Table { seq: *seq },
-        };
-        let opts = PoolOptions {
-            workers,
-            subtraces,
-            predictor,
-            window,
-            target_batch,
-            encode_threads,
-            pipeline_depth,
-        };
-        let (out, stats) = simulate_pool_report(&recs, &cfg, &opts)?;
-        engine_stats = Some(stats);
-        out
-    } else {
-        let mut p = choice.build()?;
-        if subtraces > 1 {
-            let mut engine = BatchEngine::with_options(
-                p.as_mut(),
-                EngineOptions { target_batch, encode_threads, pipeline_depth },
-            );
-            let job = JobSpec { records: &recs, cfg: &cfg, subtraces, window, cfg_feature: 0.0 };
-            engine.submit(job);
-            let report = engine.run()?;
-            engine_stats = Some(report.stats.clone());
-            report.merged()
-        } else {
-            if encode_threads > 1 {
-                eprintln!(
-                    "note: --encode-threads/--pipeline-depth only apply to the batch engine; \
-                     pass --subtraces > 1 or --workers > 1 (running sequentially)"
-                );
-            }
-            simulate_sequential(&recs, &cfg, p.as_mut(), window)?
-        }
-    };
+/// Print the human-readable summary of a [`SimReport`] (the `--json` flag
+/// additionally writes the machine-readable form).
+fn print_report(report: &SimReport) {
     println!(
         "ml[{}] {} instructions: cpi={:.3} (des cpi={:.3}, err={:.2}%) | {:.3} MIPS",
-        choice.label(),
-        out.instructions,
-        out.cpi(),
-        des_cpi,
-        simnet::stats::cpi_error(out.cpi(), des_cpi) * 100.0,
-        out.mips()
+        report.predictor,
+        report.outcome.instructions,
+        report.cpi(),
+        report.des_cpi.unwrap_or(0.0),
+        report.cpi_error().unwrap_or(0.0) * 100.0,
+        report.mips()
     );
-    if let Some(stats) = engine_stats {
+    if let Some(stats) = &report.engine {
         let busy = 1.0 - stats.predictor_idle();
         println!(
             "engine: batches={} mean_occupancy={:.1} target_batch={} starved={} subtraces={} \
@@ -376,14 +380,108 @@ fn cmd_simulate_ml(args: &Args) -> Result<()> {
             (1.0 - busy) * 100.0
         );
     }
+}
+
+fn cmd_simulate_ml(args: &Args) -> Result<()> {
+    args.check_flags(
+        "simulate-ml",
+        &[
+            CONFIG_FLAGS,
+            PREDICTOR_FLAGS,
+            &[
+                "bench",
+                "n",
+                "trace",
+                "input-seed",
+                "subtraces",
+                "workers",
+                "window",
+                "target-batch",
+                "encode-threads",
+                "pipeline-depth",
+                "json",
+            ],
+        ],
+    )?;
+    let cfg = config_from(args)?;
+    let n: u64 = args.num("n", 100_000)?;
+    let window: u64 = args.num("window", 0)?;
+    let workers: usize = args.num("workers", 1)?;
+    let subtraces: usize = args.num("subtraces", 1)?;
+    let engine = EngineOptions {
+        target_batch: args.num("target-batch", 0)?,
+        encode_threads: args.num("encode-threads", 1)?,
+        pipeline_depth: args.num("pipeline-depth", 2)?,
+    };
+    if engine.encode_threads > 1 && workers <= 1 && subtraces <= 1 {
+        eprintln!(
+            "note: --encode-threads/--pipeline-depth only apply to the batch engine; \
+             pass --subtraces > 1 or --workers > 1 (running sequentially)"
+        );
+    }
+    let mut sim = Simulation::new()
+        .config(&cfg)
+        .predictor(predictor_spec_from(args, "c3")?)
+        .subtraces(subtraces)
+        .workers(workers)
+        .window(window)
+        .engine(engine)
+        .input_seed(args.num("input-seed", reports::REFERENCE_SEED)?);
+    sim = if let Some(path) = args.get("trace") {
+        // The trace file already fixes the workload; flags that would
+        // silently lose to it are rejected, not ignored.
+        for f in ["bench", "n", "input-seed"] {
+            if args.get(f).is_some() {
+                bail!("--trace conflicts with --{f} (the trace file fixes the workload)");
+            }
+        }
+        sim.trace_file(path)
+    } else {
+        let bench = args.get("bench").ok_or_else(|| anyhow!("--bench or --trace required"))?;
+        sim.bench(bench, n)
+    };
+    let report = sim.run()?;
+    print_report(&report);
     if window > 0 {
-        print!("{}", simnet::stats::render_cpi_series("windows", &out.windows));
+        print!("{}", simnet::stats::render_cpi_series("windows", &report.outcome.windows));
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
     }
     Ok(())
 }
 
 fn cmd_report(args: &Args) -> Result<()> {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("table4");
+    match which {
+        "table4" => args.check_flags(
+            "report table4",
+            &[CONFIG_FLAGS, &["models", "n", "subtrace", "artifacts"]],
+        )?,
+        "fig5" => args.check_flags(
+            "report fig5",
+            &[CONFIG_FLAGS, &["table", "seq", "models", "artifacts", "n", "benches", "subtrace"]],
+        )?,
+        "fig6" => args.check_flags(
+            "report fig6",
+            &[CONFIG_FLAGS, &["table", "seq", "models", "artifacts", "n", "benches", "window"]],
+        )?,
+        "fig10" => args.check_flags(
+            "report fig10",
+            &[CONFIG_FLAGS, &["models", "bench", "artifacts", "n", "subtrace"]],
+        )?,
+        "attribution" => args.check_flags(
+            "report attribution",
+            &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["samples", "benches", "n"]],
+        )?,
+        "dataset-size" => {
+            args.check_flags("report dataset-size", &[CONFIG_FLAGS, &["artifacts", "n"]])?
+        }
+        other => {
+            bail!("unknown report {other} (table4|fig5|fig6|fig10|attribution|dataset-size)")
+        }
+    }
     let cfg = config_from(args)?;
     let artifacts = artifacts_dir(args);
     let n: u64 = args.num("n", 50_000)?;
@@ -404,13 +502,13 @@ fn cmd_report(args: &Args) -> Result<()> {
             print!("{}", table4::run(&artifacts, &models, &cfg, n, subtrace)?);
         }
         "fig5" => {
-            let choices = report_choices(args, &artifacts)?;
-            print!("{}", figs::fig5(&cfg, &choices, n, subtrace, benches.as_deref())?);
+            let specs = report_specs(args, &artifacts)?;
+            print!("{}", figs::fig5(&cfg, &specs, n, subtrace, benches.as_deref())?);
         }
         "fig6" => {
-            let choices = report_choices(args, &artifacts)?;
+            let specs = report_specs(args, &artifacts)?;
             let window: u64 = args.num("window", n / 50)?;
-            print!("{}", figs::fig6(&cfg, &choices, n, window.max(1), benches.as_deref())?);
+            print!("{}", figs::fig6(&cfg, &specs, n, window.max(1), benches.as_deref())?);
         }
         "fig10" => {
             let models = args.list("models").unwrap_or_else(|| vec!["c3".into(), "rb".into()]);
@@ -420,21 +518,16 @@ fn cmd_report(args: &Args) -> Result<()> {
             let t0 = std::time::Instant::now();
             let (recs, _) = reports::des_trace(&cfg, &b, n, reports::REFERENCE_SEED);
             let des_mips = n as f64 / t0.elapsed().as_secs_f64() / 1e6;
-            let mut sim_mips = Vec::new();
-            for m in &models {
-                let choice = PredictorChoice::ml(&artifacts, &table4::export_name(m));
-                if let Ok(mut p) = choice.build() {
-                    let subs = (recs.len() / subtrace.max(1)).max(1);
-                    let out = simulate_parallel(&recs, &cfg, p.as_mut(), subs, 0)?;
-                    sim_mips.push((m.clone(), out.mips()));
-                }
-            }
+            let subs = (recs.len() / subtrace.max(1)).max(1);
+            // Unloadable models are skipped with the error on stderr
+            // (fig10_sim_mips), never silently; simulation failures abort.
+            let sim_mips = figs::fig10_sim_mips(&artifacts, &models, &cfg, &recs, subs)?;
             print!("{}", figs::fig10(&artifacts, &models, &cfg, &sim_mips, des_mips)?);
         }
         "attribution" => {
-            let choice = predictor_from(args, "c3");
+            let spec = predictor_spec_from(args, "c3")?;
             let samples: usize = args.num("samples", 256)?;
-            let attr = attribution::attribution(&cfg, &choice, samples, benches.as_deref())?;
+            let attr = attribution::attribution(&cfg, &spec, samples, benches.as_deref())?;
             print!("{}", attribution::render(&attr));
         }
         "dataset-size" => {
@@ -458,83 +551,83 @@ fn cmd_report(args: &Args) -> Result<()> {
             println!("== §4.5: training dataset size ==");
             print!("{}", t.render());
         }
-        other => {
-            bail!("unknown report {other} (table4|fig5|fig6|fig10|attribution|dataset-size)")
-        }
+        _ => unreachable!("validated above"),
     }
     Ok(())
 }
 
-/// Predictor list for fig5/fig6: --models or --table.
-fn report_choices(args: &Args, artifacts: &Path) -> Result<Vec<PredictorChoice>> {
+/// Predictor list for fig5/fig6: --models or --table (mixing them is an
+/// error, via [`reject_predictor_conflicts`]).
+fn report_specs(args: &Args, artifacts: &Path) -> Result<Vec<PredictorSpec>> {
+    reject_predictor_conflicts(args, &["models", "artifacts"])?;
     if args.get("table").is_some() {
         let seq: usize = args.num("seq", 32)?;
-        return Ok(vec![PredictorChoice::Table { seq }]);
+        return Ok(vec![PredictorSpec::table(seq)]);
     }
     let models = args
         .list("models")
         .unwrap_or_else(|| vec!["c3".into(), "rb".into(), "ithemal_lstm2".into()]);
-    Ok(models
-        .iter()
-        .map(|m| PredictorChoice::Ml {
-            artifacts: artifacts.to_path_buf(),
-            model: table4::export_name(m),
-            weights: Some(artifacts.join(format!("{m}.smw"))).filter(|p| p.exists()),
-        })
-        .collect())
+    Ok(models.iter().map(|m| PredictorSpec::ml_tag(artifacts, m, None)).collect())
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("");
-    let cfg = config_from(args)?;
-    let n: u64 = args.num("n", 48_000)?;
-    let benches = args.list("benches");
-    let choice = predictor_from(args, "c3");
     match which {
-        "subtrace-size" => {
-            let sizes = args
-                .list("sizes")
-                .map(|v| v.iter().map(|s| s.parse().unwrap()).collect::<Vec<usize>>())
-                .unwrap_or_else(|| vec![750, 1_500, 3_000, 6_000, 12_000]);
-            print!("{}", sweeps::fig7(&cfg, &choice, n, &sizes, benches.as_deref())?);
-        }
-        "subtraces" => {
-            let counts = args
-                .list("counts")
-                .map(|v| v.iter().map(|s| s.parse().unwrap()).collect::<Vec<usize>>())
-                .unwrap_or_else(|| vec![1, 4, 16, 64, 256, 1024]);
-            let bench = args.get("bench").unwrap_or("xz");
-            print!("{}", sweeps::fig8(&cfg, &choice, n, &counts, bench)?);
-        }
-        "workers" => {
-            let workers = args
-                .list("counts")
-                .map(|v| v.iter().map(|s| s.parse().unwrap()).collect::<Vec<usize>>())
-                .unwrap_or_else(|| vec![1, 2, 4, 8]);
-            let subtraces: usize = args.num("subtraces", 512)?;
-            let bench = args.get("bench").unwrap_or("xz");
-            print!("{}", sweeps::fig9(&cfg, &choice, n, &workers, subtraces, bench)?);
-        }
-        "branch-predictor" => {
-            print!("{}", sweeps::table5(&cfg, &choice, n, benches.as_deref())?);
-        }
-        "l2-size" => {
-            let sizes = args
-                .list("sizes")
-                .map(|v| v.iter().map(|s| s.parse().unwrap()).collect::<Vec<u64>>())
-                .unwrap_or_else(|| vec![256, 512, 1024, 2048, 4096]);
-            print!("{}", sweeps::l2_sweep(&cfg, &choice, n, &sizes, benches.as_deref())?);
-        }
-        "rob-size" => {
-            let sizes = args
-                .list("sizes")
-                .map(|v| v.iter().map(|s| s.parse().unwrap()).collect::<Vec<usize>>())
-                .unwrap_or_else(|| vec![40, 80, 120]);
-            print!("{}", sweeps::rob_sweep(&cfg, &choice, n, &sizes, benches.as_deref())?);
-        }
+        "subtrace-size" | "l2-size" | "rob-size" => args.check_flags(
+            &format!("sweep {which}"),
+            &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "benches", "sizes"]],
+        )?,
+        "subtraces" => args.check_flags(
+            "sweep subtraces",
+            &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "counts", "bench"]],
+        )?,
+        "workers" => args.check_flags(
+            "sweep workers",
+            &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "counts", "subtraces", "bench"]],
+        )?,
+        "branch-predictor" => args.check_flags(
+            "sweep branch-predictor",
+            &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "benches"]],
+        )?,
         other => bail!(
             "unknown sweep {other} (subtrace-size|subtraces|workers|branch-predictor|l2-size|rob-size)"
         ),
+    }
+    let cfg = config_from(args)?;
+    let n: u64 = args.num("n", 48_000)?;
+    let benches = args.list("benches");
+    let spec = predictor_spec_from(args, "c3")?;
+    match which {
+        "subtrace-size" => {
+            let sizes: Vec<usize> =
+                args.num_list("sizes")?.unwrap_or_else(|| vec![750, 1_500, 3_000, 6_000, 12_000]);
+            print!("{}", sweeps::fig7(&cfg, &spec, n, &sizes, benches.as_deref())?);
+        }
+        "subtraces" => {
+            let counts: Vec<usize> =
+                args.num_list("counts")?.unwrap_or_else(|| vec![1, 4, 16, 64, 256, 1024]);
+            let bench = args.get("bench").unwrap_or("xz");
+            print!("{}", sweeps::fig8(&cfg, &spec, n, &counts, bench)?);
+        }
+        "workers" => {
+            let workers: Vec<usize> = args.num_list("counts")?.unwrap_or_else(|| vec![1, 2, 4, 8]);
+            let subtraces: usize = args.num("subtraces", 512)?;
+            let bench = args.get("bench").unwrap_or("xz");
+            print!("{}", sweeps::fig9(&cfg, &spec, n, &workers, subtraces, bench)?);
+        }
+        "branch-predictor" => {
+            print!("{}", sweeps::table5(&cfg, &spec, n, benches.as_deref())?);
+        }
+        "l2-size" => {
+            let sizes: Vec<u64> =
+                args.num_list("sizes")?.unwrap_or_else(|| vec![256, 512, 1024, 2048, 4096]);
+            print!("{}", sweeps::l2_sweep(&cfg, &spec, n, &sizes, benches.as_deref())?);
+        }
+        "rob-size" => {
+            let sizes: Vec<usize> = args.num_list("sizes")?.unwrap_or_else(|| vec![40, 80, 120]);
+            print!("{}", sweeps::rob_sweep(&cfg, &spec, n, &sizes, benches.as_deref())?);
+        }
+        _ => unreachable!("validated above"),
     }
     Ok(())
 }

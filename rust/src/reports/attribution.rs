@@ -11,12 +11,13 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use crate::api::PredictorSpec;
 use crate::des::SimConfig;
 use crate::features::{feature_group, feature_name, ContextTracker, NUM_FEATURES};
 use crate::predictor::LatencyPredictor;
 use crate::stats::Table;
 
-use super::{des_trace, pick_benches, PredictorChoice, REFERENCE_SEED};
+use super::{des_trace, pick_benches, REFERENCE_SEED};
 
 /// Deterministic xorshift for the permutation (no external RNG crates).
 fn shuffle_indices(n: usize, seed: u64) -> Vec<usize> {
@@ -48,11 +49,11 @@ pub struct Attribution {
 /// from real benchmark traces.
 pub fn attribution(
     cfg: &SimConfig,
-    choice: &PredictorChoice,
+    spec: &PredictorSpec,
     samples: usize,
     benches: Option<&[String]>,
 ) -> Result<Attribution> {
-    let mut predictor = choice.build()?;
+    let mut predictor = spec.build()?;
     let seq = predictor.seq_len();
     let width = seq * NUM_FEATURES;
 
@@ -177,9 +178,9 @@ mod tests {
         // and not at all on register indices — attribution must rank a
         // level feature above every register feature.
         let cfg = SimConfig::default_o3();
-        let choice = PredictorChoice::Table { seq: 8 };
+        let spec = PredictorSpec::table(8);
         let names = vec!["mcf".to_string()];
-        let attr = attribution(&cfg, &choice, 200, Some(&names)).unwrap();
+        let attr = attribution(&cfg, &spec, 200, Some(&names)).unwrap();
         let score = |f: usize| attr.scores[f].1;
         let data_level = crate::features::DATA_HIST_BASE;
         let best_reg = (crate::features::REG_BASE..crate::features::REG_BASE + 14)

@@ -2,41 +2,45 @@
 
 use anyhow::Result;
 
+use crate::api::{PredictorSpec, Simulation};
 use crate::des::SimConfig;
 use crate::stats::{cpi_error, mean, render_cpi_series, Table};
+use crate::trace::TraceRecord;
 
 use super::table4::ModelMeta;
-use super::{des_trace, pick_benches, PredictorChoice, REFERENCE_SEED};
+use super::{des_trace, pick_benches, REFERENCE_SEED};
 
 /// Figure 5: simulated CPI per benchmark, DES vs each predictor.
 pub fn fig5(
     cfg: &SimConfig,
-    choices: &[PredictorChoice],
+    specs: &[PredictorSpec],
     n: u64,
     subtrace: usize,
     benches: Option<&[String]>,
 ) -> Result<String> {
     let mut headers = vec!["benchmark".to_string(), "des_cpi".to_string()];
-    for c in choices {
-        headers.push(format!("{}_cpi", c.label()));
-        headers.push(format!("{}_err", c.label()));
+    for s in specs {
+        headers.push(format!("{}_cpi", s.label()));
+        headers.push(format!("{}_err", s.label()));
     }
     let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(&hrefs);
-    let mut predictors: Vec<_> = choices.iter().map(|c| c.build()).collect::<Result<_>>()?;
-    let mut worst: Vec<(String, f64)> = vec![(String::new(), 0.0); choices.len()];
-    let mut errs: Vec<Vec<f64>> = vec![Vec::new(); choices.len()];
+    let mut predictors: Vec<_> = specs.iter().map(|s| s.build()).collect::<Result<_>>()?;
+    let mut worst: Vec<(String, f64)> = vec![(String::new(), 0.0); specs.len()];
+    let mut errs: Vec<Vec<f64>> = vec![Vec::new(); specs.len()];
 
     for b in pick_benches(benches) {
         let (recs, des) = des_trace(cfg, &b, n, REFERENCE_SEED);
         let mut cells = vec![b.name.to_string(), format!("{:.3}", des.cpi())];
         for (k, p) in predictors.iter_mut().enumerate() {
-            let out = if subtrace == 0 {
-                crate::coordinator::simulate_sequential(&recs, cfg, p.as_mut(), 0)?
-            } else {
-                let subs = (recs.len() / subtrace).max(1);
-                crate::coordinator::simulate_parallel(&recs, cfg, p.as_mut(), subs, 0)?
-            };
+            let subs = if subtrace == 0 { 1 } else { (recs.len() / subtrace).max(1) };
+            let out = Simulation::new()
+                .records(&recs)
+                .config(cfg)
+                .predictor_ref(p.as_mut())
+                .subtraces(subs)
+                .run()?
+                .outcome;
             let err = cpi_error(out.cpi(), des.cpi());
             errs[k].push(err);
             if err > worst[k].1 {
@@ -49,7 +53,7 @@ pub fn fig5(
     }
     let mut report = String::from("== Figure 5: simulated benchmark CPIs ==\n");
     report.push_str(&table.render());
-    for (k, c) in choices.iter().enumerate() {
+    for (k, c) in specs.iter().enumerate() {
         let gt10 = errs[k].iter().filter(|&&e| e > 0.10).count();
         report.push_str(&format!(
             "{}: avg err {:.1}%, {} / {} benchmarks over 10% (worst: {} {:.1}%)\n",
@@ -68,13 +72,13 @@ pub fn fig5(
 /// `window` instructions per point (paper: 1M over 100M).
 pub fn fig6(
     cfg: &SimConfig,
-    choices: &[PredictorChoice],
+    specs: &[PredictorSpec],
     n: u64,
     window: u64,
     benches: Option<&[String]>,
 ) -> Result<String> {
     let mut report = String::from("== Figure 6: phase-level CPI curves ==\n");
-    let mut predictors: Vec<_> = choices.iter().map(|c| c.build()).collect::<Result<_>>()?;
+    let mut predictors: Vec<_> = specs.iter().map(|s| s.build()).collect::<Result<_>>()?;
     for b in pick_benches(benches) {
         let (recs, _) = des_trace(cfg, &b, n, REFERENCE_SEED);
         // DES window series from the trace's own fetch latencies.
@@ -96,8 +100,14 @@ pub fn fig6(
         report.push_str(&format!("--- {} ---\n", b.name));
         report.push_str(&render_cpi_series("des", &des_windows));
         for (k, p) in predictors.iter_mut().enumerate() {
-            let out = crate::coordinator::simulate_sequential(&recs, cfg, p.as_mut(), window)?;
-            report.push_str(&render_cpi_series(&choices[k].label(), &out.windows));
+            let out = Simulation::new()
+                .records(&recs)
+                .config(cfg)
+                .predictor_ref(p.as_mut())
+                .window(window)
+                .run()?
+                .outcome;
+            report.push_str(&render_cpi_series(&specs[k].label(), &out.windows));
             // Max per-window CPI deviation (the dotted error lines).
             let max_dev = des_windows
                 .iter()
@@ -112,6 +122,37 @@ pub fn fig6(
         }
     }
     Ok(report)
+}
+
+/// Measure each model's simulation MIPS over a prepared trace (the
+/// throughput half of Figure 10), shared by the CLI and the bench
+/// harness. A model whose artifacts fail to *load* is skipped, but never
+/// silently — the model and the load error are named on stderr (the
+/// report degrades to the remaining models). A model that loads but then
+/// fails to *simulate* is a real error and propagates.
+pub fn fig10_sim_mips(
+    artifacts: &std::path::Path,
+    models: &[String],
+    cfg: &SimConfig,
+    recs: &[TraceRecord],
+    subtraces: usize,
+) -> Result<Vec<(String, f64)>> {
+    let mut sim_mips = Vec::new();
+    for m in models {
+        match PredictorSpec::ml(artifacts, m).build() {
+            Ok(mut p) => {
+                let out = Simulation::new()
+                    .records(recs)
+                    .config(cfg)
+                    .predictor_ref(p.as_mut())
+                    .subtraces(subtraces)
+                    .run()?;
+                sim_mips.push((m.clone(), out.mips()));
+            }
+            Err(e) => eprintln!("fig10: skipping model {m}: failed to load: {e}"),
+        }
+    }
+    Ok(sim_mips)
 }
 
 /// Figure 10: overall throughput (training + simulation amortization).
@@ -170,14 +211,7 @@ mod tests {
     fn fig5_runs_with_table_predictor() {
         let cfg = SimConfig::default_o3();
         let names = vec!["leela".to_string()];
-        let out = fig5(
-            &cfg,
-            &[PredictorChoice::Table { seq: 16 }],
-            2_000,
-            0,
-            Some(&names),
-        )
-        .unwrap();
+        let out = fig5(&cfg, &[PredictorSpec::table(16)], 2_000, 0, Some(&names)).unwrap();
         assert!(out.contains("leela"));
         assert!(out.contains("avg err"));
     }
@@ -186,14 +220,7 @@ mod tests {
     fn fig6_runs_with_table_predictor() {
         let cfg = SimConfig::default_o3();
         let names = vec!["bwaves".to_string()];
-        let out = fig6(
-            &cfg,
-            &[PredictorChoice::Table { seq: 16 }],
-            4_000,
-            1_000,
-            Some(&names),
-        )
-        .unwrap();
+        let out = fig6(&cfg, &[PredictorSpec::table(16)], 4_000, 1_000, Some(&names)).unwrap();
         assert!(out.contains("bwaves"));
         assert!(out.contains("max |window CPI dev|"));
     }

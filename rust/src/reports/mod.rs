@@ -7,49 +7,9 @@ pub mod figs;
 pub mod sweeps;
 pub mod table4;
 
-use std::path::{Path, PathBuf};
-
-use anyhow::Result;
-
 use crate::des::{simulate, DesStats, SimConfig};
-use crate::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
 use crate::trace::TraceRecord;
 use crate::workload::{suite, Benchmark};
-
-/// Which predictor reports should use.
-#[derive(Debug, Clone)]
-pub enum PredictorChoice {
-    /// AOT model from the artifacts directory.
-    Ml { artifacts: PathBuf, model: String, weights: Option<PathBuf> },
-    /// Analytical fallback (runs without artifacts; used by tests).
-    Table { seq: usize },
-}
-
-impl PredictorChoice {
-    pub fn ml(artifacts: &Path, model: &str) -> Self {
-        PredictorChoice::Ml {
-            artifacts: artifacts.to_path_buf(),
-            model: model.to_string(),
-            weights: None,
-        }
-    }
-
-    pub fn build(&self) -> Result<Box<dyn LatencyPredictor>> {
-        Ok(match self {
-            PredictorChoice::Ml { artifacts, model, weights } => {
-                Box::new(MlPredictor::load(artifacts, model, weights.as_deref())?)
-            }
-            PredictorChoice::Table { seq } => Box::new(TablePredictor::new(*seq)),
-        })
-    }
-
-    pub fn label(&self) -> String {
-        match self {
-            PredictorChoice::Ml { model, .. } => model.clone(),
-            PredictorChoice::Table { .. } => "table".into(),
-        }
-    }
-}
 
 /// The "reference workload" input seed used for simulation accuracy runs
 /// (dataset generation uses seed 0 — the "test workload").

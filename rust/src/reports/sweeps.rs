@@ -4,43 +4,47 @@
 
 use anyhow::Result;
 
-use crate::coordinator::pool::PoolPredictor;
-use crate::coordinator::{
-    simulate_parallel, simulate_parallel_cfg, simulate_pool_report, simulate_sequential,
-    PoolOptions,
-};
+use crate::api::{PredictorSpec, Simulation};
 use crate::des::{BpChoice, SimConfig};
 use crate::stats::{cpi_error, mean, speedup_pct, Table};
 
-use super::{
-    des_trace, pick_benches, PredictorChoice, ACCEL_TDP_WATTS, CPU_TDP_WATTS, REFERENCE_SEED,
-};
+use super::{des_trace, pick_benches, ACCEL_TDP_WATTS, CPU_TDP_WATTS, REFERENCE_SEED};
 
 /// Figure 7: parallel-simulation error vs sub-trace size.
 pub fn fig7(
     cfg: &SimConfig,
-    choice: &PredictorChoice,
+    spec: &PredictorSpec,
     n: u64,
     sizes: &[usize],
     benches: Option<&[String]>,
 ) -> Result<String> {
     let mut report = String::from("== Figure 7: parallel error vs sub-trace size ==\n");
     let mut table = Table::new(&["subtrace_size", "avg_err_vs_des", "avg_err_vs_sequential"]);
-    let mut predictor = choice.build()?;
+    let mut predictor = spec.build()?;
     let selected = pick_benches(benches);
     // Reference: sequential simulation per benchmark.
     let mut refs = Vec::new();
     for b in &selected {
         let (recs, des) = des_trace(cfg, b, n, REFERENCE_SEED);
-        let seq_out = simulate_sequential(&recs, cfg, predictor.as_mut(), 0)?;
-        refs.push((recs, des.cpi(), seq_out.cpi()));
+        let seq_out = Simulation::new()
+            .records(&recs)
+            .config(cfg)
+            .predictor_ref(predictor.as_mut())
+            .run()?;
+        let seq_cpi = seq_out.cpi();
+        refs.push((recs, des.cpi(), seq_cpi));
     }
     for &size in sizes {
         let mut errs_des = Vec::new();
         let mut errs_seq = Vec::new();
         for (recs, des_cpi, seq_cpi) in &refs {
             let subs = (recs.len() / size).max(1);
-            let out = simulate_parallel(recs, cfg, predictor.as_mut(), subs, 0)?;
+            let out = Simulation::new()
+                .records(recs)
+                .config(cfg)
+                .predictor_ref(predictor.as_mut())
+                .subtraces(subs)
+                .run()?;
             errs_des.push(cpi_error(out.cpi(), *des_cpi));
             errs_seq.push(cpi_error(out.cpi(), *seq_cpi));
         }
@@ -57,7 +61,7 @@ pub fn fig7(
 /// Figure 8: simulation throughput vs number of sub-traces.
 pub fn fig8(
     cfg: &SimConfig,
-    choice: &PredictorChoice,
+    spec: &PredictorSpec,
     n: u64,
     counts: &[usize],
     bench: &str,
@@ -68,10 +72,15 @@ pub fn fig8(
         .pop()
         .ok_or_else(|| anyhow::anyhow!("unknown bench {bench}"))?;
     let (recs, _) = des_trace(cfg, &b, n, REFERENCE_SEED);
-    let mut predictor = choice.build()?;
+    let mut predictor = spec.build()?;
     let mut base = 0.0;
     for &s in counts {
-        let out = simulate_parallel(&recs, cfg, predictor.as_mut(), s, 0)?;
+        let out = Simulation::new()
+            .records(&recs)
+            .config(cfg)
+            .predictor_ref(predictor.as_mut())
+            .subtraces(s)
+            .run()?;
         let mips = out.mips();
         if s == counts[0] {
             base = mips;
@@ -94,7 +103,7 @@ pub fn fig8(
 /// device; the power model books one CPU socket plus one accelerator.
 pub fn fig9(
     cfg: &SimConfig,
-    choice: &PredictorChoice,
+    spec: &PredictorSpec,
     n: u64,
     workers: &[usize],
     subtraces: usize,
@@ -108,29 +117,20 @@ pub fn fig9(
     let (recs, _) = des_trace(cfg, &b, n, REFERENCE_SEED);
     let des_wall = t_des.elapsed().as_secs_f64();
     let des_mips = n as f64 / des_wall / 1e6;
-    let pool_pred = match choice {
-        PredictorChoice::Ml { artifacts, model, weights } => PoolPredictor::Ml {
-            artifacts: artifacts.clone(),
-            model: model.clone(),
-            weights: weights.clone(),
-        },
-        PredictorChoice::Table { seq } => PoolPredictor::Table { seq: *seq },
-    };
+    let mut predictor = spec.build()?;
     let mut table = Table::new(&[
         "jobs", "MIPS", "speedup_vs_des", "batch_occupancy", "KIPS/W(sim)", "KIPS/W(des)",
     ]);
     for &w in workers {
-        let opts = PoolOptions {
-            workers: w,
-            subtraces: subtraces.max(w),
-            predictor: pool_pred.clone(),
-            window: 0,
-            target_batch: 0,
-            encode_threads: 1,
-            pipeline_depth: 1,
-        };
-        let (out, stats) = simulate_pool_report(&recs, cfg, &opts)?;
-        let mips = out.mips();
+        let run = Simulation::new()
+            .records(&recs)
+            .config(cfg)
+            .predictor_ref(predictor.as_mut())
+            .workers(w)
+            .subtraces(subtraces.max(w))
+            .run()?;
+        let stats = run.engine.clone().unwrap_or_default();
+        let mips = run.mips();
         // Power model: DES burns one CPU socket; the ML simulator burns
         // a CPU socket plus the one shared accelerator.
         let sim_watts = CPU_TDP_WATTS + ACCEL_TDP_WATTS;
@@ -162,7 +162,7 @@ fn par_subs(len: usize) -> usize {
 /// the per-benchmark relative-error range.
 pub fn table5(
     cfg_base: &SimConfig,
-    choice: &PredictorChoice,
+    spec: &PredictorSpec,
     n: u64,
     benches: Option<&[String]>,
 ) -> Result<String> {
@@ -170,7 +170,7 @@ pub fn table5(
     let mut table = Table::new(&[
         "predictor", "des_speedup", "sim_speedup", "rel_err_min", "rel_err_max",
     ]);
-    let mut predictor = choice.build()?;
+    let mut predictor = spec.build()?;
     let selected = pick_benches(benches);
 
     // Baseline: bi-mode.
@@ -178,9 +178,14 @@ pub fn table5(
     let mut base_sim = Vec::new();
     for b in &selected {
         let (recs, des) = des_trace(cfg_base, b, n, REFERENCE_SEED);
-        let out = simulate_parallel(&recs, cfg_base, predictor.as_mut(), par_subs(recs.len()), 0)?;
+        let out = Simulation::new()
+            .records(&recs)
+            .config(cfg_base)
+            .predictor_ref(predictor.as_mut())
+            .subtraces(par_subs(recs.len()))
+            .run()?;
         base_des.push(des.cycles);
-        base_sim.push(out.cycles);
+        base_sim.push(out.outcome.cycles);
     }
 
     for (name, bp) in [("BiMode_l", BpChoice::BiModeLarge), ("TAGE-lite", BpChoice::TageLite)] {
@@ -191,9 +196,14 @@ pub fn table5(
         let mut rel_err = Vec::new();
         for (k, b) in selected.iter().enumerate() {
             let (recs, des) = des_trace(&cfg, b, n, REFERENCE_SEED);
-            let out = simulate_parallel(&recs, &cfg, predictor.as_mut(), par_subs(recs.len()), 0)?;
+            let out = Simulation::new()
+                .records(&recs)
+                .config(&cfg)
+                .predictor_ref(predictor.as_mut())
+                .subtraces(par_subs(recs.len()))
+                .run()?;
             let d = speedup_pct(base_des[k], des.cycles);
-            let s = speedup_pct(base_sim[k], out.cycles);
+            let s = speedup_pct(base_sim[k], out.outcome.cycles);
             des_spd.push(d);
             sim_spd.push(s);
             rel_err.push(s - d);
@@ -216,14 +226,14 @@ pub fn table5(
 /// ML sim; prints the average absolute speedup error.
 pub fn l2_sweep(
     cfg_base: &SimConfig,
-    choice: &PredictorChoice,
+    spec: &PredictorSpec,
     n: u64,
     sizes_kb: &[u64],
     benches: Option<&[String]>,
 ) -> Result<String> {
     let mut report = String::from("== L2 cache size exploration (§5) ==\n");
     let mut table = Table::new(&["l2_size", "des_speedup", "sim_speedup", "abs_err"]);
-    let mut predictor = choice.build()?;
+    let mut predictor = spec.build()?;
     let selected = pick_benches(benches);
     let mut per_size: Vec<(u64, Vec<u64>, Vec<u64>)> = Vec::new();
     for &kb in sizes_kb {
@@ -233,9 +243,14 @@ pub fn l2_sweep(
         let mut sim_c = Vec::new();
         for b in &selected {
             let (recs, des) = des_trace(&cfg, b, n, REFERENCE_SEED);
-            let out = simulate_parallel(&recs, &cfg, predictor.as_mut(), par_subs(recs.len()), 0)?;
+            let out = Simulation::new()
+                .records(&recs)
+                .config(&cfg)
+                .predictor_ref(predictor.as_mut())
+                .subtraces(par_subs(recs.len()))
+                .run()?;
             des_c.push(des.cycles);
-            sim_c.push(out.cycles);
+            sim_c.push(out.outcome.cycles);
         }
         per_size.push((kb, des_c, sim_c));
     }
@@ -267,7 +282,7 @@ pub fn l2_sweep(
 /// feature varied (tag `c3_rob`), else falls back to the given predictor.
 pub fn rob_sweep(
     cfg_base: &SimConfig,
-    choice: &PredictorChoice,
+    spec: &PredictorSpec,
     n: u64,
     rob_sizes: &[usize],
     benches: Option<&[String]>,
@@ -278,14 +293,14 @@ pub fn rob_sweep(
     // (`make study` -> c3_rob). With an unconditioned model the feature is
     // held at 0 and the report documents that the simulator cannot see the
     // config change (the paper's motivation for the conditioned model).
-    let conditioned = choice.label().contains("rob");
+    let conditioned = spec.label().contains("rob");
     if !conditioned {
         report.push_str(
             "(model is not ROB-conditioned; cfg feature disabled - run `make study` and pass --model c3_rob)\n",
         );
     }
     let mut table = Table::new(&["rob", "des_speedup", "sim_speedup"]);
-    let mut predictor = choice.build()?;
+    let mut predictor = spec.build()?;
     let selected = pick_benches(benches);
     let mut rows: Vec<(usize, u64, u64)> = Vec::new();
     for &rob in rob_sizes {
@@ -297,16 +312,15 @@ pub fn rob_sweep(
         for b in &selected {
             let (recs, des) = des_trace(&cfg, b, n, REFERENCE_SEED);
             // ML simulation with the ROB size as the config input feature.
-            let out = simulate_parallel_cfg(
-                &recs,
-                &cfg,
-                predictor.as_mut(),
-                par_subs(recs.len()),
-                0,
-                if conditioned { rob as f32 / 256.0 } else { 0.0 },
-            )?;
+            let out = Simulation::new()
+                .records(&recs)
+                .config(&cfg)
+                .predictor_ref(predictor.as_mut())
+                .subtraces(par_subs(recs.len()))
+                .cfg_feature(if conditioned { rob as f32 / 256.0 } else { 0.0 })
+                .run()?;
             des_sum += des.cycles;
-            sim_sum += out.cycles;
+            sim_sum += out.outcome.cycles;
         }
         rows.push((rob, des_sum, sim_sum));
     }
@@ -326,10 +340,10 @@ pub fn rob_sweep(
 mod tests {
     use super::*;
 
-    fn tiny() -> (SimConfig, PredictorChoice, Vec<String>) {
+    fn tiny() -> (SimConfig, PredictorSpec, Vec<String>) {
         (
             SimConfig::default_o3(),
-            PredictorChoice::Table { seq: 16 },
+            PredictorSpec::table(16),
             vec!["exchange2".to_string(), "lbm".to_string()],
         )
     }

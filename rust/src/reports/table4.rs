@@ -6,10 +6,11 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::api::{PredictorSpec, Simulation};
 use crate::des::SimConfig;
 use crate::stats::{cpi_error, mean, Table};
 
-use super::{des_trace, pick_benches, PredictorChoice, REFERENCE_SEED};
+use super::{des_trace, pick_benches, REFERENCE_SEED};
 
 /// Prediction-error metadata recorded by train.py in `<model>.meta`.
 #[derive(Debug, Clone, Default)]
@@ -57,24 +58,26 @@ pub struct Table4Row {
 /// per benchmark; parallel sub-traces sized `subtrace` (0 = sequential).
 pub fn simulation_errors(
     cfg: &SimConfig,
-    choice: &PredictorChoice,
+    spec: &PredictorSpec,
     n: u64,
     subtrace: usize,
     benches: Option<&[String]>,
 ) -> Result<(Vec<(String, bool, f64, f64, f64)>, f64)> {
     // returns (bench, is_training, des_cpi, sim_cpi, err), overall mips
     let mut rows = Vec::new();
-    let mut predictor = choice.build()?;
+    let mut predictor = spec.build()?;
     let mut insts = 0u64;
     let mut wall = 0.0f64;
     for b in pick_benches(benches) {
         let (recs, des) = des_trace(cfg, &b, n, REFERENCE_SEED);
-        let out = if subtrace == 0 {
-            crate::coordinator::simulate_sequential(&recs, cfg, predictor.as_mut(), 0)?
-        } else {
-            let subs = (recs.len() / subtrace).max(1);
-            crate::coordinator::simulate_parallel(&recs, cfg, predictor.as_mut(), subs, 0)?
-        };
+        let subs = if subtrace == 0 { 1 } else { (recs.len() / subtrace).max(1) };
+        let out = Simulation::new()
+            .records(&recs)
+            .config(cfg)
+            .predictor_ref(predictor.as_mut())
+            .subtraces(subs)
+            .run()?
+            .outcome;
         let err = cpi_error(out.cpi(), des.cpi());
         rows.push((b.name.to_string(), b.training, des.cpi(), out.cpi(), err));
         insts += out.instructions;
@@ -103,12 +106,9 @@ pub fn run(
             report.push_str(&format!("(skipping {tag}: no {tag}.meta in artifacts)\n"));
             continue;
         };
-        let choice = PredictorChoice::Ml {
-            artifacts: artifacts.to_path_buf(),
-            model: export_name(tag),
-            weights: Some(artifacts.join(format!("{tag}.smw"))),
-        };
-        let (rows, mips) = simulation_errors(cfg, &choice, n, subtrace, None)?;
+        let spec =
+            PredictorSpec::ml(artifacts, tag).with_weights(artifacts.join(format!("{tag}.smw")));
+        let (rows, mips) = simulation_errors(cfg, &spec, n, subtrace, None)?;
         let train: Vec<f64> = rows.iter().filter(|r| r.1).map(|r| r.4).collect();
         let sim: Vec<f64> = rows.iter().filter(|r| !r.1).map(|r| r.4).collect();
         let all: Vec<f64> = rows.iter().map(|r| r.4).collect();
@@ -129,37 +129,16 @@ pub fn run(
     Ok(report)
 }
 
-/// Trained tags may carry suffixes (e.g. `c3_reg`, `c3_big`) while sharing
-/// the exported HLO of their base architecture.
-pub fn export_name(tag: &str) -> String {
-    for base in ["ithemal_lstm2", "lstm2", "fc2", "fc3", "c1", "c3", "rb", "tx2"] {
-        if tag == base || tag.starts_with(&format!("{base}_")) {
-            return base.to_string();
-        }
-    }
-    tag.to_string()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn export_name_strips_suffixes() {
-        assert_eq!(export_name("c3"), "c3");
-        assert_eq!(export_name("c3_reg"), "c3");
-        assert_eq!(export_name("ithemal_lstm2"), "ithemal_lstm2");
-        assert_eq!(export_name("lstm2"), "lstm2");
-        assert_eq!(export_name("rb_big"), "rb");
-    }
-
-    #[test]
     fn simulation_errors_with_table_predictor() {
         let cfg = SimConfig::default_o3();
-        let choice = PredictorChoice::Table { seq: 16 };
+        let spec = PredictorSpec::table(16);
         let names: Vec<String> = vec!["exchange2".into(), "mcf".into()];
-        let (rows, _mips) =
-            simulation_errors(&cfg, &choice, 3_000, 0, Some(&names)).unwrap();
+        let (rows, _mips) = simulation_errors(&cfg, &spec, 3_000, 0, Some(&names)).unwrap();
         assert_eq!(rows.len(), 2);
         for (name, _, des_cpi, sim_cpi, err) in rows {
             assert!(des_cpi > 0.0 && sim_cpi > 0.0, "{name}");

@@ -1,0 +1,197 @@
+//! Equivalence tests pinning `api::Simulation` to the legacy entry points
+//! it unifies: builder-sequential must reproduce `simulate_sequential`,
+//! builder-engine the direct `BatchEngine` path, and builder-pool the
+//! direct `simulate_pool_report` call — byte-identical cycle counts,
+//! windows, and batching statistics, not "close enough". Plus the
+//! `SimReport::to_json` golden test for the machine-readable format.
+
+use simnet::api::{ExecMode, PredictorSpec, SimReport, Simulation};
+use simnet::coordinator::{
+    simulate_parallel, simulate_pool_report, simulate_sequential, BatchEngine, EngineOptions,
+    EngineStats, JobSpec, PoolOptions, SimOutcome,
+};
+use simnet::des::{simulate, SimConfig};
+use simnet::predictor::TablePredictor;
+use simnet::trace::TraceRecord;
+use simnet::workload::find;
+
+fn records(bench: &str, n: u64) -> (Vec<TraceRecord>, SimConfig) {
+    let cfg = SimConfig::default_o3();
+    let b = find(bench).unwrap();
+    let mut recs = Vec::new();
+    simulate(&cfg, b.workload(0).stream(), n, |e| recs.push(TraceRecord::from(e)));
+    (recs, cfg)
+}
+
+#[test]
+fn builder_sequential_matches_legacy_sequential() {
+    let (recs, cfg) = records("gcc", 6_000);
+    let mut p = TablePredictor::new(16);
+    let legacy = simulate_sequential(&recs, &cfg, &mut p, 1_000).unwrap();
+
+    let report = Simulation::new()
+        .records(&recs)
+        .config(&cfg)
+        .predictor(PredictorSpec::table(16))
+        .window(1_000)
+        .run()
+        .unwrap();
+    assert_eq!(report.mode, ExecMode::Sequential);
+    assert!(report.engine.is_none());
+    assert_eq!(report.outcome.instructions, legacy.instructions);
+    assert_eq!(report.outcome.cycles, legacy.cycles);
+    assert_eq!(report.outcome.windows, legacy.windows);
+    assert_eq!(report.outcome.inferences, legacy.inferences);
+}
+
+#[test]
+fn builder_engine_matches_legacy_batch_engine() {
+    let (recs, cfg) = records("leela", 4_000);
+    let opts = EngineOptions { target_batch: 8, encode_threads: 1, pipeline_depth: 1 };
+    let mut p = TablePredictor::new(16);
+    let mut engine = BatchEngine::with_options(&mut p, opts);
+    let job = JobSpec { records: &recs, cfg: &cfg, subtraces: 4, window: 500, cfg_feature: 0.0 };
+    engine.submit(job);
+    let legacy = engine.run().unwrap();
+    let legacy_stats = legacy.stats.clone();
+    let legacy_out = legacy.merged();
+
+    let report = Simulation::new()
+        .records(&recs)
+        .config(&cfg)
+        .predictor(PredictorSpec::table(16))
+        .subtraces(4)
+        .window(500)
+        .engine(opts)
+        .run()
+        .unwrap();
+    assert_eq!(report.mode, ExecMode::Engine);
+    assert_eq!(report.outcome.instructions, legacy_out.instructions);
+    assert_eq!(report.outcome.cycles, legacy_out.cycles);
+    assert_eq!(report.outcome.windows, legacy_out.windows);
+    let stats = report.engine.expect("engine stats");
+    assert_eq!(stats.batches, legacy_stats.batches);
+    assert_eq!(stats.slots, legacy_stats.slots);
+    assert_eq!(stats.starved, legacy_stats.starved);
+    assert_eq!(stats.target_batch, legacy_stats.target_batch);
+    assert_eq!(stats.subtraces, legacy_stats.subtraces);
+}
+
+#[test]
+fn builder_engine_matches_legacy_parallel() {
+    // The historical `simulate_parallel` entry point (unbounded batch,
+    // serial encode) must also be reproduced exactly.
+    let (recs, cfg) = records("leela", 4_000);
+    let mut p = TablePredictor::new(16);
+    let legacy = simulate_parallel(&recs, &cfg, &mut p, 4, 0).unwrap();
+
+    let report = Simulation::new()
+        .records(&recs)
+        .config(&cfg)
+        .predictor(PredictorSpec::table(16))
+        .subtraces(4)
+        .engine(EngineOptions { target_batch: 0, encode_threads: 1, pipeline_depth: 1 })
+        .run()
+        .unwrap();
+    assert_eq!(report.outcome.instructions, legacy.instructions);
+    assert_eq!(report.outcome.cycles, legacy.cycles);
+    assert_eq!(report.outcome.windows, legacy.windows);
+}
+
+#[test]
+fn builder_pool_matches_legacy_pool() {
+    let (recs, cfg) = records("gcc", 6_000);
+    let engine = EngineOptions { target_batch: 0, encode_threads: 1, pipeline_depth: 1 };
+    let opts = PoolOptions { workers: 3, subtraces: 12, window: 500, cfg_feature: 0.0, engine };
+    let mut p = TablePredictor::new(16);
+    let (legacy_out, legacy_stats) = simulate_pool_report(&recs, &cfg, &mut p, &opts).unwrap();
+
+    let report = Simulation::new()
+        .records(&recs)
+        .config(&cfg)
+        .predictor(PredictorSpec::table(16))
+        .workers(3)
+        .subtraces(12)
+        .window(500)
+        .engine(engine)
+        .run()
+        .unwrap();
+    assert_eq!(report.mode, ExecMode::Pool);
+    assert_eq!(report.outcome.instructions, legacy_out.instructions);
+    assert_eq!(report.outcome.cycles, legacy_out.cycles);
+    assert_eq!(report.outcome.windows, legacy_out.windows);
+    let stats = report.engine.expect("pool stats");
+    assert_eq!(stats.batches, legacy_stats.batches);
+    assert_eq!(stats.slots, legacy_stats.slots);
+    assert_eq!(stats.subtraces, legacy_stats.subtraces);
+}
+
+#[test]
+fn sim_report_to_json_golden() {
+    let report = SimReport {
+        predictor: "table".into(),
+        mode: ExecMode::Engine,
+        bench: Some("gcc".into()),
+        config: "default_o3".into(),
+        outcome: SimOutcome {
+            instructions: 1000,
+            cycles: 1500,
+            windows: vec![(500, 700), (500, 800)],
+            wall_seconds: 0.25,
+            inferences: 1000,
+        },
+        engine: Some(EngineStats {
+            batches: 250,
+            slots: 1000,
+            target_batch: 4,
+            starved: 2,
+            subtraces: 4,
+            encode_threads: 1,
+            pipeline_depth: 1,
+            predict_seconds: 0.125,
+            engine_seconds: 0.25,
+        }),
+        des_cpi: Some(1.25),
+    };
+    let expected = concat!(
+        "{\n",
+        "  \"schema\": \"simnet.sim_report/v1\",\n",
+        "  \"predictor\": \"table\",\n",
+        "  \"mode\": \"engine\",\n",
+        "  \"bench\": \"gcc\",\n",
+        "  \"config\": \"default_o3\",\n",
+        "  \"instructions\": 1000,\n",
+        "  \"cycles\": 1500,\n",
+        "  \"inferences\": 1000,\n",
+        "  \"cpi\": 1.500000,\n",
+        "  \"des_cpi\": 1.250000,\n",
+        "  \"cpi_err_pct\": 20.000000,\n",
+        "  \"mips\": 0.004000,\n",
+        "  \"wall_seconds\": 0.250000,\n",
+        "  \"windows\": [[500, 700], [500, 800]],\n",
+        "  \"engine\": {\"batches\": 250, \"slots\": 1000, \"target_batch\": 4, ",
+        "\"starved\": 2, \"subtraces\": 4, \"encode_threads\": 1, ",
+        "\"pipeline_depth\": 1, \"mean_occupancy\": 4.000000, \"fill\": 1.000000, ",
+        "\"predictor_idle\": 0.500000, \"predict_seconds\": 0.125000, ",
+        "\"engine_seconds\": 0.250000}\n",
+        "}\n",
+    );
+    assert_eq!(report.to_json(), expected);
+}
+
+#[test]
+fn real_run_json_has_required_keys() {
+    // The acceptance shape of `repro simulate-ml --json`: instructions,
+    // cpi, mips, and engine stats must be present.
+    let report = Simulation::new()
+        .bench("gcc", 2_000)
+        .predictor(PredictorSpec::table(16))
+        .subtraces(4)
+        .run()
+        .unwrap();
+    let json = report.to_json();
+    for key in ["\"instructions\":", "\"cpi\":", "\"mips\":", "\"engine\": {", "\"des_cpi\":"] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+    assert!(json.contains("\"bench\": \"gcc\""));
+}
