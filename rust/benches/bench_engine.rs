@@ -50,6 +50,8 @@ impl Row {
 fn run_cfg(
     recs: &[TraceRecord],
     cfg: &SimConfig,
+    spec: PredictorSpec,
+    prefix: &str,
     target: usize,
     threads: usize,
     depth: usize,
@@ -57,7 +59,7 @@ fn run_cfg(
     let report = Simulation::new()
         .records(recs)
         .config(cfg)
-        .predictor(PredictorSpec::table(16))
+        .predictor(spec)
         .workers(JOBS)
         .subtraces(SUBTRACES)
         .engine(EngineOptions {
@@ -67,7 +69,7 @@ fn run_cfg(
         })
         .run()
         .expect("engine run");
-    Row { name: format!("t{threads}_d{depth}_b{target}"), threads, depth, target, report }
+    Row { name: format!("{prefix}t{threads}_d{depth}_b{target}"), threads, depth, target, report }
 }
 
 /// Best serial (threads<=1) and threaded (threads>1) MIPS across rows —
@@ -147,7 +149,7 @@ fn main() {
         for &threads in threads_list {
             // Serial runs lockstep (depth 1); threaded runs double-buffer.
             let depth = if threads > 1 { 2 } else { 1 };
-            let row = run_cfg(&recs, &cfg, target, threads, depth);
+            let row = run_cfg(&recs, &cfg, PredictorSpec::table(16), "", target, threads, depth);
             let stats = row.report.engine.clone().unwrap_or_default();
             table.row(vec![
                 row.threads.to_string(),
@@ -162,6 +164,19 @@ fn main() {
         }
     }
     print!("{}", table.render());
+
+    // Native pure-Rust NN inference through the same engine. Artifact-free
+    // (deterministic init weights at seq 8 unless trained fc2 artifacts
+    // exist), so the CI bench-smoke gate can hold a floor on real matmul
+    // throughput, not just the analytical table path.
+    common::hr("native backend (pure-Rust fc2 inference)");
+    let native_cfgs: &[(usize, usize)] = if quick { &[(4, 2)] } else { &[(1, 1), (4, 2)] };
+    for &(threads, depth) in native_cfgs {
+        let spec = PredictorSpec::native(common::artifacts(), "fc2", 8);
+        let row = run_cfg(&recs, &cfg, spec, "native_fc2_", 64, threads, depth);
+        println!("  {}: {:.3} MIPS", row.name, row.mips());
+        rows.push(row);
+    }
 
     let (serial, threaded) = best_mips(&rows);
     println!(

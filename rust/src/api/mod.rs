@@ -8,9 +8,11 @@
 //! parallel, dynamically batched, and pooled across concurrent jobs.
 //! This module makes that true at the API level too: every report,
 //! sweep, CLI command, and bench constructs its runs through
-//! [`Simulation`], selects predictors with [`PredictorSpec`], and gets a
-//! [`SimReport`] back — including the JSON the `repro simulate-ml
-//! --json` flag and the bench harnesses emit.
+//! [`Simulation`], selects predictors with [`PredictorSpec`] — the
+//! analytical table, the PJRT backend, or the pure-Rust native backend
+//! ([`Backend`], [`WeightsSource`]) — and gets a [`SimReport`] back,
+//! including the JSON the `repro simulate-ml --json` flag and the bench
+//! harnesses emit.
 //!
 //! ```no_run
 //! use simnet::api::{PredictorSpec, Simulation};
@@ -54,7 +56,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, bail, Result};
 
 pub use report::{ExecMode, SimReport};
-pub use spec::{export_name, PredictorSpec};
+pub use spec::{export_name, Backend, PredictorSpec, WeightsSource};
 
 use crate::coordinator::{
     simulate_pool_report, simulate_sequential, BatchEngine, EngineOptions, JobSpec, PoolOptions,

@@ -4,15 +4,32 @@
 //! Replaces the two historical per-layer predictor enums (one in
 //! `reports`, one in `coordinator::pool`) that every caller had to
 //! convert between by hand. The spec is plain data (`Clone + Send`), so
-//! it can be stored in
-//! option structs, shipped across threads, and built into a live
-//! [`LatencyPredictor`] any number of times.
+//! it can be stored in option structs, shipped across threads, and built
+//! into a live [`LatencyPredictor`] any number of times.
+//!
+//! The two ML backends (`Ml` = PJRT, `Native` = pure Rust) share one
+//! [`WeightsSource`] for weight resolution and one [`Backend`] switch
+//! ([`PredictorSpec::backend`]) to move a spec between them — so CLI
+//! flags, reports, and benches select the backend without re-deriving
+//! artifact paths or weight rules.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
-use crate::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
+use crate::predictor::{LatencyPredictor, MlPredictor, NativePredictor, TablePredictor};
+
+pub use crate::predictor::{export_name, WeightsSource};
+
+/// Which ML inference backend a spec builds
+/// ([`PredictorSpec::backend`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT-compiled PJRT executables (`PredictorSpec::Ml`).
+    Pjrt,
+    /// Pure-Rust in-process forward pass (`PredictorSpec::Native`).
+    Native,
+}
 
 /// Which predictor backs a simulation run.
 #[derive(Debug, Clone)]
@@ -21,10 +38,13 @@ pub enum PredictorSpec {
     /// trained *tag* (e.g. `c3_rob`); the exported HLO is resolved from
     /// its base architecture ([`export_name`]) at build time, so the tag
     /// survives as the spec's identity (the §5 ROB sweep keys
-    /// conditioning off it). `weights` is an explicit `.smw` path;
-    /// `None` lets the runtime resolve the model's default weights (or
-    /// fall back to init weights).
-    Ml { artifacts: PathBuf, model: String, weights: Option<PathBuf> },
+    /// conditioning off it). Weights resolve per [`WeightsSource`].
+    Ml { artifacts: PathBuf, model: String, weights: WeightsSource },
+    /// Pure-Rust in-process inference over the same `.smw` weights — no
+    /// PJRT runtime. `seq` is the fallback sequence length used only when
+    /// no `<base>.export` manifest exists in `artifacts` (artifact-free
+    /// runs on generated init weights).
+    Native { artifacts: PathBuf, model: String, weights: WeightsSource, seq: usize },
     /// Deterministic analytical fallback (runs without artifacts; used by
     /// tests, benches, and ablations).
     Table { seq: usize },
@@ -36,36 +56,68 @@ impl PredictorSpec {
         PredictorSpec::Table { seq }
     }
 
-    /// ML predictor for a trained model tag; weights resolve to the
-    /// runtime default.
+    /// PJRT ML predictor for a trained model tag; weights resolve
+    /// automatically ([`WeightsSource::Auto`]).
     pub fn ml(artifacts: impl Into<PathBuf>, model: impl Into<String>) -> Self {
-        PredictorSpec::Ml { artifacts: artifacts.into(), model: model.into(), weights: None }
+        PredictorSpec::Ml {
+            artifacts: artifacts.into(),
+            model: model.into(),
+            weights: WeightsSource::Auto,
+        }
     }
 
-    /// ML predictor from a *model tag* (e.g. `c3_reg`) with weight
-    /// resolution: the weights default to `<artifacts>/<tag>.smw` when
-    /// that file exists.
+    /// PJRT ML predictor from a *model tag* (e.g. `c3_reg`).
     ///
     /// A user-supplied `explicit_weights` path is kept verbatim, so
     /// [`validate`](Self::validate) / [`build`](Self::build) error out
     /// naming the path when it does not exist — never a silent fallback
     /// to init weights (which is what the pre-API CLI did with
-    /// `--weights`).
+    /// `--weights`). Without one, weights resolve automatically
+    /// (`<tag>.smw` when present, else the base model's defaults).
     pub fn ml_tag(artifacts: &Path, tag: &str, explicit_weights: Option<PathBuf>) -> Self {
-        let weights = explicit_weights
-            .or_else(|| Some(artifacts.join(format!("{tag}.smw"))).filter(|p| p.exists()));
+        let weights = match explicit_weights {
+            Some(p) => WeightsSource::Path(p),
+            None => WeightsSource::Auto,
+        };
         PredictorSpec::Ml { artifacts: artifacts.to_path_buf(), model: tag.to_string(), weights }
     }
 
-    /// Replace the weights path (explicit; validated by [`build`](Self::build)).
+    /// Native-backend predictor for a model tag. `fallback_seq` applies
+    /// only when `artifacts` has no `<base>.export` manifest.
+    pub fn native(
+        artifacts: impl Into<PathBuf>,
+        model: impl Into<String>,
+        fallback_seq: usize,
+    ) -> Self {
+        PredictorSpec::Native {
+            artifacts: artifacts.into(),
+            model: model.into(),
+            weights: WeightsSource::Auto,
+            seq: fallback_seq,
+        }
+    }
+
+    /// Replace the weights with an explicit path (validated by
+    /// [`build`](Self::build), uniformly across both ML backends).
     ///
     /// # Panics
     /// On a [`PredictorSpec::Table`] spec: the table predictor has no
     /// weights, and silently dropping a caller's weights path is exactly
     /// the misconfiguration class this type exists to eliminate.
-    pub fn with_weights(mut self, path: impl Into<PathBuf>) -> Self {
+    pub fn with_weights(self, path: impl Into<PathBuf>) -> Self {
+        self.with_weights_source(WeightsSource::Path(path.into()))
+    }
+
+    /// Replace the full [`WeightsSource`] (auto / explicit path / init).
+    ///
+    /// # Panics
+    /// On a [`PredictorSpec::Table`] spec, as
+    /// [`with_weights`](Self::with_weights).
+    pub fn with_weights_source(mut self, source: WeightsSource) -> Self {
         match &mut self {
-            PredictorSpec::Ml { weights, .. } => *weights = Some(path.into()),
+            PredictorSpec::Ml { weights, .. } | PredictorSpec::Native { weights, .. } => {
+                *weights = source
+            }
             PredictorSpec::Table { .. } => {
                 panic!("with_weights only applies to ML predictor specs")
             }
@@ -73,15 +125,43 @@ impl PredictorSpec {
         self
     }
 
-    /// Check the spec without constructing a predictor: a named weights
-    /// file must exist, and a table predictor needs at least one slot.
+    /// Move the spec to the given ML inference backend, keeping
+    /// artifacts, model tag, and weights source. Converting to `Native`
+    /// uses fallback sequence length 32 (only consulted without an
+    /// `.export` manifest); converting to `Pjrt` drops the fallback.
+    ///
+    /// # Panics
+    /// On a [`PredictorSpec::Table`] spec: the table predictor is not an
+    /// ML backend, and silently ignoring the requested backend is the
+    /// misconfiguration class this type exists to eliminate.
+    pub fn backend(self, backend: Backend) -> Self {
+        match (self, backend) {
+            (PredictorSpec::Ml { artifacts, model, weights }, Backend::Native) => {
+                PredictorSpec::Native { artifacts, model, weights, seq: 32 }
+            }
+            (PredictorSpec::Native { artifacts, model, weights, .. }, Backend::Pjrt) => {
+                PredictorSpec::Ml { artifacts, model, weights }
+            }
+            (spec @ (PredictorSpec::Ml { .. } | PredictorSpec::Native { .. }), _) => spec,
+            (PredictorSpec::Table { .. }, _) => {
+                panic!("backend only applies to ML predictor specs")
+            }
+        }
+    }
+
+    /// Check the spec without constructing a predictor: an explicit
+    /// weights path must exist (both ML backends, same error), a native
+    /// model must be a supported architecture, and a table predictor
+    /// needs at least one slot.
     pub fn validate(&self) -> Result<()> {
         match self {
-            PredictorSpec::Ml { weights: Some(p), .. } if !p.exists() => {
-                bail!("weights file {} does not exist", p.display())
+            PredictorSpec::Ml { weights, .. } => validate_weights(weights),
+            PredictorSpec::Native { model, weights, .. } => {
+                crate::predictor::native::Arch::parse(&export_name(model))?;
+                validate_weights(weights)
             }
             PredictorSpec::Table { seq: 0 } => bail!("table predictor needs seq >= 1"),
-            _ => Ok(()),
+            PredictorSpec::Table { .. } => Ok(()),
         }
     }
 
@@ -90,31 +170,46 @@ impl PredictorSpec {
         self.validate()?;
         Ok(match self {
             PredictorSpec::Ml { artifacts, model, weights } => {
-                Box::new(MlPredictor::load(artifacts, &export_name(model), weights.as_deref())?)
+                let base = export_name(model);
+                let path = match weights {
+                    WeightsSource::Path(p) => Some(p.clone()),
+                    // The tag's own trained weights win when present;
+                    // otherwise ModelBank resolves the base defaults.
+                    WeightsSource::Auto => {
+                        Some(artifacts.join(format!("{model}.smw"))).filter(|p| p.exists())
+                    }
+                    WeightsSource::Init => Some(artifacts.join(format!("{base}.init.smw"))),
+                };
+                Box::new(MlPredictor::load(artifacts, &base, path.as_deref())?)
+            }
+            PredictorSpec::Native { artifacts, model, weights, seq } => {
+                Box::new(NativePredictor::load(artifacts, model, weights, *seq)?)
             }
             PredictorSpec::Table { seq } => Box::new(TablePredictor::new(*seq)),
         })
     }
 
     /// Short human-readable name (report column headers, CLI output).
+    /// Native specs are prefixed `native:` so reports and the `--json`
+    /// output identify the backend; the tag itself survives verbatim
+    /// (the §5 ROB sweep keys conditioning off it).
     pub fn label(&self) -> String {
         match self {
             PredictorSpec::Ml { model, .. } => model.clone(),
+            PredictorSpec::Native { model, .. } => format!("native:{model}"),
             PredictorSpec::Table { .. } => "table".into(),
         }
     }
 }
 
-/// Map a trained model *tag* to the architecture name its exported HLO is
-/// stored under: tags may carry suffixes (e.g. `c3_reg`, `c3_big`) while
-/// sharing the export of their base architecture.
-pub fn export_name(tag: &str) -> String {
-    for base in ["ithemal_lstm2", "lstm2", "fc2", "fc3", "c1", "c3", "rb", "tx2"] {
-        if tag == base || tag.starts_with(&format!("{base}_")) {
-            return base.to_string();
+/// The uniform explicit-path rule shared by both ML backends.
+fn validate_weights(weights: &WeightsSource) -> Result<()> {
+    match weights {
+        WeightsSource::Path(p) if !p.exists() => {
+            bail!("weights file {} does not exist", p.display())
         }
+        _ => Ok(()),
     }
-    tag.to_string()
 }
 
 // The spec must stay shippable to worker threads and storable in option
@@ -138,14 +233,17 @@ mod tests {
     }
 
     #[test]
-    fn explicit_missing_weights_is_an_error() {
+    fn explicit_missing_weights_is_an_error_on_both_backends() {
         let dir = std::env::temp_dir().join("simnet_spec_nothing_here");
         let missing = dir.join("no_such.smw");
-        // Whether set at construction or after the fact, a named weights
-        // file that does not exist fails validate/build naming the path.
+        // Whether set at construction or after the fact, PJRT or native,
+        // a named weights file that does not exist fails validate/build
+        // naming the path — never a silent fallback to init weights.
         for spec in [
             PredictorSpec::ml_tag(&dir, "c3", Some(missing.clone())),
             PredictorSpec::ml(&dir, "c3").with_weights(&missing),
+            PredictorSpec::native(&dir, "c3", 8).with_weights(&missing),
+            PredictorSpec::ml(&dir, "c3").with_weights(&missing).backend(Backend::Native),
         ] {
             let err = spec.validate().unwrap_err();
             assert!(err.to_string().contains("no_such.smw"), "err: {err}");
@@ -154,13 +252,13 @@ mod tests {
     }
 
     #[test]
-    fn absent_default_weights_resolve_to_none() {
+    fn absent_default_weights_resolve_to_auto() {
         let dir = std::env::temp_dir().join("simnet_spec_nothing_here");
         let spec = PredictorSpec::ml_tag(&dir, "c3", None);
         match spec {
             PredictorSpec::Ml { weights, model, .. } => {
                 assert_eq!(model, "c3");
-                assert!(weights.is_none());
+                assert_eq!(weights, WeightsSource::Auto);
             }
             other => panic!("unexpected spec {other:?}"),
         }
@@ -174,6 +272,45 @@ mod tests {
         let spec = PredictorSpec::ml_tag(&dir, "c3_rob", None);
         assert_eq!(spec.label(), "c3_rob");
         assert_eq!(export_name("c3_rob"), "c3");
+        // Same invariant on the native backend: the tag survives in the
+        // label behind the backend prefix.
+        assert!(spec.backend(Backend::Native).label().contains("c3_rob"));
+    }
+
+    #[test]
+    fn backend_switch_roundtrips() {
+        let dir = std::env::temp_dir().join("simnet_spec_nothing_here");
+        let native = PredictorSpec::ml(&dir, "c3_reg").backend(Backend::Native);
+        assert_eq!(native.label(), "native:c3_reg");
+        match &native {
+            PredictorSpec::Native { model, weights, .. } => {
+                assert_eq!(model, "c3_reg");
+                assert_eq!(*weights, WeightsSource::Auto);
+            }
+            other => panic!("unexpected spec {other:?}"),
+        }
+        let back = native.backend(Backend::Pjrt);
+        assert_eq!(back.label(), "c3_reg");
+        assert!(matches!(back, PredictorSpec::Ml { .. }));
+        // Re-selecting the current backend is a no-op, not an error.
+        assert!(matches!(back.backend(Backend::Pjrt), PredictorSpec::Ml { .. }));
+    }
+
+    #[test]
+    fn native_spec_validates_architecture() {
+        let dir = std::env::temp_dir().join("simnet_spec_nothing_here");
+        let err = PredictorSpec::native(&dir, "lstm2", 8).validate().unwrap_err();
+        assert!(err.to_string().contains("PJRT"), "err: {err}");
+        assert!(PredictorSpec::native(&dir, "c3_rob", 8).validate().is_ok());
+    }
+
+    #[test]
+    fn native_spec_builds_from_init_without_artifacts() {
+        let dir = std::env::temp_dir().join("simnet_spec_nothing_here");
+        let spec = PredictorSpec::native(&dir, "fc2", 8);
+        assert_eq!(spec.label(), "native:fc2");
+        let p = spec.build().unwrap();
+        assert_eq!(p.seq_len(), 8);
     }
 
     #[test]

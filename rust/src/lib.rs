@@ -15,8 +15,8 @@
 //! - [`trace`]: binary trace (`.smt`) and ML dataset (`.smd`) formats.
 //! - [`tensor`]: the `.smw` weight tensor container.
 //! - [`runtime`]: PJRT executable loading/execution (the `xla` crate).
-//! - [`predictor`]: latency-predictor abstraction — ML (PJRT) and table
-//!   based implementations.
+//! - [`predictor`]: latency-predictor abstraction — ML (PJRT), native
+//!   pure-Rust NN inference, and table based implementations.
 //! - [`coordinator`]: the SimNet simulators (sequential + parallel) and the
 //!   batching/worker orchestration.
 //! - [`api`]: the unified session API — [`api::Simulation`] builder,

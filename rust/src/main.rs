@@ -24,7 +24,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use simnet::api::{PredictorSpec, SimReport, Simulation};
+use simnet::api::{Backend, PredictorSpec, SimReport, Simulation, WeightsSource};
 use simnet::coordinator::EngineOptions;
 use simnet::des::{simulate, BpChoice, SimConfig};
 use simnet::reports::{self, attribution, figs, sweeps, table4};
@@ -35,7 +35,7 @@ use simnet::workload::{find, suite, training_set};
 const CONFIG_FLAGS: &[&str] = &["config", "bp", "l2-kb", "rob"];
 
 /// Flags that select a predictor ([`predictor_spec_from`]).
-const PREDICTOR_FLAGS: &[&str] = &["table", "seq", "model", "weights", "artifacts"];
+const PREDICTOR_FLAGS: &[&str] = &["table", "seq", "model", "weights", "artifacts", "backend"];
 
 /// Parsed `--key value` flags plus positional words.
 struct Args {
@@ -141,9 +141,20 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get("artifacts").unwrap_or("artifacts"))
 }
 
+/// Parse `--backend pjrt|native` (default: pjrt).
+fn backend_from(args: &Args) -> Result<Backend> {
+    match args.get("backend").unwrap_or("pjrt") {
+        "pjrt" => Ok(Backend::Pjrt),
+        "native" => Ok(Backend::Native),
+        other => bail!("unknown --backend {other} (pjrt|native)"),
+    }
+}
+
 /// Reject predictor-flag mixes that would silently shadow each other:
-/// `--table` with any ML-only flag, or `--seq` without `--table`. Shared
-/// by [`predictor_spec_from`] and [`report_specs`].
+/// `--table` with any ML-only flag, or `--seq` outside the predictors
+/// that take one (`--table`, and `--backend native` where it is the
+/// fallback for manifest-free runs). Shared by [`predictor_spec_from`]
+/// and [`report_specs`].
 fn reject_predictor_conflicts(args: &Args, ml_flags: &[&str]) -> Result<()> {
     if args.get("table").is_some() {
         for f in ml_flags {
@@ -151,33 +162,52 @@ fn reject_predictor_conflicts(args: &Args, ml_flags: &[&str]) -> Result<()> {
                 bail!("--table conflicts with --{f} (the analytical predictor takes only --seq)");
             }
         }
-    } else if args.get("seq").is_some() {
-        bail!("--seq only applies to --table (ML models fix their own sequence length)");
+    } else if args.get("seq").is_some() && !matches!(args.get("backend"), Some("native")) {
+        bail!(
+            "--seq only applies to --table or --backend native \
+             (PJRT models fix their own sequence length)"
+        );
     }
     Ok(())
 }
 
 /// Predictor spec from flags: --table (analytical) or --model NAME
-/// [--weights PATH]. An explicit `--weights` path that does not exist is
-/// an error (it used to fall back silently to init weights), and mixing
-/// --table with the ML-only flags is rejected instead of silently
-/// ignoring them.
+/// [--backend pjrt|native] [--weights PATH|init]. An explicit `--weights`
+/// path that does not exist is an error (it used to fall back silently to
+/// init weights) on both ML backends, and mixing --table with the
+/// ML-only flags is rejected instead of silently ignoring them.
 fn predictor_spec_from(args: &Args, default_model: &str) -> Result<PredictorSpec> {
-    reject_predictor_conflicts(args, &["model", "weights", "artifacts"])?;
+    reject_predictor_conflicts(args, &["model", "weights", "artifacts", "backend"])?;
     if args.get("table").is_some() {
-        Ok(PredictorSpec::table(args.num("seq", 32usize)?))
-    } else {
-        let tag = args.get("model").unwrap_or(default_model);
-        let explicit = args.get("weights").map(PathBuf::from);
-        let has_explicit = explicit.is_some();
-        let spec = PredictorSpec::ml_tag(&artifacts_dir(args), tag, explicit);
-        if has_explicit {
-            // Fail now, with the flag named: a mistyped --weights must
-            // never fall back silently to init weights.
-            spec.validate().context("--weights")?;
-        }
-        Ok(spec)
+        return Ok(PredictorSpec::table(args.num("seq", 32usize)?));
     }
+    let tag = args.get("model").unwrap_or(default_model);
+    let artifacts = artifacts_dir(args);
+    let mut spec = match backend_from(args)? {
+        Backend::Pjrt => PredictorSpec::ml(&artifacts, tag),
+        Backend::Native => PredictorSpec::native(&artifacts, tag, args.num("seq", 32usize)?),
+    };
+    let mut has_explicit = false;
+    match args.get("weights") {
+        // `--weights init` forces init weights (the explicit spelling of
+        // what a missing-weights run falls back to).
+        Some("init") => spec = spec.with_weights_source(WeightsSource::Init),
+        Some(path) => {
+            spec = spec.with_weights(PathBuf::from(path));
+            has_explicit = true;
+        }
+        None => {}
+    }
+    if has_explicit {
+        // Fail now, with the flag named: a mistyped --weights must
+        // never fall back silently to init weights.
+        spec.validate().context("--weights")?;
+    } else {
+        // Still validate eagerly (e.g. unsupported native architecture)
+        // so the error surfaces before any trace generation.
+        spec.validate()?;
+    }
+    Ok(spec)
 }
 
 fn main() -> Result<()> {
@@ -212,10 +242,10 @@ fn print_usage() {
          \x20 gen-trace    --bench NAME --n N --out trace.smt [--config o3|a64fx] [--input-seed K]\n\
          \x20 gen-dataset  --out data.smd [--benches a,b,c] [--n-per N] [--seq S] [--limit L]\n\
          \x20 simulate-des --bench NAME --n N [--config ...]\n\
-         \x20 simulate-ml  --bench NAME --n N [--model c3] [--table] [--weights W.smw]\n\
-         \x20              [--subtraces S] [--workers W] [--target-batch B]\n\
-         \x20              [--encode-threads T] [--pipeline-depth D] [--trace file.smt]\n\
-         \x20              [--artifacts DIR] [--window W] [--json out.json]\n\
+         \x20 simulate-ml  --bench NAME --n N [--model c3] [--table] [--backend pjrt|native]\n\
+         \x20              [--weights W.smw|init] [--seq S] [--subtraces S] [--workers W]\n\
+         \x20              [--target-batch B] [--encode-threads T] [--pipeline-depth D]\n\
+         \x20              [--trace file.smt] [--artifacts DIR] [--window W] [--json out.json]\n\
          \x20 report       table4|fig5|fig6|fig10|attribution [--models a,b] [--n N] [--benches ...]\n\
          \x20 sweep        subtrace-size|subtraces|workers|branch-predictor|l2-size|rob-size [...]\n\
          \x20 list-benches\n\n\
@@ -461,11 +491,17 @@ fn cmd_report(args: &Args) -> Result<()> {
         )?,
         "fig5" => args.check_flags(
             "report fig5",
-            &[CONFIG_FLAGS, &["table", "seq", "models", "artifacts", "n", "benches", "subtrace"]],
+            &[
+                CONFIG_FLAGS,
+                &["table", "seq", "models", "artifacts", "backend", "n", "benches", "subtrace"],
+            ],
         )?,
         "fig6" => args.check_flags(
             "report fig6",
-            &[CONFIG_FLAGS, &["table", "seq", "models", "artifacts", "n", "benches", "window"]],
+            &[
+                CONFIG_FLAGS,
+                &["table", "seq", "models", "artifacts", "backend", "n", "benches", "window"],
+            ],
         )?,
         "fig10" => args.check_flags(
             "report fig10",
@@ -557,17 +593,26 @@ fn cmd_report(args: &Args) -> Result<()> {
 }
 
 /// Predictor list for fig5/fig6: --models or --table (mixing them is an
-/// error, via [`reject_predictor_conflicts`]).
+/// error, via [`reject_predictor_conflicts`]), on either ML backend
+/// (`--backend native` runs every listed model natively).
 fn report_specs(args: &Args, artifacts: &Path) -> Result<Vec<PredictorSpec>> {
-    reject_predictor_conflicts(args, &["models", "artifacts"])?;
+    reject_predictor_conflicts(args, &["models", "artifacts", "backend"])?;
     if args.get("table").is_some() {
         let seq: usize = args.num("seq", 32)?;
         return Ok(vec![PredictorSpec::table(seq)]);
     }
+    let backend = backend_from(args)?;
+    let seq: usize = args.num("seq", 32)?;
     let models = args
         .list("models")
         .unwrap_or_else(|| vec!["c3".into(), "rb".into(), "ithemal_lstm2".into()]);
-    Ok(models.iter().map(|m| PredictorSpec::ml_tag(artifacts, m, None)).collect())
+    Ok(models
+        .iter()
+        .map(|m| match backend {
+            Backend::Pjrt => PredictorSpec::ml_tag(artifacts, m, None),
+            Backend::Native => PredictorSpec::native(artifacts, m.as_str(), seq),
+        })
+        .collect())
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {

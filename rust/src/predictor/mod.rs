@@ -1,17 +1,56 @@
 //! Latency-predictor abstraction: the green box of paper Figure 1.
 //!
 //! [`LatencyPredictor`] is what the coordinator's simulation loops talk
-//! to; [`MlPredictor`] backs it with the AOT-compiled PJRT model, and
-//! [`TablePredictor`] is a deterministic analytical stand-in used by tests
-//! and benches that must run without artifacts (it also doubles as the
-//! "simple analytical model" baseline in ablation benches).
+//! to. Three implementations back it: [`MlPredictor`] (the AOT-compiled
+//! PJRT path), [`native::NativePredictor`] (the pure-Rust in-process
+//! forward pass over the same `.smw` weights — no runtime dependency),
+//! and [`TablePredictor`], a deterministic analytical stand-in used by
+//! tests and benches that must run without artifacts (it also doubles as
+//! the "simple analytical model" baseline in ablation benches).
+//!
+//! [`WeightsSource`] is the shared answer to "where do the weights come
+//! from" for both ML backends, so the explicit-path / trained / init
+//! resolution rules (and their error behavior) cannot drift apart.
 
-use std::path::Path;
+pub mod native;
+
+use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
+pub use native::NativePredictor;
+
 use crate::features::{self, ContextMode, NUM_FEATURES};
 use crate::runtime::{decode_row, ModelBank, HEAD_OUT};
+
+/// Where a predictor's weights come from — shared by the PJRT backend
+/// (`PredictorSpec::Ml`) and the native backend (`PredictorSpec::Native`)
+/// so both resolve weights with identical rules.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WeightsSource {
+    /// Resolve automatically: the trained `<tag>.smw` if present, else the
+    /// base architecture's `<base>.smw` / `<base>.init.smw`, else (native
+    /// backend only) deterministic generated init weights.
+    Auto,
+    /// Explicit `.smw` path. A missing file is an error naming the path —
+    /// never a silent fallback to init weights.
+    Path(PathBuf),
+    /// Force init weights: `<base>.init.smw` for the PJRT backend,
+    /// in-process generated weights for the native backend.
+    Init,
+}
+
+/// Map a trained model *tag* to the architecture name its exported
+/// artifacts are stored under: tags may carry suffixes (e.g. `c3_reg`,
+/// `c3_big`) while sharing the export of their base architecture.
+pub fn export_name(tag: &str) -> String {
+    for base in ["ithemal_lstm2", "lstm2", "fc2", "fc3", "c1", "c3", "rb", "tx2"] {
+        if tag == base || tag.starts_with(&format!("{base}_")) {
+            return base.to_string();
+        }
+    }
+    tag.to_string()
+}
 
 /// A batched fetch/execution/store latency predictor.
 ///

@@ -1,0 +1,34 @@
+//! Fast activation helpers for the native inference hot loop.
+//!
+//! `f32::max(0.0)` lowers to a single `maxss`/`fmaxnm` instruction (no
+//! branch, no NaN-propagation library call), which matters because the
+//! forward pass applies it to every hidden activation of every batch.
+
+/// Branchless ReLU.
+#[inline(always)]
+pub fn relu(x: f32) -> f32 {
+    x.max(0.0)
+}
+
+/// ReLU applied in place over a whole activation row.
+#[inline]
+pub fn relu_inplace(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps_negatives_only() {
+        assert_eq!(relu(-3.5), 0.0);
+        assert_eq!(relu(0.0), 0.0);
+        assert_eq!(relu(2.25), 2.25);
+        let mut xs = [-1.0, 0.5, -0.0, 7.0];
+        relu_inplace(&mut xs);
+        assert_eq!(xs, [0.0, 0.5, 0.0, 7.0]);
+    }
+}

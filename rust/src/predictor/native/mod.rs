@@ -1,0 +1,599 @@
+//! Native pure-Rust NN inference backend (no PJRT, no stub).
+//!
+//! Implements the paper's latency-predictor forward pass directly over
+//! the `.smw` weight tensors: `(n, seq_len, NUM_FEATURES)` encoded rows →
+//! hidden blocks → the 33-wide hybrid head decoded by
+//! [`crate::runtime::decode_row`]. Supported architectures are the
+//! matmul-representable rows of Table 4 (`fc2`, `fc3`, `c1`, `c3`, `rb`);
+//! the recurrent/attention models (`lstm2`, `ithemal_lstm2`, `tx2`) stay
+//! on the PJRT backend.
+//!
+//! Perf-relevant design:
+//! * The layer plan is compiled once at load time from the actual tensor
+//!   shapes (names and order validated against the `.export` manifest),
+//!   so the forward pass is a flat loop with no per-batch dispatch.
+//! * Forward/scratch buffers are preallocated and grow-only — steady
+//!   state runs allocation-free regardless of batch size.
+//! * [`NativePredictor::clone_lite`] hands out per-thread handles that
+//!   share one read-only weight arena behind an [`Arc`]; only the scratch
+//!   buffers (a few KB) are per-handle, so pool workers never duplicate
+//!   weights.
+
+mod fastmath;
+mod kernels;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::features::NUM_FEATURES;
+use crate::runtime::{decode_row, read_model_mode, ExportManifest, OutputMode, HEAD_OUT};
+use crate::tensor::{Tensor, TensorFile};
+
+use super::{export_name, LatencyPredictor, WeightsSource};
+
+/// Architectures the native backend can lower to its dense kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Fc2,
+    Fc3,
+    C1,
+    C3,
+    Rb,
+}
+
+impl Arch {
+    /// Parse a base architecture name (see [`export_name`]).
+    pub fn parse(base: &str) -> Result<Arch> {
+        Ok(match base {
+            "fc2" => Arch::Fc2,
+            "fc3" => Arch::Fc3,
+            "c1" => Arch::C1,
+            "c3" => Arch::C3,
+            "rb" => Arch::Rb,
+            other => bail!(
+                "native backend does not support architecture {other:?} \
+                 (supported: fc2 fc3 c1 c3 rb; lstm2/ithemal_lstm2/tx2 need the PJRT backend)"
+            ),
+        })
+    }
+
+    /// Channel widths of the k2s2 conv stack (empty for the FC models).
+    fn conv_channels(self) -> &'static [usize] {
+        match self {
+            Arch::Fc2 | Arch::Fc3 => &[],
+            Arch::C1 => &[64],
+            Arch::C3 | Arch::Rb => &[64, 96, 128],
+        }
+    }
+
+    /// Whether each conv stage is followed by a residual block (RB7).
+    fn has_residual(self) -> bool {
+        matches!(self, Arch::Rb)
+    }
+
+    /// Hidden widths of the FC tail (mirror of python `param_specs`).
+    fn fc_hidden(self) -> &'static [usize] {
+        match self {
+            Arch::Fc2 => &[256],
+            Arch::Fc3 => &[512, 256],
+            Arch::C1 | Arch::C3 | Arch::Rb => &[256],
+        }
+    }
+}
+
+/// One step of the compiled layer plan. Weight/bias fields are indices
+/// into the model's tensor arena; per-item geometry is precomputed so the
+/// forward loop does no shape math.
+enum Layer {
+    /// `relu?(x @ w + b)` over `n` flattened item rows.
+    Dense { w: usize, b: usize, relu: bool },
+    /// k2s2 conv = dense over `n * pairs` position-pair rows.
+    Conv { w: usize, b: usize, pairs: usize },
+    /// `relu(x + relu(x @ w1 + b1) @ w2 + b2)` over `n * rows` positions
+    /// of width `c`.
+    Residual { w1: usize, b1: usize, w2: usize, b2: usize, rows: usize, c: usize },
+}
+
+/// The read-only weight arena + compiled layer plan one or more
+/// [`NativePredictor`] handles share through an [`Arc`].
+pub struct NativeModel {
+    tag: String,
+    seq: usize,
+    mode: OutputMode,
+    tensors: Vec<Tensor>,
+    layers: Vec<Layer>,
+    /// Largest per-item activation width across layers (buffer sizing).
+    max_width: usize,
+    /// Where the weights came from, for diagnostics.
+    weights_from: String,
+}
+
+/// Ordered `(name, dims)` parameter list for an architecture at a given
+/// sequence length — mirror of python `compile.model.param_specs` for the
+/// architectures the native backend supports.
+pub fn param_specs(arch: Arch, seq: usize) -> Vec<(String, Vec<usize>)> {
+    let mut specs = Vec::new();
+    let mut width = NUM_FEATURES;
+    let mut length = seq;
+    for (i, &c_out) in arch.conv_channels().iter().enumerate() {
+        specs.push((format!("conv{i}/w"), vec![2 * width, c_out]));
+        specs.push((format!("conv{i}/b"), vec![c_out]));
+        length /= 2;
+        if arch.has_residual() {
+            specs.push((format!("res{i}/w1"), vec![c_out, c_out]));
+            specs.push((format!("res{i}/b1"), vec![c_out]));
+            specs.push((format!("res{i}/w2"), vec![c_out, c_out]));
+            specs.push((format!("res{i}/b2"), vec![c_out]));
+        }
+        width = c_out;
+    }
+    let mut flat = if arch.conv_channels().is_empty() {
+        seq * NUM_FEATURES
+    } else {
+        width * length
+    };
+    for (i, &h) in arch.fc_hidden().iter().enumerate() {
+        specs.push((format!("fc{i}/w"), vec![flat, h]));
+        specs.push((format!("fc{i}/b"), vec![h]));
+        flat = h;
+    }
+    specs.push(("out/w".to_string(), vec![flat, HEAD_OUT]));
+    specs.push(("out/b".to_string(), vec![HEAD_OUT]));
+    specs
+}
+
+/// Sequential tensor reader used by [`plan`]: enforces name order and
+/// dimensionality with errors that say which tensor broke the contract.
+struct Cursor<'a> {
+    tensors: &'a [Tensor],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, name: &str, ndim: usize) -> Result<(usize, &'a Tensor)> {
+        let t = self.tensors.get(self.pos).ok_or_else(|| {
+            anyhow!("missing tensor {name} (weights file has only {})", self.tensors.len())
+        })?;
+        if t.name != name {
+            bail!("tensor {} out of order: expected {name}, found {}", self.pos, t.name);
+        }
+        if t.dims.len() != ndim {
+            bail!("tensor {name}: expected {ndim} dims, found {:?}", t.dims);
+        }
+        let idx = self.pos;
+        self.pos += 1;
+        Ok((idx, t))
+    }
+}
+
+/// Compile the layer plan for `arch` from the actual tensor shapes.
+/// Hidden widths come from the tensors (so tiny test fixtures work); only
+/// the structure — layer kinds, names, order, shape chaining from
+/// `NUM_FEATURES` to [`HEAD_OUT`] — is enforced. Returns the plan and the
+/// largest per-item activation width.
+fn plan(arch: Arch, seq: usize, tensors: &[Tensor]) -> Result<(Vec<Layer>, usize)> {
+    if seq == 0 {
+        bail!("native model needs seq_len >= 1");
+    }
+    let mut cur = Cursor { tensors, pos: 0 };
+    let mut layers = Vec::new();
+    let mut width = NUM_FEATURES;
+    let mut length = seq;
+    let mut max_width = seq * NUM_FEATURES;
+    for (i, _) in arch.conv_channels().iter().enumerate() {
+        if length < 2 || length % 2 != 0 {
+            bail!("conv{i}: length {length} not divisible by 2 (seq_len {seq} too small)");
+        }
+        let (wi, wt) = cur.take(&format!("conv{i}/w"), 2)?;
+        if wt.dims[0] != 2 * width {
+            bail!("conv{i}/w: input dim {} != 2 * {width}", wt.dims[0]);
+        }
+        let c_out = wt.dims[1];
+        let (bi, bt) = cur.take(&format!("conv{i}/b"), 1)?;
+        if bt.dims[0] != c_out {
+            bail!("conv{i}/b: width {} != {c_out}", bt.dims[0]);
+        }
+        length /= 2;
+        layers.push(Layer::Conv { w: wi, b: bi, pairs: length });
+        width = c_out;
+        max_width = max_width.max(length * width);
+        if arch.has_residual() {
+            let (w1, t1) = cur.take(&format!("res{i}/w1"), 2)?;
+            let (b1, u1) = cur.take(&format!("res{i}/b1"), 1)?;
+            let (w2, t2) = cur.take(&format!("res{i}/w2"), 2)?;
+            let (b2, u2) = cur.take(&format!("res{i}/b2"), 1)?;
+            if t1.dims != [width, width]
+                || t2.dims != [width, width]
+                || u1.dims != [width]
+                || u2.dims != [width]
+            {
+                bail!("res{i}: expected square [{width}, {width}] transforms");
+            }
+            layers.push(Layer::Residual { w1, b1, w2, b2, rows: length, c: width });
+        }
+    }
+    let mut flat = if arch.conv_channels().is_empty() {
+        seq * NUM_FEATURES
+    } else {
+        width * length
+    };
+    for (i, _) in arch.fc_hidden().iter().enumerate() {
+        let (wi, wt) = cur.take(&format!("fc{i}/w"), 2)?;
+        if wt.dims[0] != flat {
+            bail!("fc{i}/w: input dim {} does not match activation width {flat}", wt.dims[0]);
+        }
+        let h = wt.dims[1];
+        let (bi, bt) = cur.take(&format!("fc{i}/b"), 1)?;
+        if bt.dims[0] != h {
+            bail!("fc{i}/b: width {} != {h}", bt.dims[0]);
+        }
+        layers.push(Layer::Dense { w: wi, b: bi, relu: true });
+        flat = h;
+        max_width = max_width.max(h);
+    }
+    let (wi, wt) = cur.take("out/w", 2)?;
+    if wt.dims[0] != flat || wt.dims[1] != HEAD_OUT {
+        bail!("out/w: expected [{flat}, {HEAD_OUT}], found {:?}", wt.dims);
+    }
+    let (bi, bt) = cur.take("out/b", 1)?;
+    if bt.dims[0] != HEAD_OUT {
+        bail!("out/b: width {} != {HEAD_OUT}", bt.dims[0]);
+    }
+    layers.push(Layer::Dense { w: wi, b: bi, relu: false });
+    max_width = max_width.max(HEAD_OUT);
+    if cur.pos != tensors.len() {
+        bail!("unexpected trailing tensor {} after out/b", tensors[cur.pos].name);
+    }
+    Ok((layers, max_width))
+}
+
+/// xorshift64* step mapped to `[0, 1)` (24-bit resolution, exact in f32).
+fn unit(state: &mut u64) -> f32 {
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    ((x >> 40) as f32) / (1u64 << 24) as f32
+}
+
+/// Deterministic fallback weights (glorot-uniform, seeded from the tag)
+/// so the native backend runs with zero artifacts on disk. This is NOT
+/// the python training init — real accuracy needs trained `.smw` weights;
+/// generated weights exist for plumbing/throughput tests and CI smoke.
+fn init_tensors(arch: Arch, seq: usize, tag: &str) -> Vec<Tensor> {
+    let mut state = 0x9E37_79B9_7F4A_7C15u64;
+    for byte in tag.bytes() {
+        state = (state ^ u64::from(byte)).wrapping_mul(0x100_0000_01B3);
+    }
+    param_specs(arch, seq)
+        .into_iter()
+        .map(|(name, dims)| {
+            let len: usize = dims.iter().product();
+            let data = if dims.len() == 1 {
+                vec![0.0f32; len] // biases start at zero, like python init
+            } else {
+                let limit = (6.0 / (dims[0] + dims[1]) as f32).sqrt();
+                (0..len).map(|_| (unit(&mut state) * 2.0 - 1.0) * limit).collect()
+            };
+            Tensor::new(name, dims, data)
+        })
+        .collect()
+}
+
+/// Pure-Rust latency predictor: an [`Arc`]-shared [`NativeModel`] plus
+/// per-handle scratch buffers.
+pub struct NativePredictor {
+    model: Arc<NativeModel>,
+    /// Ping-pong activation buffers (grow-only, reused across batches).
+    prev: Vec<f32>,
+    next: Vec<f32>,
+    /// Residual-branch scratch.
+    tmp: Vec<f32>,
+    /// Raw head rows of the current batch.
+    head: Vec<f32>,
+    served: u64,
+}
+
+impl NativePredictor {
+    /// Load model `tag` from `artifacts`. The `<base>.export` manifest
+    /// (when present) fixes `seq_len` and the expected weight-tensor
+    /// names; without one, `fallback_seq` is used. Weights resolve per
+    /// `weights` ([`WeightsSource`]); the output mode comes from
+    /// `<base>.meta` as on the PJRT path.
+    pub fn load(
+        artifacts: &Path,
+        tag: &str,
+        weights: &WeightsSource,
+        fallback_seq: usize,
+    ) -> Result<Self> {
+        let base = export_name(tag);
+        let arch = Arch::parse(&base)?;
+        let manifest_path = artifacts.join(format!("{base}.export"));
+        let manifest = if manifest_path.exists() {
+            Some(ExportManifest::read(&manifest_path)?)
+        } else {
+            None
+        };
+        let seq = manifest.as_ref().map(|m| m.seq_len).unwrap_or(fallback_seq);
+
+        let weights_path = match weights {
+            WeightsSource::Path(p) => Some(p.clone()),
+            WeightsSource::Auto => [
+                artifacts.join(format!("{tag}.smw")),
+                artifacts.join(format!("{base}.smw")),
+                artifacts.join(format!("{base}.init.smw")),
+            ]
+            .into_iter()
+            .find(|p| p.exists()),
+            WeightsSource::Init => None,
+        };
+        let (tensors, weights_from) = match weights_path {
+            Some(p) => {
+                let tf = TensorFile::read(&p)
+                    .with_context(|| format!("reading weights {}", p.display()))?;
+                (tf.tensors, p.display().to_string())
+            }
+            None => (init_tensors(arch, seq, tag), "init(generated)".to_string()),
+        };
+        if let Some(m) = &manifest {
+            if !m.weights.is_empty() {
+                let names: Vec<&str> = tensors.iter().map(|t| t.name.as_str()).collect();
+                let expect: Vec<&str> = m.weights.iter().map(|s| s.as_str()).collect();
+                if names != expect {
+                    bail!(
+                        "weights {weights_from} do not match manifest {}: got {names:?}, \
+                         expected {expect:?}",
+                        manifest_path.display()
+                    );
+                }
+            }
+        }
+        let (layers, max_width) =
+            plan(arch, seq, &tensors).with_context(|| format!("native model {tag}"))?;
+        let mode = read_model_mode(artifacts, &base).unwrap_or(OutputMode::Hybrid);
+        Ok(Self::from_model(NativeModel {
+            tag: tag.to_string(),
+            seq,
+            mode,
+            tensors,
+            layers,
+            max_width,
+            weights_from,
+        }))
+    }
+
+    /// Build from generated init weights only — no filesystem access at
+    /// all (not even a manifest probe).
+    pub fn from_init(tag: &str, seq: usize) -> Result<Self> {
+        let arch = Arch::parse(&export_name(tag))?;
+        let tensors = init_tensors(arch, seq, tag);
+        let (layers, max_width) =
+            plan(arch, seq, &tensors).with_context(|| format!("native model {tag}"))?;
+        Ok(Self::from_model(NativeModel {
+            tag: tag.to_string(),
+            seq,
+            mode: OutputMode::Hybrid,
+            tensors,
+            layers,
+            max_width,
+            weights_from: "init(generated)".to_string(),
+        }))
+    }
+
+    fn from_model(model: NativeModel) -> Self {
+        NativePredictor {
+            model: Arc::new(model),
+            prev: Vec::new(),
+            next: Vec::new(),
+            tmp: Vec::new(),
+            head: Vec::new(),
+            served: 0,
+        }
+    }
+
+    /// A cheap per-thread handle: shares the read-only weight arena and
+    /// layer plan, with fresh (empty) scratch buffers and an independent
+    /// `served` counter.
+    pub fn clone_lite(&self) -> NativePredictor {
+        NativePredictor {
+            model: Arc::clone(&self.model),
+            prev: Vec::new(),
+            next: Vec::new(),
+            tmp: Vec::new(),
+            head: Vec::new(),
+            served: 0,
+        }
+    }
+
+    /// Whether two handles share one weight arena (i.e. one came from the
+    /// other's [`clone_lite`](Self::clone_lite)).
+    pub fn shares_weights_with(&self, other: &NativePredictor) -> bool {
+        Arc::ptr_eq(&self.model, &other.model)
+    }
+
+    /// Model tag this predictor was loaded as.
+    pub fn tag(&self) -> &str {
+        &self.model.tag
+    }
+
+    /// Where the weights came from (`.smw` path or `init(generated)`).
+    pub fn weights_from(&self) -> &str {
+        &self.model.weights_from
+    }
+
+    /// Total learned parameters.
+    pub fn param_count(&self) -> usize {
+        self.model.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Run the forward pass over `n` encoded inputs packed in `inputs`
+    /// (length >= `n * seq_len * NUM_FEATURES`); appends `n` rows of
+    /// [`HEAD_OUT`] raw head floats to `out`.
+    pub fn forward_raw(&mut self, inputs: &[f32], n: usize, out: &mut Vec<f32>) -> Result<()> {
+        let width = self.model.seq * NUM_FEATURES;
+        if inputs.len() < n * width {
+            bail!("native forward: {} floats < {n} inputs x width {width}", inputs.len());
+        }
+        if n == 0 {
+            return Ok(());
+        }
+        let cap = n * self.model.max_width;
+        if self.prev.len() < cap {
+            self.prev.resize(cap, 0.0);
+        }
+        if self.next.len() < cap {
+            self.next.resize(cap, 0.0);
+        }
+        if self.tmp.len() < cap {
+            self.tmp.resize(cap, 0.0);
+        }
+        let mut prev = std::mem::take(&mut self.prev);
+        let mut next = std::mem::take(&mut self.next);
+        let model = &self.model;
+        let mut first = true;
+        for layer in &model.layers {
+            {
+                let src: &[f32] = if first { &inputs[..n * width] } else { &prev };
+                apply_layer(model, layer, src, &mut next, &mut self.tmp, n);
+            }
+            std::mem::swap(&mut prev, &mut next);
+            first = false;
+        }
+        out.extend_from_slice(&prev[..n * HEAD_OUT]);
+        self.prev = prev;
+        self.next = next;
+        Ok(())
+    }
+}
+
+/// Execute one plan step: `src` holds the previous activations (or the
+/// encoded inputs), `dst` receives this layer's output.
+fn apply_layer(
+    model: &NativeModel,
+    layer: &Layer,
+    src: &[f32],
+    dst: &mut [f32],
+    tmp: &mut [f32],
+    n: usize,
+) {
+    let t = |i: usize| model.tensors[i].data.as_slice();
+    match *layer {
+        Layer::Dense { w, b, relu } => kernels::dense_batch(src, t(w), t(b), dst, n, relu),
+        Layer::Conv { w, b, pairs } => kernels::dense_batch(src, t(w), t(b), dst, n * pairs, true),
+        Layer::Residual { w1, b1, w2, b2, rows, c } => {
+            let r = n * rows;
+            kernels::dense_batch(src, t(w1), t(b1), tmp, r, true);
+            kernels::dense_batch(tmp, t(w2), t(b2), dst, r, false);
+            for (yo, &xi) in dst[..r * c].iter_mut().zip(&src[..r * c]) {
+                *yo = fastmath::relu(*yo + xi);
+            }
+        }
+    }
+}
+
+impl LatencyPredictor for NativePredictor {
+    fn seq_len(&self) -> usize {
+        self.model.seq
+    }
+
+    fn predict(&mut self, inputs: &[f32], n: usize) -> Result<Vec<(u32, u32, u32)>> {
+        let mut head = std::mem::take(&mut self.head);
+        head.clear();
+        self.forward_raw(inputs, n, &mut head)?;
+        let mode = self.model.mode;
+        let out = head.chunks_exact(HEAD_OUT).take(n).map(|row| decode_row(row, mode)).collect();
+        self.head = head;
+        self.served += n as u64;
+        Ok(out)
+    }
+
+    fn served(&self) -> u64 {
+        self.served
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_specs_match_python_shapes() {
+        // Spot-check against python compile.model.param_specs at seq 32.
+        let fc3 = param_specs(Arch::Fc3, 32);
+        assert_eq!(fc3[0], ("fc0/w".to_string(), vec![1600, 512]));
+        assert_eq!(fc3.last().unwrap(), &("out/b".to_string(), vec![HEAD_OUT]));
+        let c3 = param_specs(Arch::C3, 32);
+        assert_eq!(c3[0], ("conv0/w".to_string(), vec![100, 64]));
+        assert_eq!(c3[4], ("conv2/w".to_string(), vec![192, 128]));
+        // After 3 halvings: 128 channels * 4 positions.
+        assert_eq!(c3[6], ("fc0/w".to_string(), vec![512, 256]));
+        let rb = param_specs(Arch::Rb, 32);
+        assert_eq!(rb[2], ("res0/w1".to_string(), vec![64, 64]));
+        assert_eq!(rb.len(), 3 * 6 + 4);
+    }
+
+    #[test]
+    fn init_weights_are_tag_deterministic() {
+        let a = init_tensors(Arch::Fc2, 8, "fc2");
+        let b = init_tensors(Arch::Fc2, 8, "fc2");
+        let c = init_tensors(Arch::Fc2, 8, "fc2_other");
+        assert_eq!(a, b);
+        assert_ne!(a[0].data, c[0].data, "different tags must seed different weights");
+        assert!(a[1].data.iter().all(|&v| v == 0.0), "biases start at zero");
+        let limit = (6.0 / (8.0 * NUM_FEATURES as f32 + 256.0)).sqrt();
+        assert!(a[0].data.iter().all(|&v| v.abs() <= limit));
+        assert!(a[0].data.iter().any(|&v| v < 0.0) && a[0].data.iter().any(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn forward_shapes_and_reuse() {
+        let mut p = NativePredictor::from_init("c3", 8).unwrap();
+        assert_eq!(p.seq_len(), 8);
+        let width = 8 * NUM_FEATURES;
+        let inputs: Vec<f32> = (0..3 * width).map(|i| ((i % 13) as f32) / 13.0).collect();
+        let mut raw = Vec::new();
+        p.forward_raw(&inputs, 3, &mut raw).unwrap();
+        assert_eq!(raw.len(), 3 * HEAD_OUT);
+        // Batched forward == row-at-a-time forward (buffer reuse must not
+        // leak state across calls).
+        for (i, row) in raw.chunks_exact(HEAD_OUT).enumerate() {
+            let mut one = Vec::new();
+            p.forward_raw(&inputs[i * width..(i + 1) * width], 1, &mut one).unwrap();
+            assert_eq!(one, row, "row {i}");
+        }
+        let triples = p.predict(&inputs, 3).unwrap();
+        assert_eq!(triples.len(), 3);
+        assert_eq!(p.served(), 3);
+    }
+
+    #[test]
+    fn unsupported_arch_is_a_clear_error() {
+        let err = NativePredictor::from_init("lstm2", 8).unwrap_err();
+        assert!(err.to_string().contains("PJRT"), "err: {err}");
+        let err = Arch::parse("tx2").unwrap_err();
+        assert!(err.to_string().contains("tx2"), "err: {err}");
+    }
+
+    #[test]
+    fn seq_not_divisible_for_conv_stack_errors() {
+        let err = NativePredictor::from_init("c3", 6).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("divisible"), "err: {msg}");
+    }
+
+    #[test]
+    fn plan_rejects_malformed_tensor_sets() {
+        let mut tensors = init_tensors(Arch::Fc2, 4, "fc2");
+        tensors.swap(0, 1);
+        assert!(plan(Arch::Fc2, 4, &tensors).is_err(), "order violation must fail");
+        let mut tensors = init_tensors(Arch::Fc2, 4, "fc2");
+        tensors.push(Tensor::new("extra", vec![1], vec![0.0]));
+        let err = plan(Arch::Fc2, 4, &tensors).unwrap_err();
+        assert!(err.to_string().contains("extra"), "err: {err}");
+        let tensors = init_tensors(Arch::Fc2, 8, "fc2");
+        assert!(plan(Arch::Fc2, 4, &tensors).is_err(), "seq mismatch must fail shape chain");
+    }
+}

@@ -42,13 +42,36 @@ impl ExportManifest {
         let mut model = String::new();
         let mut seq_len = 0usize;
         let mut batches = Vec::new();
-        let mut weights = Vec::new();
+        let mut weights: Option<Vec<String>> = None;
+        // Each key may appear once. Duplicates used to silently last-win,
+        // which made a concatenated/merged manifest load with whichever
+        // half came second — reject them naming the path and the key.
+        let dup = |key: &str| anyhow!("manifest {}: duplicate `{key}` line", path.display());
         for line in text.lines() {
             let mut it = line.split_whitespace();
             match it.next() {
-                Some("model") => model = it.next().unwrap_or("").to_string(),
-                Some("seq_len") => seq_len = it.next().unwrap_or("0").parse()?,
+                Some("model") => {
+                    if !model.is_empty() {
+                        return Err(dup("model"));
+                    }
+                    model = it.next().unwrap_or("").to_string();
+                }
+                Some("seq_len") => {
+                    if seq_len != 0 {
+                        return Err(dup("seq_len"));
+                    }
+                    let tok = it.next().unwrap_or("");
+                    seq_len = tok.parse().map_err(|_| {
+                        anyhow!(
+                            "manifest {}: bad seq_len {tok:?} in `seq_len` line",
+                            path.display()
+                        )
+                    })?;
+                }
                 Some("batches") => {
+                    if !batches.is_empty() {
+                        return Err(dup("batches"));
+                    }
                     // A malformed batch size must fail loudly (it used to
                     // be swallowed into batch-size 0, which later selects
                     // executables that do not exist).
@@ -62,14 +85,19 @@ impl ExportManifest {
                         })
                         .collect::<Result<Vec<usize>>>()?;
                 }
-                Some("weights") => weights = it.map(|s| s.to_string()).collect(),
+                Some("weights") => {
+                    if weights.is_some() {
+                        return Err(dup("weights"));
+                    }
+                    weights = Some(it.map(|s| s.to_string()).collect());
+                }
                 _ => {}
             }
         }
         if model.is_empty() || seq_len == 0 || batches.is_empty() {
             bail!("malformed manifest {}", path.display());
         }
-        Ok(ExportManifest { model, seq_len, batches, weights })
+        Ok(ExportManifest { model, seq_len, batches, weights: weights.unwrap_or_default() })
     }
 }
 
@@ -155,7 +183,7 @@ impl ModelBank {
         }
         exes.sort_by_key(|e| e.batch);
 
-        let mode = read_mode(dir, model).unwrap_or(OutputMode::Hybrid);
+        let mode = read_model_mode(dir, model).unwrap_or(OutputMode::Hybrid);
         Ok(ModelBank { client, manifest, exes, weight_bufs, mode, inferences: 0, calls: 0 })
     }
 
@@ -243,7 +271,9 @@ impl ModelBank {
 }
 
 /// Read the decode mode from `<model>.meta` (written by train.py).
-fn read_mode(dir: &Path, model: &str) -> Option<OutputMode> {
+/// Shared by the PJRT [`ModelBank`] and the native backend so both decode
+/// a trained model the same way.
+pub(crate) fn read_model_mode(dir: &Path, model: &str) -> Option<OutputMode> {
     let text = std::fs::read_to_string(dir.join(format!("{model}.meta"))).ok()?;
     for line in text.lines() {
         if let Some(rest) = line.strip_prefix("mode ") {
@@ -356,6 +386,42 @@ mod tests {
         let msg = format!("{err}");
         assert!(msg.contains("x8"), "error must name the offending token: {msg}");
         assert!(msg.contains("batch size"), "error must say what is wrong: {msg}");
+    }
+
+    #[test]
+    fn manifest_rejects_duplicate_keys_naming_path_and_key() {
+        let dir = std::env::temp_dir().join("simnet_runtime_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (key, content) in [
+            ("model", "model c3\nmodel c1\nseq_len 32\nbatches 1\nweights a\n"),
+            ("seq_len", "model c3\nseq_len 32\nseq_len 16\nbatches 1\nweights a\n"),
+            ("batches", "model c3\nseq_len 32\nbatches 1\nbatches 2\nweights a\n"),
+            ("weights", "model c3\nseq_len 32\nbatches 1\nweights a\nweights b\n"),
+        ] {
+            let p = dir.join(format!("dup_{key}.export"));
+            std::fs::write(&p, content).unwrap();
+            let err = ExportManifest::read(&p).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains("duplicate"), "[{key}] must be rejected as duplicate: {msg}");
+            assert!(msg.contains(&format!("`{key}`")), "[{key}] error must name the key: {msg}");
+            assert!(
+                msg.contains(&format!("dup_{key}.export")),
+                "[{key}] error must name the path: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn manifest_bad_seq_len_names_path_and_token() {
+        let dir = std::env::temp_dir().join("simnet_runtime_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("badseq.export");
+        std::fs::write(&p, "model c3\nseq_len x32\nbatches 1\nweights a\n").unwrap();
+        let err = ExportManifest::read(&p).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("x32"), "error must name the offending token: {msg}");
+        assert!(msg.contains("badseq.export"), "error must name the path: {msg}");
+        assert!(msg.contains("seq_len"), "error must say which key: {msg}");
     }
 
     #[test]

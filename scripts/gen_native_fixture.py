@@ -1,0 +1,198 @@
+#!/usr/bin/env python3
+"""Generate the tiny golden fixtures for the native Rust inference backend.
+
+Writes, for each covered architecture (fc3, c3, rb), a miniature model
+under rust/tests/fixtures/native/:
+
+  <arch>.export      manifest (model / seq_len / batches / weights)
+  <arch>.smw         weight tensors (float32, .smw container)
+  <arch>.golden.txt  inputs + expected raw head rows + decoded (F,E,S)
+
+The reference forward pass mirrors python/compile (conv1d_k2s2 = pair
+reshape + matmul, residual_block, dense) but is computed in float64 from
+the float32-stored weights, so the committed expectations are more
+precise than either float32 implementation; the rust test compares at
+1e-3. Decoding replicates rust decode_row / python decode_latency
+(hybrid rule), and the generator asserts safety margins (argmax gaps,
+rounding-boundary distance) so float32-vs-float64 drift cannot flip a
+decoded latency.
+
+Deterministic: fixed seeds, no timestamps. Re-running regenerates
+byte-identical fixtures. Needs only numpy.
+"""
+
+import argparse
+import math
+import struct
+from pathlib import Path
+
+import numpy as np
+
+NUM_FEATURES = 50
+NUM_CLASSES = 10
+HEAD_OUT = 3 * (NUM_CLASSES + 1)
+LAT_SCALE = 256.0
+
+# Small-but-real shapes: every layer kind, every shape-chain rule, a few
+# thousand MACs per inference (fast in debug-mode `cargo test`).
+MODELS = {
+    "fc3": {"seq": 4, "hidden": [16, 12]},
+    "c3": {"seq": 8, "chans": [6, 8, 10], "hidden": [16]},
+    "rb": {"seq": 8, "chans": [6, 8, 10], "hidden": [16], "residual": True},
+}
+
+
+def param_specs(arch, seq):
+    """Mirror of rust predictor::native::param_specs at fixture widths."""
+    cfg = MODELS[arch]
+    specs = []
+    width, length = NUM_FEATURES, seq
+    for i, c_out in enumerate(cfg.get("chans", [])):
+        specs.append((f"conv{i}/w", (2 * width, c_out)))
+        specs.append((f"conv{i}/b", (c_out,)))
+        length //= 2
+        if cfg.get("residual"):
+            specs += [
+                (f"res{i}/w1", (c_out, c_out)),
+                (f"res{i}/b1", (c_out,)),
+                (f"res{i}/w2", (c_out, c_out)),
+                (f"res{i}/b2", (c_out,)),
+            ]
+        width = c_out
+    flat = seq * NUM_FEATURES if not cfg.get("chans") else width * length
+    for i, h in enumerate(cfg["hidden"]):
+        specs.append((f"fc{i}/w", (flat, h)))
+        specs.append((f"fc{i}/b", (h,)))
+        flat = h
+    specs.append(("out/w", (flat, HEAD_OUT)))
+    specs.append(("out/b", (HEAD_OUT,)))
+    return specs
+
+
+def make_params(arch, seq, seed):
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_specs(arch, seq):
+        if len(shape) == 1:
+            data = rng.normal(0.0, 0.25, size=shape)
+        else:
+            scale = math.sqrt(2.0 / (shape[0] + shape[-1])) * 2.0
+            data = rng.normal(0.0, scale, size=shape)
+        params[name] = data.astype(np.float32)
+    return params
+
+
+def forward(arch, params, x64):
+    """Float64 reference forward over (n, seq, NUM_FEATURES) inputs."""
+    cfg = MODELS[arch]
+    p = {k: v.astype(np.float64) for k, v in params.items()}
+    h = x64
+    for i in range(len(cfg.get("chans", []))):
+        n, length, c = h.shape
+        pairs = h.reshape(n, length // 2, 2 * c)
+        h = np.maximum(pairs @ p[f"conv{i}/w"] + p[f"conv{i}/b"], 0.0)
+        if cfg.get("residual"):
+            mid = np.maximum(h @ p[f"res{i}/w1"] + p[f"res{i}/b1"], 0.0)
+            h = np.maximum(h + mid @ p[f"res{i}/w2"] + p[f"res{i}/b2"], 0.0)
+    h = h.reshape(h.shape[0], -1)
+    for i in range(len(cfg["hidden"])):
+        h = np.maximum(h @ p[f"fc{i}/w"] + p[f"fc{i}/b"], 0.0)
+    return h @ p["out/w"] + p["out/b"]
+
+
+def decode_row(row):
+    """Rust decode_row (hybrid mode), bit-for-bit at the integer level."""
+    out = []
+    for t in range(3):
+        base = t * (NUM_CLASSES + 1)
+        reg = max(row[base + NUM_CLASSES] * LAT_SCALE, 0.0)
+        cls = int(np.argmax(row[base : base + NUM_CLASSES]))
+        if cls < NUM_CLASSES - 1:
+            out.append(cls)
+        else:
+            out.append(max(int(math.floor(reg + 0.5)), NUM_CLASSES - 1))
+    return tuple(out)
+
+
+def margins_ok(raw):
+    """Reject heads where f32-vs-f64 drift could flip a decoded value."""
+    for row in raw:
+        for t in range(3):
+            base = t * (NUM_CLASSES + 1)
+            logits = np.sort(row[base : base + NUM_CLASSES])
+            if logits[-1] - logits[-2] < 1e-2:  # ambiguous argmax
+                return False
+            reg = max(row[base + NUM_CLASSES] * LAT_SCALE, 0.0)
+            frac = (reg + 0.5) % 1.0
+            if not (0.01 < frac < 0.99):  # near a rounding boundary
+                return False
+    return True
+
+
+def write_smw(path, params):
+    with open(path, "wb") as f:
+        f.write(b"SMW1")
+        f.write(struct.pack("<I", len(params)))
+        for name, data in params.items():
+            enc = name.encode()
+            f.write(struct.pack("<H", len(enc)) + enc)
+            f.write(struct.pack("<I", data.ndim))
+            for d in data.shape:
+                f.write(struct.pack("<I", d))
+            f.write(data.astype("<f4").tobytes())
+
+
+def fmt(values):
+    return " ".join(f"{float(v):.9g}" for v in values)
+
+
+def gen_model(arch, out_dir):
+    seq = MODELS[arch]["seq"]
+    n = 3
+    # Search a deterministic seed range for one where every decoded value
+    # sits safely away from argmax ties and rounding boundaries, and both
+    # decode paths (class hit and ">8" regression fallback) occur.
+    for seed in range(64):
+        params = make_params(arch, seq, seed)
+        rng = np.random.default_rng(1000 + seed)
+        x = rng.uniform(0.0, 1.0, size=(n, seq, NUM_FEATURES))
+        x[rng.random(x.shape) < 0.5] = 0.0  # exercise the zero-skip path
+        x = x.astype(np.float32)
+        raw = forward(arch, params, x.astype(np.float64))
+        classes = [
+            int(np.argmax(row[t * 11 : t * 11 + NUM_CLASSES])) for row in raw for t in range(3)
+        ]
+        has_reg = any(c == NUM_CLASSES - 1 for c in classes)
+        has_cls = any(c < NUM_CLASSES - 1 for c in classes)
+        if margins_ok(raw) and has_reg and has_cls:
+            break
+    else:
+        raise SystemExit(f"{arch}: no safe seed found")
+    fes = [decode_row(row) for row in raw]
+
+    write_smw(out_dir / f"{arch}.smw", params)
+    names = " ".join(params.keys())
+    (out_dir / f"{arch}.export").write_text(
+        f"model {arch}\nseq_len {seq}\nbatches 1 {n}\nweights {names}\n"
+    )
+    lines = [f"model {arch}", f"seq {seq}", f"n {n}"]
+    lines += [f"input {fmt(row.reshape(-1))}" for row in x]
+    lines += [f"raw {fmt(row)}" for row in raw]
+    lines += [f"fes {f} {e} {s}" for (f, e, s) in fes]
+    (out_dir / f"{arch}.golden.txt").write_text("\n".join(lines) + "\n")
+    params_total = sum(v.size for v in params.values())
+    print(f"{arch}: seed={seed} seq={seq} params={params_total} fes={fes}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    default_out = Path(__file__).resolve().parent.parent / "rust/tests/fixtures/native"
+    ap.add_argument("--out", type=Path, default=default_out)
+    args = ap.parse_args()
+    args.out.mkdir(parents=True, exist_ok=True)
+    for arch in MODELS:
+        gen_model(arch, args.out)
+
+
+if __name__ == "__main__":
+    main()
