@@ -66,6 +66,7 @@ fn run_cfg(
             target_batch: target,
             encode_threads: threads,
             pipeline_depth: depth,
+            fork_predict: true,
         })
         .run()
         .expect("engine run");
@@ -170,10 +171,15 @@ fn main() {
     // exist), so the CI bench-smoke gate can hold a floor on real matmul
     // throughput, not just the analytical table path.
     common::hr("native backend (pure-Rust fc2 inference)");
-    let native_cfgs: &[(usize, usize)] = if quick { &[(4, 2)] } else { &[(1, 1), (4, 2)] };
-    for &(threads, depth) in native_cfgs {
+    // Two gated rows: the single-threaded run isolates the blocked-kernel
+    // throughput itself ("simd" prefix), the threaded one adds the forked
+    // per-worker handles on top. Both run in quick mode so the CI
+    // bench-smoke gate holds floors on each.
+    let native_cfgs: &[(&str, usize, usize)] =
+        &[("native_fc2_simd_", 1, 1), ("native_fc2_", 4, 2)];
+    for &(prefix, threads, depth) in native_cfgs {
         let spec = PredictorSpec::native(common::artifacts(), "fc2", 8);
-        let row = run_cfg(&recs, &cfg, spec, "native_fc2_", 64, threads, depth);
+        let row = run_cfg(&recs, &cfg, spec, prefix, 64, threads, depth);
         println!("  {}: {:.3} MIPS", row.name, row.mips());
         rows.push(row);
     }

@@ -1,0 +1,157 @@
+//! Bench: native inference microkernels — scalar zero-skip `dense_batch`
+//! vs the packed blocked `dense_auto` path, in GFLOP/s, on the layer
+//! shapes the shipped model families actually run (fc2/fc3 trunk
+//! matmuls, the c3 conv-as-matmul, the 33-wide head).
+//!
+//! This is a *micro*bench: it times the kernels directly on synthetic
+//! activations, outside the engine, so kernel-level regressions are
+//! visible without trace-encode noise. The engine-level gate lives in
+//! `bench_engine.rs` (`native_fc2_*` rows); this bench only publishes a
+//! JSON artifact (`BENCH_kernels.json` in CI) for inspection and is not
+//! compared against `bench/baseline.json`.
+//!
+//! Flags / env:
+//! * `--quick` (or `SIMNET_BENCH_QUICK=1`) — fewer repetitions for the
+//!   CI bench-smoke job.
+//! * `--json PATH` — write per-shape results as JSON.
+
+use std::fmt::Write as _;
+use std::hint::black_box;
+use std::time::Instant;
+
+use simnet::predictor::native::kernels::{dense_auto, dense_batch, PackedMat};
+
+/// xorshift64* — deterministic synthetic activations, no rand crate.
+fn xorshift(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+}
+
+/// Uniform value in [-1, 1), zeroed with probability `zero_pct`/100 —
+/// `zero_pct` ~75 models post-ReLU activation sparsity.
+fn rand_vec(len: usize, zero_pct: u64, state: &mut u64) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            let x = xorshift(state);
+            if x % 100 < zero_pct {
+                0.0
+            } else {
+                ((x >> 40) as f32) / (1u64 << 23) as f32 - 1.0
+            }
+        })
+        .collect()
+}
+
+struct Shape {
+    name: &'static str,
+    d_in: usize,
+    d_out: usize,
+    rows: usize,
+    zero_pct: u64,
+}
+
+struct ShapeResult {
+    name: String,
+    gflops_scalar: f64,
+    gflops_blocked: f64,
+}
+
+/// Time `f` over `reps` calls and return GFLOP/s for a
+/// `rows x d_in x d_out` matmul (2 FLOPs per MAC).
+fn time_gflops(reps: usize, flops: f64, mut f: impl FnMut()) -> f64 {
+    // One warmup call keeps first-touch page faults out of the timing.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    flops * reps as f64 / t0.elapsed().as_secs_f64() / 1e9
+}
+
+fn bench_shape(s: &Shape, reps: usize) -> ShapeResult {
+    let mut state = 0x5eed_0000_0000_0001u64 ^ ((s.d_in as u64) << 32) ^ s.d_out as u64;
+    let x = rand_vec(s.rows * s.d_in, s.zero_pct, &mut state);
+    let w = rand_vec(s.d_in * s.d_out, 0, &mut state);
+    let bias = rand_vec(s.d_out, 0, &mut state);
+    let pm = PackedMat::pack(&w, s.d_in, s.d_out);
+    let mut y = vec![0.0f32; s.rows * s.d_out];
+    let flops = 2.0 * (s.rows * s.d_in * s.d_out) as f64;
+
+    let gflops_scalar = time_gflops(reps, flops, || {
+        dense_batch(black_box(&x), black_box(&w), &bias, &mut y, s.rows, true);
+        black_box(&y);
+    });
+    let gflops_blocked = time_gflops(reps, flops, || {
+        dense_auto(black_box(&x), black_box(&w), &pm, &bias, &mut y, s.rows, true);
+        black_box(&y);
+    });
+    let name = format!("{}_{}x{}_r{}_z{}", s.name, s.d_in, s.d_out, s.rows, s.zero_pct);
+    ShapeResult { name, gflops_scalar, gflops_blocked }
+}
+
+fn write_json(path: &str, quick: bool, results: &[ShapeResult]) {
+    let mut s = String::from("{\n");
+    let _ = writeln!(s, "  \"bench\": \"kernels\",");
+    let _ = writeln!(s, "  \"quick\": {quick},");
+    let _ = writeln!(s, "  \"configs\": [");
+    for (i, r) in results.iter().enumerate() {
+        let comma = if i + 1 < results.len() { "," } else { "" };
+        let _ = writeln!(
+            s,
+            "    {{\"name\": \"{}\", \"gflops_scalar\": {:.4}, \
+             \"gflops_blocked\": {:.4}, \"speedup\": {:.4}}}{comma}",
+            r.name,
+            r.gflops_scalar,
+            r.gflops_blocked,
+            r.gflops_blocked / r.gflops_scalar.max(1e-12),
+        );
+    }
+    let _ = writeln!(s, "  ]");
+    s.push_str("}\n");
+    std::fs::write(path, s).expect("write bench json");
+    println!("\nwrote {path}");
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let quick = argv.iter().any(|a| a == "--quick")
+        || std::env::var("SIMNET_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    let json_path =
+        argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1)).cloned();
+
+    // Layer shapes from the shipped families: fc2/fc3 trunk layers, the
+    // c3 conv-as-matmul inner call, and the 33-wide output head. Dense
+    // (z0) and ~75%-sparse (z75, post-ReLU-like) activations — the
+    // sparse rows exercise the density dispatch in `dense_auto`.
+    let shapes = [
+        Shape { name: "fc2", d_in: 400, d_out: 256, rows: 64, zero_pct: 0 },
+        Shape { name: "fc2", d_in: 400, d_out: 256, rows: 64, zero_pct: 75 },
+        Shape { name: "fc3", d_in: 1600, d_out: 512, rows: 16, zero_pct: 0 },
+        Shape { name: "c3conv", d_in: 100, d_out: 64, rows: 256, zero_pct: 75 },
+        Shape { name: "head", d_in: 256, d_out: 33, rows: 64, zero_pct: 0 },
+    ];
+    let reps = if quick { 20 } else { 200 };
+
+    println!("native kernel microbench ({reps} reps per shape)");
+    println!("{:<24} {:>14} {:>15} {:>9}", "shape", "scalar GFLOP/s", "blocked GFLOP/s", "speedup");
+    let mut results = Vec::new();
+    for s in &shapes {
+        let r = bench_shape(s, reps);
+        println!(
+            "{:<24} {:>14.3} {:>15.3} {:>8.2}x",
+            r.name,
+            r.gflops_scalar,
+            r.gflops_blocked,
+            r.gflops_blocked / r.gflops_scalar.max(1e-12),
+        );
+        results.push(r);
+    }
+
+    if let Some(path) = json_path {
+        write_json(&path, quick, &results);
+    }
+}

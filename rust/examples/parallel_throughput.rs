@@ -59,7 +59,12 @@ fn main() -> anyhow::Result<()> {
             .subtraces(256 * w)
             // A bounded target gives several batches per round, which is
             // what lets pipeline_depth 2 overlap encode with predict.
-            .engine(EngineOptions { target_batch: 128, encode_threads: 4, pipeline_depth: 2 })
+            .engine(EngineOptions {
+                target_batch: 128,
+                encode_threads: 4,
+                pipeline_depth: 2,
+                fork_predict: true,
+            })
             .run()?;
         let occupancy = report.engine.as_ref().map(|s| s.mean_occupancy()).unwrap_or(0.0);
         t.row(vec![

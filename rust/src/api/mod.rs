@@ -48,6 +48,10 @@
 //! All three are byte-identical to the underlying entry points they wrap
 //! (pinned by `tests/api_equivalence.rs`).
 
+// The api tree is the public face of the crate: every public item must
+// carry documentation (CI compiles docs with RUSTDOCFLAGS=-D warnings).
+#![warn(missing_docs)]
+
 pub mod report;
 pub mod spec;
 
@@ -90,6 +94,22 @@ enum Predictor<'a> {
 
 /// Builder for one simulation session. See the [module docs](self) for
 /// the mode-selection table and a full example.
+///
+/// # Examples
+///
+/// ```
+/// use simnet::api::{ExecMode, PredictorSpec, Simulation};
+///
+/// let report = Simulation::new()
+///     .bench("xz", 2_000) // reference DES generates the trace
+///     .predictor(PredictorSpec::table(8))
+///     .subtraces(4) // > 1 selects the batching engine
+///     .run()?;
+/// assert_eq!(report.mode, ExecMode::Engine);
+/// assert_eq!(report.outcome.instructions, 2_000);
+/// assert!(report.engine.is_some(), "engine mode reports batching stats");
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct Simulation<'a> {
     source: Source<'a>,
     cfg: Option<&'a SimConfig>,

@@ -22,6 +22,8 @@ pub enum ExecMode {
 }
 
 impl ExecMode {
+    /// Stable lowercase name used in report output and JSON
+    /// (`"sequential"`, `"engine"`, `"pool"`).
     pub fn as_str(&self) -> &'static str {
         match self {
             ExecMode::Sequential => "sequential",
@@ -34,6 +36,22 @@ impl ExecMode {
 /// Unified result of an ML-simulation run: the merged [`SimOutcome`],
 /// the engine's batching statistics when an engine ran, the predictor
 /// label, and the DES-reference CPI when one is known.
+///
+/// # Examples
+///
+/// ```
+/// use simnet::api::{PredictorSpec, Simulation};
+///
+/// let report = Simulation::new()
+///     .bench("xz", 1_000)
+///     .predictor(PredictorSpec::table(8))
+///     .run()?;
+/// assert!(report.cpi() > 0.0);
+/// assert!(report.cpi_error().is_some(), "bench sources carry a DES reference");
+/// let json = report.to_json();
+/// assert!(json.contains("\"schema\": \"simnet.sim_report/v1\""));
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 #[derive(Debug, Clone)]
 pub struct SimReport {
     /// Predictor label ([`super::PredictorSpec::label`], or the label

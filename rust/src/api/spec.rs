@@ -32,6 +32,26 @@ pub enum Backend {
 }
 
 /// Which predictor backs a simulation run.
+///
+/// # Examples
+///
+/// ```
+/// use simnet::api::PredictorSpec;
+/// use simnet::predictor::LatencyPredictor;
+///
+/// // Analytical table predictor: artifact-free, deterministic.
+/// let table = PredictorSpec::table(16);
+/// assert_eq!(table.label(), "table");
+/// assert_eq!(table.build()?.seq_len(), 16);
+///
+/// // Native pure-Rust backend. With no artifacts on disk, Auto weight
+/// // resolution falls back to deterministic generated init weights.
+/// let native = PredictorSpec::native("artifacts", "fc2", 8);
+/// assert_eq!(native.label(), "native:fc2");
+/// let p = native.build()?;
+/// assert_eq!(p.seq_len(), 8);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 #[derive(Debug, Clone)]
 pub enum PredictorSpec {
     /// AOT-compiled model from the artifacts directory. `model` is the

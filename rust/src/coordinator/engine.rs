@@ -48,6 +48,25 @@
 //! commands that would race a pending scatter, which keeps the pipelined
 //! schedule *byte-identical* to the serial one (same batches, same
 //! predictions, same cycle counts, same occupancy statistics).
+//!
+//! # Forked per-worker prediction
+//!
+//! Because each prediction depends only on its sub-trace's own context
+//! queue, the predictor itself can be replicated, not just the encode
+//! work: when the predictor supports [`LatencyPredictor::fork`] (the
+//! native backend forks `clone_lite` handles over one shared weight
+//! arena; the table predictor copies its constants) and
+//! [`EngineOptions::fork_predict`] is on (the default), every encode
+//! worker owns a forked handle and runs encode → predict → scatter for
+//! its own sub-traces with no cross-thread communication at all — no
+//! command channels, no shared batch buffers, no serialization on one
+//! predictor's scratch state. Workers walk the same deterministic chunk
+//! schedule as the serial loop, so per-batch statistics and every
+//! simulation result stay byte-identical; only wall-clock behavior
+//! changes ([`EngineStats::predict_seconds`] then reports the slowest
+//! worker's predict time — the critical path). Predictors that cannot
+//! fork (e.g. a single PJRT device handle) fall back to the shared-handle
+//! pipelined loop above.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -78,7 +97,18 @@ pub struct JobSpec<'a> {
 }
 
 /// Execution knobs for [`BatchEngine`] (CLI: `--target-batch`,
-/// `--encode-threads`, `--pipeline-depth`).
+/// `--encode-threads`, `--pipeline-depth`, `--no-fork-predict`).
+///
+/// # Examples
+///
+/// ```
+/// use simnet::coordinator::EngineOptions;
+///
+/// let opts = EngineOptions { encode_threads: 4, ..EngineOptions::default() };
+/// assert_eq!(opts.target_batch, 0); // one batch per round
+/// assert_eq!(opts.pipeline_depth, 2); // double-buffered
+/// assert!(opts.fork_predict); // per-worker handles when the predictor forks
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct EngineOptions {
     /// Target predictor-batch size (0 = all active sub-traces per batch).
@@ -88,13 +118,19 @@ pub struct EngineOptions {
     /// Batch buffers in flight: 1 runs encode → predict in lockstep, ≥2
     /// overlaps encoding of batch k+1 with prediction of batch k.
     pub pipeline_depth: usize,
+    /// Give each encode worker its own forked predictor handle
+    /// ([`LatencyPredictor::fork`]) so workers encode, predict, and
+    /// scatter independently. Falls back to the shared-handle pipelined
+    /// loop when the predictor cannot fork; results are byte-identical
+    /// either way. Only takes effect with `encode_threads` > 1.
+    pub fork_predict: bool,
 }
 
 impl Default for EngineOptions {
     fn default() -> Self {
         // Depth 2 = double-buffering, the documented default; it only
         // takes effect once encode_threads > 1 (serial runs force 1).
-        EngineOptions { target_batch: 0, encode_threads: 1, pipeline_depth: 2 }
+        EngineOptions { target_batch: 0, encode_threads: 1, pipeline_depth: 2, fork_predict: true }
     }
 }
 
@@ -116,7 +152,9 @@ pub struct EngineStats {
     pub encode_threads: usize,
     /// Batch buffers in flight (1 = no encode/predict overlap).
     pub pipeline_depth: usize,
-    /// Wall seconds spent inside `LatencyPredictor::predict` calls.
+    /// Wall seconds spent inside `LatencyPredictor::predict` calls. With
+    /// forked per-worker handles this is the slowest worker's predict
+    /// time — the critical path — so derived throughput stays meaningful.
     pub predict_seconds: f64,
     /// Wall seconds of the engine run itself (excludes predictor
     /// construction / artifact load, unlike a pool's reported wall time).
@@ -283,7 +321,11 @@ impl<'a, 'p> BatchEngine<'a, 'p> {
             serial_loop(predictor, &mut subs, cap, seq, width, &mut stats)?;
         } else {
             let pcfg = PipelineCfg { cap, threads, depth, seq, width };
-            subs = pipelined_loop(predictor, subs, &pcfg, &mut stats)?;
+            let handles = if opts.fork_predict { fork_handles(&*predictor, threads) } else { None };
+            subs = match handles {
+                Some(h) => forked_loop(predictor, h, subs, &pcfg, &mut stats)?,
+                None => pipelined_loop(predictor, subs, &pcfg, &mut stats)?,
+            };
         }
         let wall = t0.elapsed().as_secs_f64();
         stats.engine_seconds = wall;
@@ -735,6 +777,179 @@ fn pipelined_loop<'a>(
     Ok(out.into_iter().map(|s| s.expect("sub-trace lost in pipeline")).collect())
 }
 
+// ---------------------------------------------------------------------
+// Forked per-worker prediction loop
+// ---------------------------------------------------------------------
+
+/// Fork `n` per-worker predictor handles, all-or-nothing. `None` when the
+/// predictor does not support forking — the engine then falls back to the
+/// shared-handle pipelined loop.
+fn fork_handles(
+    predictor: &dyn LatencyPredictor,
+    n: usize,
+) -> Option<Vec<Box<dyn LatencyPredictor>>> {
+    let mut handles = Vec::with_capacity(n);
+    for _ in 0..n {
+        handles.push(predictor.fork()?);
+    }
+    Some(handles)
+}
+
+/// Everything one forked worker owns: its sub-trace shard, its private
+/// predictor handle, and the shared read-only schedule.
+struct ForkedCtx<'a> {
+    /// This worker's index (owns sub-trace `g` iff `g % workers == w`).
+    w: usize,
+    workers: usize,
+    /// Owned sub-traces, in increasing global-index order (local = g / workers).
+    subs: Vec<SubTrace<'a>>,
+    predictor: Box<dyn LatencyPredictor>,
+    sched: Arc<Schedule>,
+    /// Record count of EVERY sub-trace (global order) — each worker
+    /// replays the global active list from these to find its slots.
+    lens: Arc<Vec<usize>>,
+    cap: usize,
+    seq: usize,
+    width: usize,
+}
+
+/// One forked worker: walks the global chunk schedule and, per chunk,
+/// encodes its owned slots into a private batch, predicts them on its own
+/// handle, and scatters — fully independent of every other worker.
+/// Returns the shard, the handle's served count, and its predict wall
+/// time.
+fn forked_worker<'a>(mut cx: ForkedCtx<'a>) -> Result<(usize, Vec<SubTrace<'a>>, u64, f64)> {
+    let mut cur_round = 0usize;
+    let mut active: Vec<usize> = (0..cx.lens.len()).filter(|&g| cx.lens[g] > 0).collect();
+    let mut batch = vec![0.0f32; cx.cap * cx.width];
+    let mut owned: Vec<usize> = Vec::with_capacity(cx.cap);
+    let mut predict_seconds = 0.0f64;
+    for q in 0..cx.sched.total_chunks {
+        let d = cx.sched.desc(q);
+        // Advance the replicated active list to the chunk's round (chunks
+        // arrive in non-decreasing round order by construction).
+        while cur_round < d.round {
+            cur_round += 1;
+            let r = cur_round;
+            let lens = &cx.lens;
+            active.retain(|&g| lens[g] > r);
+        }
+        owned.clear();
+        for s in d.base..d.base + d.take {
+            let g = active[s];
+            if g % cx.workers == cx.w {
+                owned.push(g / cx.workers);
+            }
+        }
+        if owned.is_empty() {
+            continue;
+        }
+        // Gather the owned slots contiguously; the chunk cap bounds the
+        // private batch exactly as it bounds the serial loop's.
+        for (k, &local) in owned.iter().enumerate() {
+            let sub = &cx.subs[local];
+            let rec = &sub.records[sub.pos];
+            sub.tracker.encode_input(
+                &rec.inst,
+                &rec.hist,
+                cx.seq,
+                &mut batch[k * cx.width..(k + 1) * cx.width],
+            );
+        }
+        let t = Instant::now();
+        let preds = cx.predictor.predict(&batch[..owned.len() * cx.width], owned.len())?;
+        predict_seconds += t.elapsed().as_secs_f64();
+        for (k, &local) in owned.iter().enumerate() {
+            scatter_one(&mut cx.subs[local], preds[k]);
+        }
+    }
+    for sub in cx.subs.iter_mut() {
+        finish_sub(sub);
+    }
+    Ok((cx.w, cx.subs, cx.predictor.served(), predict_seconds))
+}
+
+/// The forked engine loop: shard sub-traces over `threads` workers, each
+/// with its own predictor handle, and let every worker run the whole
+/// encode → predict → scatter cycle for its shard. Batch composition
+/// cannot change any result (each prediction depends only on its own
+/// sub-trace), and the reported statistics are recomputed from the same
+/// deterministic [`Schedule`] the serial loop executes, so reports stay
+/// byte-identical to the serial and pipelined paths.
+fn forked_loop<'a>(
+    predictor: &mut dyn LatencyPredictor,
+    handles: Vec<Box<dyn LatencyPredictor>>,
+    subs: Vec<SubTrace<'a>>,
+    pcfg: &PipelineCfg,
+    stats: &mut EngineStats,
+) -> Result<Vec<SubTrace<'a>>> {
+    let (cap, workers) = (pcfg.cap, pcfg.threads);
+    let total = subs.len();
+    let lens: Arc<Vec<usize>> = Arc::new(subs.iter().map(|s| s.records.len()).collect());
+    let sched = Arc::new(Schedule::plan(&lens, cap));
+    let n_chunks = sched.total_chunks;
+    if n_chunks == 0 {
+        return Ok(subs);
+    }
+    // Report the same effective depth the pipelined loop would: forked
+    // workers inherently overlap encode and predict, the ring just never
+    // materializes.
+    stats.pipeline_depth = pcfg.depth.min(n_chunks).max(1);
+    // Occupancy statistics are a property of the deterministic schedule,
+    // not of which handle predicted which rows.
+    for q in 0..n_chunks {
+        let d = sched.desc(q);
+        stats.batches += 1;
+        stats.slots += d.take as u64;
+        if d.take < cap {
+            stats.starved += 1;
+        }
+    }
+
+    let mut worker_subs: Vec<Vec<SubTrace<'a>>> = (0..workers).map(|_| Vec::new()).collect();
+    for (g, sub) in subs.into_iter().enumerate() {
+        worker_subs[g % workers].push(sub);
+    }
+
+    let joined = thread::scope(|scope| {
+        let mut spawned = Vec::with_capacity(workers);
+        for ((w, mine), handle) in worker_subs.into_iter().enumerate().zip(handles) {
+            let cx = ForkedCtx {
+                w,
+                workers,
+                subs: mine,
+                predictor: handle,
+                sched: Arc::clone(&sched),
+                lens: Arc::clone(&lens),
+                cap,
+                seq: pcfg.seq,
+                width: pcfg.width,
+            };
+            spawned.push(scope.spawn(move || forked_worker(cx)));
+        }
+        spawned
+            .into_iter()
+            .map(|h| h.join().expect("forked worker panicked"))
+            .collect::<Vec<_>>()
+    });
+
+    // Reassemble global submission order (g = local * workers + w); fold
+    // each handle's served count back into the parent and charge the
+    // slowest worker's predict time (the critical path).
+    let mut out: Vec<Option<SubTrace<'a>>> = (0..total).map(|_| None).collect();
+    let mut crit_path = 0.0f64;
+    for res in joined {
+        let (w, mine, served, secs) = res?;
+        predictor.absorb_served(served);
+        crit_path = crit_path.max(secs);
+        for (local, sub) in mine.into_iter().enumerate() {
+            out[local * workers + w] = Some(sub);
+        }
+    }
+    stats.predict_seconds += crit_path;
+    Ok(out.into_iter().map(|s| s.expect("sub-trace lost in forked run")).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -869,6 +1084,8 @@ mod tests {
     /// Acceptance criterion of the pipeline refactor: with ≥4 encode
     /// threads the engine must be *byte-identical* to the serial loop —
     /// cycles, windows, instruction counts, AND the occupancy stats.
+    /// Holds for both threaded modes: forked per-worker predictor handles
+    /// (`fork_predict: true`) and the shared-handle pipelined loop.
     #[test]
     fn pipelined_engine_matches_serial_exactly() {
         let cfg = SimConfig::default_o3();
@@ -883,28 +1100,33 @@ mod tests {
             serial.submit(job(&a, &cfg, 5));
             serial.submit(job(&b, &cfg, 4));
             let r1 = serial.run().unwrap();
-            for (threads, depth) in [(4usize, 2usize), (2, 3), (8, 1)] {
-                let mut p2 = TablePredictor::new(16);
-                let opts = EngineOptions {
-                    target_batch: target,
-                    encode_threads: threads,
-                    pipeline_depth: depth,
-                };
-                let mut piped = BatchEngine::with_options(&mut p2, opts);
-                piped.submit(job(&a, &cfg, 5));
-                piped.submit(job(&b, &cfg, 4));
-                let r2 = piped.run().unwrap();
-                assert_eq!(r1.jobs.len(), r2.jobs.len());
-                for (j1, j2) in r1.jobs.iter().zip(&r2.jobs) {
-                    assert_eq!(j1.instructions, j2.instructions, "t{threads} d{depth}");
-                    assert_eq!(j1.cycles, j2.cycles, "t{threads} d{depth}");
-                    assert_eq!(j1.windows, j2.windows, "t{threads} d{depth}");
+            for fork in [true, false] {
+                for (threads, depth) in [(4usize, 2usize), (2, 3), (8, 1)] {
+                    let mut p2 = TablePredictor::new(16);
+                    let opts = EngineOptions {
+                        target_batch: target,
+                        encode_threads: threads,
+                        pipeline_depth: depth,
+                        fork_predict: fork,
+                    };
+                    let mut piped = BatchEngine::with_options(&mut p2, opts);
+                    piped.submit(job(&a, &cfg, 5));
+                    piped.submit(job(&b, &cfg, 4));
+                    let r2 = piped.run().unwrap();
+                    assert_eq!(r1.jobs.len(), r2.jobs.len());
+                    for (j1, j2) in r1.jobs.iter().zip(&r2.jobs) {
+                        assert_eq!(j1.instructions, j2.instructions, "f{fork} t{threads} d{depth}");
+                        assert_eq!(j1.cycles, j2.cycles, "f{fork} t{threads} d{depth}");
+                        assert_eq!(j1.windows, j2.windows, "f{fork} t{threads} d{depth}");
+                    }
+                    assert_eq!(r1.stats.batches, r2.stats.batches, "f{fork} t{threads}");
+                    assert_eq!(r1.stats.slots, r2.stats.slots, "f{fork} t{threads}");
+                    assert_eq!(r1.stats.starved, r2.stats.starved, "f{fork} t{threads}");
+                    assert_eq!(r1.stats.target_batch, r2.stats.target_batch);
+                    // Forked runs absorb every handle's served count back
+                    // into the parent, so totals match the serial run.
+                    assert_eq!(p1.served(), p2.served(), "f{fork} t{threads} d{depth}");
                 }
-                assert_eq!(r1.stats.batches, r2.stats.batches);
-                assert_eq!(r1.stats.slots, r2.stats.slots);
-                assert_eq!(r1.stats.starved, r2.stats.starved);
-                assert_eq!(r1.stats.target_batch, r2.stats.target_batch);
-                assert_eq!(p1.served(), p2.served());
             }
         }
     }
@@ -915,7 +1137,12 @@ mod tests {
         let recs = make_records("xz", 120);
         // More threads than sub-traces, deeper ring than chunks.
         let mut p = TablePredictor::new(8);
-        let opts = EngineOptions { target_batch: 2, encode_threads: 16, pipeline_depth: 8 };
+        let opts = EngineOptions {
+            target_batch: 2,
+            encode_threads: 16,
+            pipeline_depth: 8,
+            fork_predict: true,
+        };
         let mut engine = BatchEngine::with_options(&mut p, opts);
         engine.submit(job(&[], &cfg, 4));
         engine.submit(job(&recs, &cfg, 3));
@@ -939,7 +1166,12 @@ mod tests {
         let cfg = SimConfig::default_o3();
         let recs = make_records("mcf", 2_000);
         let mut p = TablePredictor::new(16);
-        let opts = EngineOptions { target_batch: 4, encode_threads: 2, pipeline_depth: 2 };
+        let opts = EngineOptions {
+            target_batch: 4,
+            encode_threads: 2,
+            pipeline_depth: 2,
+            fork_predict: true,
+        };
         let mut engine = BatchEngine::with_options(&mut p, opts);
         engine.submit(job(&recs, &cfg, 8));
         let report = engine.run().unwrap();

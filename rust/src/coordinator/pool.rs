@@ -4,11 +4,17 @@
 //! The trace is sharded into `workers` contiguous slices, but unlike the
 //! seed implementation (one OS thread + one private predictor + private
 //! batches per worker), every shard is submitted as a job to ONE engine
-//! sharing ONE predictor: the next-instruction slots of all shards'
-//! sub-traces are multiplexed into common accelerator batches. At equal
-//! total sub-trace count this sustains far higher predictor-batch
-//! occupancy than per-worker pooling (see `benches/bench_engine.rs`),
-//! which is what DL-based simulators live or die on.
+//! driven by ONE parent predictor: the next-instruction slots of all
+//! shards' sub-traces are multiplexed into common accelerator batches.
+//! At equal total sub-trace count this sustains far higher
+//! predictor-batch occupancy than per-worker pooling (see
+//! `benches/bench_engine.rs`), which is what DL-based simulators live or
+//! die on. When the engine runs multi-threaded and the predictor
+//! supports [`LatencyPredictor::fork`], each encode worker gets its own
+//! forked handle over the shared model (see
+//! [`EngineOptions::fork_predict`]) — the pool's deliberate design point
+//! is shared *batching*, never serializing shards on one predictor's
+//! scratch buffers.
 //!
 //! The requested sub-trace total is distributed across shards with its
 //! remainder (12 sub-traces over 8 workers yields 12, not 8 — the seed
@@ -138,7 +144,12 @@ mod tests {
             subtraces,
             window: 0,
             cfg_feature: 0.0,
-            engine: EngineOptions { target_batch: 0, encode_threads: 1, pipeline_depth: 1 },
+            engine: EngineOptions {
+                target_batch: 0,
+                encode_threads: 1,
+                pipeline_depth: 1,
+                fork_predict: true,
+            },
         }
     }
 
@@ -214,14 +225,20 @@ mod tests {
         let mut piped = serial.clone();
         piped.engine.encode_threads = 4;
         piped.engine.pipeline_depth = 2;
+        let mut shared = piped.clone();
+        shared.engine.fork_predict = false;
         let (out_s, stats_s) = run(&recs, &cfg, 16, &serial);
-        let (out_p, stats_p) = run(&recs, &cfg, 16, &piped);
-        assert_eq!(out_s.instructions, out_p.instructions);
-        assert_eq!(out_s.cycles, out_p.cycles);
-        assert_eq!(out_s.windows, out_p.windows);
-        assert_eq!(stats_s.batches, stats_p.batches);
-        assert_eq!(stats_s.slots, stats_p.slots);
-        assert_eq!(stats_p.encode_threads, 4);
+        // Threaded with forked per-worker handles (default) AND with the
+        // shared-handle pipelined loop — both must be bit-identical.
+        for opts in [&piped, &shared] {
+            let (out_p, stats_p) = run(&recs, &cfg, 16, opts);
+            assert_eq!(out_s.instructions, out_p.instructions);
+            assert_eq!(out_s.cycles, out_p.cycles);
+            assert_eq!(out_s.windows, out_p.windows);
+            assert_eq!(stats_s.batches, stats_p.batches);
+            assert_eq!(stats_s.slots, stats_p.slots);
+            assert_eq!(stats_p.encode_threads, 4);
+        }
     }
 
     #[test]

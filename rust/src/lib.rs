@@ -1,3 +1,7 @@
+// The `portable-simd` cargo feature swaps the kernel accumulator onto
+// `std::simd` (nightly-only); stable builds use the autovectorized form.
+#![cfg_attr(feature = "portable-simd", feature(portable_simd))]
+
 //! # SimNet-RS
 //!
 //! A from-scratch reproduction of *SimNet: Accurate and High-Performance

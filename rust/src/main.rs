@@ -245,6 +245,7 @@ fn print_usage() {
          \x20 simulate-ml  --bench NAME --n N [--model c3] [--table] [--backend pjrt|native]\n\
          \x20              [--weights W.smw|init] [--seq S] [--subtraces S] [--workers W]\n\
          \x20              [--target-batch B] [--encode-threads T] [--pipeline-depth D]\n\
+         \x20              [--no-fork-predict]\n\
          \x20              [--trace file.smt] [--artifacts DIR] [--window W] [--json out.json]\n\
          \x20 report       table4|fig5|fig6|fig10|attribution [--models a,b] [--n N] [--benches ...]\n\
          \x20 sweep        subtrace-size|subtraces|workers|branch-predictor|l2-size|rob-size [...]\n\
@@ -429,6 +430,7 @@ fn cmd_simulate_ml(args: &Args) -> Result<()> {
                 "target-batch",
                 "encode-threads",
                 "pipeline-depth",
+                "no-fork-predict",
                 "json",
             ],
         ],
@@ -442,6 +444,9 @@ fn cmd_simulate_ml(args: &Args) -> Result<()> {
         target_batch: args.num("target-batch", 0)?,
         encode_threads: args.num("encode-threads", 1)?,
         pipeline_depth: args.num("pipeline-depth", 2)?,
+        // Presence flag: forked per-worker predictor handles are the
+        // default; --no-fork-predict forces the shared-handle pipeline.
+        fork_predict: args.get("no-fork-predict").is_none(),
     };
     if engine.encode_threads > 1 && workers <= 1 && subtraces <= 1 {
         eprintln!(

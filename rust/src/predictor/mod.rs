@@ -78,6 +78,22 @@ pub trait LatencyPredictor: Send {
     fn context_mode(&self) -> ContextMode {
         ContextMode::SimNet
     }
+
+    /// Hand out an independent handle over the same model, if this
+    /// predictor supports it. Forked handles must predict exactly what
+    /// the parent would (same weights, same decode), with their own
+    /// scratch state and a zeroed `served` counter, so the engine can
+    /// run one per encode worker without any cross-thread serialization.
+    ///
+    /// The default (`None`) keeps predictors single-handle; the engine
+    /// then falls back to its shared-handle pipelined loop.
+    fn fork(&self) -> Option<Box<dyn LatencyPredictor>> {
+        None
+    }
+
+    /// Fold a forked handle's `served` count back into this handle, so
+    /// totals reported by the parent equal the single-handle run.
+    fn absorb_served(&mut self, _n: u64) {}
 }
 
 /// PJRT-backed predictor.
@@ -193,6 +209,21 @@ impl LatencyPredictor for TablePredictor {
 
     fn served(&self) -> u64 {
         self.served
+    }
+
+    /// The table is pure math over a few constants, so a fork is just a
+    /// fresh table with the same parameters.
+    fn fork(&self) -> Option<Box<dyn LatencyPredictor>> {
+        Some(Box::new(TablePredictor {
+            seq: self.seq,
+            served: 0,
+            level_latency: self.level_latency,
+            mispredict_bubble: self.mispredict_bubble,
+        }))
+    }
+
+    fn absorb_served(&mut self, n: u64) {
+        self.served += n;
     }
 }
 

@@ -1,24 +1,161 @@
-//! The one micro-kernel behind the native backend: batched dense
-//! (`y = act(x @ w + b)`) over preallocated buffers.
+//! Batched dense micro-kernels behind the native backend:
+//! `y = act(x @ w + b)` over preallocated buffers, in two shapes.
 //!
-//! Every layer of the supported model zoo lowers to it (mirroring the
-//! Pallas story on the python side, where `conv1d_k2s2` is a reshape +
-//! matmul): a k2s2 convolution is a dense over `L/2` position-pair rows,
-//! and a residual block is two dense calls plus a fused skip-add.
+//! Every layer of the supported model zoo lowers to a dense (mirroring
+//! the Pallas story on the python side, where `conv1d_k2s2` is a reshape
+//! + matmul): a k2s2 convolution is a dense over `L/2` position-pair
+//! rows, and a residual block is two dense calls plus a fused skip-add.
+//!
+//! Two kernels implement it:
+//!
+//! * [`dense_batch`] — the scalar zero-skip reference path. The inner
+//!   loop is an axpy over `w`'s rows; input zeros (zero-padded context
+//!   slots, post-ReLU activations) skip their whole axpy. Fastest when
+//!   the input is mostly zeros, and the semantics every other kernel
+//!   must reproduce exactly.
+//! * [`dense_blocked`] — the cache-blocked register-tile path over a
+//!   [`PackedMat`]: [`MR`]×[`NR`] f32 accumulator tiles initialized from
+//!   the bias, streaming one contiguous weight panel at a time. The
+//!   fixed-width [`NR`]-lane inner update autovectorizes on stable
+//!   toolchains; the `portable-simd` cargo feature swaps in an explicit
+//!   `std::simd::f32x8` form (nightly) with the same operation order.
+//! * [`dense_auto`] — the production dispatch: per group of [`MR`] rows,
+//!   routes to the zero-skip path when the group is sparse enough and to
+//!   the blocked tiles otherwise.
+//!
+//! Bit-compatibility contract: for every output element, both kernels
+//! evaluate `bias + Σ x[i] * w[i]` in ascending-`i` order with separate
+//! f32 multiply and add (no FMA, no split accumulators), so results are
+//! `==`-identical per row. The only representable difference is the sign
+//! of a zero (the zero-skip path may keep `-0.0` where the blocked path
+//! adds `+0.0` over it, and vice versa), which `==`, the decode path,
+//! and the golden fixtures are all insensitive to. The randomized
+//! equivalence tests below pin this on every edge shape the model zoo
+//! produces (33-wide head, seq-len-1 inputs, non-multiple-of-block
+//! dims).
 //!
 //! Layout: `x` row-major `(rows, d_in)`, `w` row-major `(d_in, d_out)`,
-//! `y` row-major `(rows, d_out)`. The inner loop is an axpy over `w`'s
-//! rows, so the weight matrix streams sequentially and the compiler can
-//! vectorize the `d_out` dimension; input zeros (post-ReLU activations
-//! and zero-padded context slots are mostly zero) skip their whole axpy.
+//! `y` row-major `(rows, d_out)`; `x`/`y` may be longer than `rows * d`
+//! (grow-only scratch buffers) — the excess is ignored.
 
 use super::fastmath;
 
-/// Compute `y[r] = act(x[r] @ w + b)` for the first `rows` rows.
+/// Output-column lanes per weight panel (the register-tile width).
+pub const NR: usize = 8;
+
+/// Input rows per register tile: [`MR`] independent accumulation chains
+/// keep the FP pipeline full without touching memory for `y`.
+pub const MR: usize = 4;
+
+/// Route a row group to the zero-skip scalar path when fewer than
+/// 1/`SPARSE_DENSITY_DIV` of its inputs are nonzero: below ~25% density
+/// the skipped axpys beat the blocked tiles' wasted multiply-by-zero
+/// lanes, above it the contiguous panel streaming wins.
+const SPARSE_DENSITY_DIV: usize = 4;
+
+/// A weight matrix repacked at plan-compile time into blocked row-panel
+/// layout for [`dense_blocked`]: `ceil(d_out / NR)` panels of
+/// `d_in * NR` floats, where panel `p` holds output columns
+/// `p*NR .. p*NR + NR` (zero-padded past `d_out`) laid out row-major by
+/// input index — `panel[i * NR + j]` is `w[i * d_out + p*NR + j]`. The
+/// inner loop therefore streams one contiguous panel front to back.
+pub struct PackedMat {
+    d_in: usize,
+    d_out: usize,
+    data: Vec<f32>,
+}
+
+impl PackedMat {
+    /// Repack row-major `w` of shape `(d_in, d_out)`.
+    pub fn pack(w: &[f32], d_in: usize, d_out: usize) -> PackedMat {
+        assert_eq!(w.len(), d_in * d_out, "pack: weight length vs shape ({d_in}, {d_out})");
+        let panels = d_out.div_ceil(NR);
+        let mut data = vec![0.0f32; panels * d_in * NR];
+        for (p, panel) in data.chunks_exact_mut(d_in * NR).enumerate() {
+            let c0 = p * NR;
+            let width = NR.min(d_out - c0);
+            for i in 0..d_in {
+                panel[i * NR..i * NR + width]
+                    .copy_from_slice(&w[i * d_out + c0..i * d_out + c0 + width]);
+            }
+        }
+        PackedMat { d_in, d_out, data }
+    }
+
+    /// Input width of the packed matrix.
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    /// Output width of the packed matrix.
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+}
+
+/// One [`NR`]-wide accumulator register row. Both implementations
+/// evaluate `acc[j] + x * w[j]` with a separate f32 multiply and add (no
+/// `mul_add` — FMA would round differently from the scalar reference
+/// path), so the stable and `portable-simd` builds are bit-identical.
+#[cfg(not(feature = "portable-simd"))]
+#[derive(Clone, Copy)]
+struct Acc([f32; NR]);
+
+#[cfg(not(feature = "portable-simd"))]
+impl Acc {
+    #[inline(always)]
+    fn load(v: [f32; NR]) -> Acc {
+        Acc(v)
+    }
+
+    /// `acc += x * w`, lane-wise — a fixed-width loop over two arrays,
+    /// which LLVM autovectorizes on stable toolchains.
+    #[inline(always)]
+    fn madd(&mut self, x: f32, w: &[f32; NR]) {
+        for (a, &wv) in self.0.iter_mut().zip(w) {
+            *a += x * wv;
+        }
+    }
+
+    #[inline(always)]
+    fn to_array(self) -> [f32; NR] {
+        self.0
+    }
+}
+
+#[cfg(feature = "portable-simd")]
+#[derive(Clone, Copy)]
+struct Acc(std::simd::f32x8);
+
+#[cfg(feature = "portable-simd")]
+impl Acc {
+    #[inline(always)]
+    fn load(v: [f32; NR]) -> Acc {
+        Acc(std::simd::f32x8::from_array(v))
+    }
+
+    #[inline(always)]
+    fn madd(&mut self, x: f32, w: &[f32; NR]) {
+        // Multiply then add, NOT mul_add: keeps rounding identical to
+        // the scalar kernels.
+        self.0 += std::simd::f32x8::splat(x) * std::simd::f32x8::from_array(*w);
+    }
+
+    #[inline(always)]
+    fn to_array(self) -> [f32; NR] {
+        self.0.to_array()
+    }
+}
+
+// The explicit-SIMD accumulator is hardwired to 8 lanes.
+#[cfg(feature = "portable-simd")]
+const _: () = assert!(NR == 8);
+
+/// Compute `y[r] = act(x[r] @ w + b)` for the first `rows` rows — the
+/// scalar zero-skip kernel (see the module docs for the layout and the
+/// bit-compatibility contract).
 ///
-/// `d_out` is `bias.len()` and `d_in` is `w.len() / d_out`; `x` and `y`
-/// may be longer than `rows * d` (grow-only scratch buffers), the excess
-/// is ignored.
+/// `d_out` is `bias.len()` and `d_in` is `w.len() / d_out`.
 pub fn dense_batch(x: &[f32], w: &[f32], bias: &[f32], y: &mut [f32], rows: usize, relu: bool) {
     let d_out = bias.len();
     let d_in = w.len() / d_out;
@@ -42,9 +179,128 @@ pub fn dense_batch(x: &[f32], w: &[f32], bias: &[f32], y: &mut [f32], rows: usiz
     }
 }
 
+/// One `M`×[`NR`] register tile: `M` consecutive input rows against every
+/// weight panel. `x` and `y` are the tile's row-0 suffixes of the batch
+/// buffers (at least `M * d_in` / `M * d_out` floats long).
+#[inline]
+fn dense_tile<const M: usize>(x: &[f32], pm: &PackedMat, bias: &[f32], y: &mut [f32], relu: bool) {
+    let (d_in, d_out) = (pm.d_in, pm.d_out);
+    let mut c0 = 0;
+    for panel in pm.data.chunks_exact(d_in * NR) {
+        let width = NR.min(d_out - c0);
+        // Accumulators start at the bias, exactly like the scalar path's
+        // `copy_from_slice(bias)`. Padding lanes start at 0 and only ever
+        // accumulate `x * 0.0` from the zero-padded panel tail; they are
+        // never copied out.
+        let mut init = [0.0f32; NR];
+        init[..width].copy_from_slice(&bias[c0..c0 + width]);
+        let mut acc = [Acc::load(init); M];
+        for (i, wrow) in panel.chunks_exact(NR).enumerate() {
+            let wrow: &[f32; NR] = wrow.try_into().unwrap();
+            for (r, a) in acc.iter_mut().enumerate() {
+                a.madd(x[r * d_in + i], wrow);
+            }
+        }
+        for (r, a) in acc.iter().enumerate() {
+            let vals = a.to_array();
+            let out = &mut y[r * d_out + c0..r * d_out + c0 + width];
+            for (yo, &v) in out.iter_mut().zip(&vals[..width]) {
+                *yo = if relu { fastmath::relu(v) } else { v };
+            }
+        }
+        c0 += NR;
+    }
+}
+
+/// The cache-blocked kernel: [`dense_batch`]'s contract over a
+/// [`PackedMat`], full [`MR`]-row tiles first, then single-row tiles for
+/// the remainder. `==`-identical to [`dense_batch`] per row.
+pub fn dense_blocked(
+    x: &[f32],
+    pm: &PackedMat,
+    bias: &[f32],
+    y: &mut [f32],
+    rows: usize,
+    relu: bool,
+) {
+    let (d_in, d_out) = (pm.d_in, pm.d_out);
+    debug_assert_eq!(bias.len(), d_out);
+    debug_assert!(x.len() >= rows * d_in);
+    debug_assert!(y.len() >= rows * d_out);
+    let mut r = 0;
+    while r + MR <= rows {
+        dense_tile::<MR>(&x[r * d_in..], pm, bias, &mut y[r * d_out..], relu);
+        r += MR;
+    }
+    while r < rows {
+        dense_tile::<1>(&x[r * d_in..], pm, bias, &mut y[r * d_out..], relu);
+        r += 1;
+    }
+}
+
+/// Density-dispatching dense: per group of up to [`MR`] consecutive
+/// rows, count the group's nonzeros and route it to the zero-skip scalar
+/// path (sparse pre-filter) or to the blocked tiles. Because both paths
+/// are `==`-identical per row, the grouping can never change a result —
+/// only how fast it is computed.
+pub fn dense_auto(
+    x: &[f32],
+    w: &[f32],
+    pm: &PackedMat,
+    bias: &[f32],
+    y: &mut [f32],
+    rows: usize,
+    relu: bool,
+) {
+    let (d_in, d_out) = (pm.d_in, pm.d_out);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(bias.len(), d_out);
+    let mut r = 0;
+    while r < rows {
+        let m = MR.min(rows - r);
+        let xg = &x[r * d_in..r * d_in + m * d_in];
+        let nnz = xg.iter().filter(|&&v| v != 0.0).count();
+        if nnz * SPARSE_DENSITY_DIV < xg.len() {
+            dense_batch(xg, w, bias, &mut y[r * d_out..(r + m) * d_out], m, relu);
+        } else if m == MR {
+            dense_tile::<MR>(xg, pm, bias, &mut y[r * d_out..], relu);
+        } else {
+            for k in 0..m {
+                dense_tile::<1>(&x[(r + k) * d_in..], pm, bias, &mut y[(r + k) * d_out..], relu);
+            }
+        }
+        r += m;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// xorshift64* step — the same generator `native::mod` seeds init
+    /// weights with; tests roll their own RNG because no rand crate is
+    /// vendored.
+    fn xorshift(state: &mut u64) -> u64 {
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        x
+    }
+
+    /// Uniform in [-1, 1), zeroed with probability `zero_pct`/100.
+    fn rand_val(state: &mut u64, zero_pct: u64) -> f32 {
+        if xorshift(state) % 100 < zero_pct {
+            return 0.0;
+        }
+        let x = xorshift(state);
+        ((x >> 40) as f32) / (1u64 << 23) as f32 - 1.0
+    }
+
+    fn rand_vec(state: &mut u64, len: usize, zero_pct: u64) -> Vec<f32> {
+        (0..len).map(|_| rand_val(state, zero_pct)).collect()
+    }
 
     #[test]
     fn dense_matches_hand_matmul() {
@@ -57,6 +313,13 @@ mod tests {
         assert_eq!(y, [14.0, -5.0, 9.5, -9.5]);
         dense_batch(&x, &w, &b, &mut y, 2, true);
         assert_eq!(y, [14.0, 0.0, 9.5, 0.0]);
+        // Same result through the blocked and dispatching kernels.
+        let pm = PackedMat::pack(&w, 3, 2);
+        let mut yb = [0.0f32; 4];
+        dense_blocked(&x, &pm, &b, &mut yb, 2, false);
+        assert_eq!(yb, [14.0, -5.0, 9.5, -9.5]);
+        dense_auto(&x, &w, &pm, &b, &mut yb, 2, true);
+        assert_eq!(yb, [14.0, 0.0, 9.5, 0.0]);
     }
 
     #[test]
@@ -83,5 +346,126 @@ mod tests {
         let mut y = [7.0f32; 3];
         dense_batch(&x, &w, &b, &mut y, 1, false);
         assert_eq!(y, [6.0, 7.0, 7.0]);
+        let pm = PackedMat::pack(&w, 2, 1);
+        let mut y = [7.0f32; 3];
+        dense_blocked(&x, &pm, &b, &mut y, 1, false);
+        assert_eq!(y, [6.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn pack_layout_is_panel_major_with_zero_padded_tail() {
+        // w (2, 10): two panels — a full 8-wide one and a 2-wide tail.
+        let d_in = 2;
+        let d_out = 10;
+        let w: Vec<f32> = (0..d_in * d_out).map(|i| i as f32).collect();
+        let pm = PackedMat::pack(&w, d_in, d_out);
+        assert_eq!(pm.d_in(), d_in);
+        assert_eq!(pm.d_out(), d_out);
+        assert_eq!(pm.data.len(), 2 * d_in * NR);
+        for i in 0..d_in {
+            for j in 0..NR {
+                assert_eq!(pm.data[i * NR + j], w[i * d_out + j], "panel 0 [{i}][{j}]");
+            }
+            for j in 0..2 {
+                assert_eq!(
+                    pm.data[d_in * NR + i * NR + j],
+                    w[i * d_out + NR + j],
+                    "panel 1 [{i}][{j}]"
+                );
+            }
+            for j in 2..NR {
+                assert_eq!(pm.data[d_in * NR + i * NR + j], 0.0, "panel 1 padding [{i}][{j}]");
+            }
+        }
+    }
+
+    /// Satellite coverage: every non-multiple-of-block edge the model zoo
+    /// produces — the 33-wide head, seq-len-1-style single-row batches,
+    /// 1-wide inputs/outputs, exact-block shapes — must agree with the
+    /// scalar reference exactly (`assert_eq!`, not a tolerance).
+    #[test]
+    fn blocked_matches_scalar_on_edge_shapes() {
+        let mut state = 0x1234_5678_9abc_def0u64;
+        let shapes =
+            [(1, 1), (1, 33), (33, 1), (2, 8), (3, 33), (7, 9), (9, 16), (50, 33), (16, 64)];
+        for (d_in, d_out) in shapes {
+            for rows in [1usize, 2, 3, 4, 5, 7, 9] {
+                let x = rand_vec(&mut state, rows * d_in, 40);
+                let w = rand_vec(&mut state, d_in * d_out, 0);
+                let b = rand_vec(&mut state, d_out, 0);
+                let pm = PackedMat::pack(&w, d_in, d_out);
+                for relu in [false, true] {
+                    let mut ys = vec![0.0f32; rows * d_out];
+                    let mut yb = vec![0.0f32; rows * d_out];
+                    let mut ya = vec![0.0f32; rows * d_out];
+                    dense_batch(&x, &w, &b, &mut ys, rows, relu);
+                    dense_blocked(&x, &pm, &b, &mut yb, rows, relu);
+                    dense_auto(&x, &w, &pm, &b, &mut ya, rows, relu);
+                    assert_eq!(ys, yb, "blocked ({d_in},{d_out}) rows={rows} relu={relu}");
+                    assert_eq!(ys, ya, "auto ({d_in},{d_out}) rows={rows} relu={relu}");
+                }
+            }
+        }
+    }
+
+    /// Satellite coverage: the sparse pre-filter and the dense tiles must
+    /// agree whichever way [`dense_auto`] routes a group — pinned at both
+    /// density extremes (95% zeros routes sparse, fully dense routes
+    /// blocked) and at a mixed batch where different groups take
+    /// different paths.
+    #[test]
+    fn sparse_and_dense_routes_agree() {
+        let mut state = 0xfeed_f00d_dead_beefu64;
+        let (d_in, d_out, rows) = (40, 24, 9);
+        let w = rand_vec(&mut state, d_in * d_out, 0);
+        let b = rand_vec(&mut state, d_out, 0);
+        let pm = PackedMat::pack(&w, d_in, d_out);
+        for zero_pct in [95u64, 0] {
+            let x = rand_vec(&mut state, rows * d_in, zero_pct);
+            let mut ys = vec![0.0f32; rows * d_out];
+            let mut ya = vec![0.0f32; rows * d_out];
+            dense_batch(&x, &w, &b, &mut ys, rows, true);
+            dense_auto(&x, &w, &pm, &b, &mut ya, rows, true);
+            assert_eq!(ys, ya, "zero_pct={zero_pct}");
+        }
+        // Mixed: first MR-row group all zeros (sparse route), second
+        // fully dense (blocked route), ragged 1-row tail.
+        let mut x = rand_vec(&mut state, rows * d_in, 0);
+        for v in x.iter_mut().take(MR * d_in) {
+            *v = 0.0;
+        }
+        let mut ys = vec![0.0f32; rows * d_out];
+        let mut ya = vec![0.0f32; rows * d_out];
+        dense_batch(&x, &w, &b, &mut ys, rows, false);
+        dense_auto(&x, &w, &pm, &b, &mut ya, rows, false);
+        assert_eq!(ys, ya);
+    }
+
+    /// Satellite coverage: proptest-style randomized scalar-vs-blocked
+    /// equivalence over a seeded xorshift stream of shapes, densities,
+    /// and activations (no proptest crate is vendored — the case
+    /// generator is the deterministic RNG above, so failures reproduce).
+    #[test]
+    fn randomized_scalar_vs_blocked_equivalence() {
+        let mut state = 0x0dd_ba11_0f_c0ffeeu64;
+        for case in 0..200 {
+            let d_in = 1 + (xorshift(&mut state) % 64) as usize;
+            let d_out = 1 + (xorshift(&mut state) % 64) as usize;
+            let rows = 1 + (xorshift(&mut state) % 8) as usize;
+            let zero_pct = xorshift(&mut state) % 100;
+            let relu = xorshift(&mut state) % 2 == 0;
+            let x = rand_vec(&mut state, rows * d_in, zero_pct);
+            let w = rand_vec(&mut state, d_in * d_out, 0);
+            let b = rand_vec(&mut state, d_out, 0);
+            let pm = PackedMat::pack(&w, d_in, d_out);
+            let mut ys = vec![0.0f32; rows * d_out];
+            let mut yb = vec![0.0f32; rows * d_out];
+            let mut ya = vec![0.0f32; rows * d_out];
+            dense_batch(&x, &w, &b, &mut ys, rows, relu);
+            dense_blocked(&x, &pm, &b, &mut yb, rows, relu);
+            dense_auto(&x, &w, &pm, &b, &mut ya, rows, relu);
+            assert_eq!(ys, yb, "case {case}: ({d_in},{d_out}) rows={rows} zero%={zero_pct}");
+            assert_eq!(ys, ya, "case {case}: ({d_in},{d_out}) rows={rows} zero%={zero_pct}");
+        }
     }
 }

@@ -12,15 +12,23 @@
 //! * The layer plan is compiled once at load time from the actual tensor
 //!   shapes (names and order validated against the `.export` manifest),
 //!   so the forward pass is a flat loop with no per-batch dispatch.
+//! * Every weight matrix is additionally repacked at plan-compile time
+//!   into the blocked row-panel layout of [`kernels::PackedMat`]; the
+//!   forward pass dispatches per row group between the zero-skip scalar
+//!   kernel and the cache-blocked register tiles ([`kernels::dense_auto`]).
 //! * Forward/scratch buffers are preallocated and grow-only — steady
-//!   state runs allocation-free regardless of batch size.
+//!   state runs allocation-free regardless of batch size. Buffer capacity
+//!   is derived from the compiled plan's `max_width`, never from caller
+//!   batch history, so [`NativePredictor::clone_lite`] handles size
+//!   themselves correctly whatever batches their parent ran.
 //! * [`NativePredictor::clone_lite`] hands out per-thread handles that
 //!   share one read-only weight arena behind an [`Arc`]; only the scratch
 //!   buffers (a few KB) are per-handle, so pool workers never duplicate
-//!   weights.
+//!   weights. [`LatencyPredictor::fork`] exposes the same thing through
+//!   the trait so the engine can give every encode worker its own handle.
 
 mod fastmath;
-mod kernels;
+pub mod kernels;
 
 use std::path::Path;
 use std::sync::Arc;
@@ -103,6 +111,9 @@ pub struct NativeModel {
     seq: usize,
     mode: OutputMode,
     tensors: Vec<Tensor>,
+    /// Blocked-panel repack of every 2-D tensor (index-aligned with
+    /// `tensors`; `None` for biases). Built once at load time.
+    packed: Vec<Option<kernels::PackedMat>>,
     layers: Vec<Layer>,
     /// Largest per-item activation width across layers (buffer sizing).
     max_width: usize,
@@ -283,6 +294,18 @@ fn init_tensors(arch: Arch, seq: usize, tag: &str) -> Vec<Tensor> {
         .collect()
 }
 
+/// Repack every weight matrix into the blocked row-panel layout the
+/// tiled kernels stream (biases and other 1-D tensors stay unpacked).
+fn pack_weights(tensors: &[Tensor]) -> Vec<Option<kernels::PackedMat>> {
+    tensors
+        .iter()
+        .map(|t| match t.dims.as_slice() {
+            [d_in, d_out] => Some(kernels::PackedMat::pack(&t.data, *d_in, *d_out)),
+            _ => None,
+        })
+        .collect()
+}
+
 /// Pure-Rust latency predictor: an [`Arc`]-shared [`NativeModel`] plus
 /// per-handle scratch buffers.
 pub struct NativePredictor {
@@ -303,6 +326,25 @@ impl NativePredictor {
     /// names; without one, `fallback_seq` is used. Weights resolve per
     /// `weights` ([`WeightsSource`]); the output mode comes from
     /// `<base>.meta` as on the PJRT path.
+    ///
+    /// # Examples
+    ///
+    /// ```no_run
+    /// use std::path::Path;
+    /// use simnet::predictor::{LatencyPredictor, NativePredictor, WeightsSource};
+    ///
+    /// let mut p = NativePredictor::load(
+    ///     Path::new("artifacts"),
+    ///     "fc2",
+    ///     &WeightsSource::Auto, // tag.smw, base.smw, base.init.smw, else init
+    ///     8,                    // seq_len fallback when no .export manifest
+    /// )?;
+    /// println!("{} from {}", p.tag(), p.weights_from());
+    /// let inputs = vec![0.0f32; p.seq_len() * simnet::features::NUM_FEATURES];
+    /// let triples = p.predict(&inputs, 1)?;
+    /// assert_eq!(triples.len(), 1);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn load(
         artifacts: &Path,
         tag: &str,
@@ -354,11 +396,13 @@ impl NativePredictor {
         let (layers, max_width) =
             plan(arch, seq, &tensors).with_context(|| format!("native model {tag}"))?;
         let mode = read_model_mode(artifacts, &base).unwrap_or(OutputMode::Hybrid);
+        let packed = pack_weights(&tensors);
         Ok(Self::from_model(NativeModel {
             tag: tag.to_string(),
             seq,
             mode,
             tensors,
+            packed,
             layers,
             max_width,
             weights_from,
@@ -367,16 +411,34 @@ impl NativePredictor {
 
     /// Build from generated init weights only — no filesystem access at
     /// all (not even a manifest probe).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use simnet::features::NUM_FEATURES;
+    /// use simnet::predictor::{LatencyPredictor, NativePredictor};
+    /// use simnet::runtime::HEAD_OUT;
+    ///
+    /// let mut p = NativePredictor::from_init("fc2", 8)?;
+    /// assert_eq!(p.seq_len(), 8);
+    /// let inputs = vec![0.25f32; 2 * 8 * NUM_FEATURES];
+    /// let mut raw = Vec::new();
+    /// p.forward_raw(&inputs, 2, &mut raw)?;
+    /// assert_eq!(raw.len(), 2 * HEAD_OUT);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn from_init(tag: &str, seq: usize) -> Result<Self> {
         let arch = Arch::parse(&export_name(tag))?;
         let tensors = init_tensors(arch, seq, tag);
         let (layers, max_width) =
             plan(arch, seq, &tensors).with_context(|| format!("native model {tag}"))?;
+        let packed = pack_weights(&tensors);
         Ok(Self::from_model(NativeModel {
             tag: tag.to_string(),
             seq,
             mode: OutputMode::Hybrid,
             tensors,
+            packed,
             layers,
             max_width,
             weights_from: "init(generated)".to_string(),
@@ -480,13 +542,18 @@ fn apply_layer(
     n: usize,
 ) {
     let t = |i: usize| model.tensors[i].data.as_slice();
+    let pm = |i: usize| model.packed[i].as_ref().expect("2-D tensor must be packed");
     match *layer {
-        Layer::Dense { w, b, relu } => kernels::dense_batch(src, t(w), t(b), dst, n, relu),
-        Layer::Conv { w, b, pairs } => kernels::dense_batch(src, t(w), t(b), dst, n * pairs, true),
+        Layer::Dense { w, b, relu } => {
+            kernels::dense_auto(src, t(w), pm(w), t(b), dst, n, relu);
+        }
+        Layer::Conv { w, b, pairs } => {
+            kernels::dense_auto(src, t(w), pm(w), t(b), dst, n * pairs, true);
+        }
         Layer::Residual { w1, b1, w2, b2, rows, c } => {
             let r = n * rows;
-            kernels::dense_batch(src, t(w1), t(b1), tmp, r, true);
-            kernels::dense_batch(tmp, t(w2), t(b2), dst, r, false);
+            kernels::dense_auto(src, t(w1), pm(w1), t(b1), tmp, r, true);
+            kernels::dense_auto(tmp, t(w2), pm(w2), t(b2), dst, r, false);
             for (yo, &xi) in dst[..r * c].iter_mut().zip(&src[..r * c]) {
                 *yo = fastmath::relu(*yo + xi);
             }
@@ -512,6 +579,19 @@ impl LatencyPredictor for NativePredictor {
 
     fn served(&self) -> u64 {
         self.served
+    }
+
+    /// Forked handles share the weight arena via [`clone_lite`]
+    /// (a few KB of fresh scratch each), so the engine runs one per
+    /// encode worker instead of serializing on this handle.
+    ///
+    /// [`clone_lite`]: NativePredictor::clone_lite
+    fn fork(&self) -> Option<Box<dyn LatencyPredictor>> {
+        Some(Box::new(self.clone_lite()))
+    }
+
+    fn absorb_served(&mut self, n: u64) {
+        self.served += n;
     }
 }
 
@@ -567,6 +647,66 @@ mod tests {
         let triples = p.predict(&inputs, 3).unwrap();
         assert_eq!(triples.len(), 3);
         assert_eq!(p.served(), 3);
+    }
+
+    #[test]
+    fn seq_len_one_fc_model_works() {
+        // Kernel edge shape: seq_len 1 makes the first dense a 50-wide
+        // input, and the 33-wide head is never a multiple of the block.
+        let mut p = NativePredictor::from_init("fc2", 1).unwrap();
+        assert_eq!(p.seq_len(), 1);
+        let inputs: Vec<f32> = (0..2 * NUM_FEATURES).map(|i| ((i % 7) as f32) / 7.0).collect();
+        let mut raw = Vec::new();
+        p.forward_raw(&inputs, 2, &mut raw).unwrap();
+        assert_eq!(raw.len(), 2 * HEAD_OUT);
+        let triples = p.predict(&inputs, 2).unwrap();
+        assert_eq!(triples.len(), 2);
+    }
+
+    #[test]
+    fn clone_after_large_batch_sizes_buffers_from_plan() {
+        // Regression guard: per-handle scratch must be sized from the
+        // compiled plan's max_width per call, never inherited from the
+        // parent's batch history. A small-batch clone taken after the
+        // parent ran a large batch (and a later large batch on that
+        // clone) must match fresh-handle results exactly.
+        let parent = {
+            let mut p = NativePredictor::from_init("c3", 8).unwrap();
+            let width = 8 * NUM_FEATURES;
+            let big: Vec<f32> = (0..64 * width).map(|i| ((i % 11) as f32) / 11.0).collect();
+            let mut raw = Vec::new();
+            p.forward_raw(&big, 64, &mut raw).unwrap();
+            p
+        };
+        let mut clone = parent.clone_lite();
+        let mut fresh = NativePredictor::from_init("c3", 8).unwrap();
+        let width = 8 * NUM_FEATURES;
+        let small: Vec<f32> = (0..width).map(|i| ((i % 5) as f32) / 5.0).collect();
+        let big: Vec<f32> = (0..32 * width).map(|i| ((i % 9) as f32) / 9.0).collect();
+        for (inputs, n) in [(&small, 1usize), (&big, 32), (&small, 1)] {
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            clone.forward_raw(inputs, n, &mut a).unwrap();
+            fresh.forward_raw(inputs, n, &mut b).unwrap();
+            assert_eq!(a, b, "clone vs fresh at n={n}");
+        }
+        assert_eq!(clone.served(), 0, "clone_lite starts a fresh served counter");
+    }
+
+    #[test]
+    fn fork_shares_arena_and_absorbs_served() {
+        let mut p = NativePredictor::from_init("fc2", 4).unwrap();
+        let width = 4 * NUM_FEATURES;
+        let inputs: Vec<f32> = (0..3 * width).map(|i| ((i % 13) as f32) / 13.0).collect();
+        let want = p.predict(&inputs, 3).unwrap();
+        let mut forked = p.fork().expect("native predictor must fork");
+        assert_eq!(forked.seq_len(), p.seq_len());
+        let got = forked.predict(&inputs, 3).unwrap();
+        assert_eq!(got, want, "forked handle must agree exactly");
+        assert_eq!(forked.served(), 3);
+        assert_eq!(p.served(), 3, "fork does not absorb back automatically");
+        p.absorb_served(forked.served());
+        assert_eq!(p.served(), 6);
     }
 
     #[test]

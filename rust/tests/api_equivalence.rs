@@ -47,7 +47,8 @@ fn builder_sequential_matches_legacy_sequential() {
 #[test]
 fn builder_engine_matches_legacy_batch_engine() {
     let (recs, cfg) = records("leela", 4_000);
-    let opts = EngineOptions { target_batch: 8, encode_threads: 1, pipeline_depth: 1 };
+    let opts =
+        EngineOptions { target_batch: 8, encode_threads: 1, pipeline_depth: 1, fork_predict: true };
     let mut p = TablePredictor::new(16);
     let mut engine = BatchEngine::with_options(&mut p, opts);
     let job = JobSpec { records: &recs, cfg: &cfg, subtraces: 4, window: 500, cfg_feature: 0.0 };
@@ -90,7 +91,12 @@ fn builder_engine_matches_legacy_parallel() {
         .config(&cfg)
         .predictor(PredictorSpec::table(16))
         .subtraces(4)
-        .engine(EngineOptions { target_batch: 0, encode_threads: 1, pipeline_depth: 1 })
+        .engine(EngineOptions {
+            target_batch: 0,
+            encode_threads: 1,
+            pipeline_depth: 1,
+            fork_predict: true,
+        })
         .run()
         .unwrap();
     assert_eq!(report.outcome.instructions, legacy.instructions);
@@ -101,7 +107,8 @@ fn builder_engine_matches_legacy_parallel() {
 #[test]
 fn builder_pool_matches_legacy_pool() {
     let (recs, cfg) = records("gcc", 6_000);
-    let engine = EngineOptions { target_batch: 0, encode_threads: 1, pipeline_depth: 1 };
+    let engine =
+        EngineOptions { target_batch: 0, encode_threads: 1, pipeline_depth: 1, fork_predict: true };
     let opts = PoolOptions { workers: 3, subtraces: 12, window: 500, cfg_feature: 0.0, engine };
     let mut p = TablePredictor::new(16);
     let (legacy_out, legacy_stats) = simulate_pool_report(&recs, &cfg, &mut p, &opts).unwrap();

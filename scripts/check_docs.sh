@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Check that relative markdown links in the repo's hand-written docs
+# resolve to real files, so docs/ARCHITECTURE.md and README.md cannot
+# silently rot as the source tree moves underneath them. External
+# (http/https/mailto) links and pure #fragment anchors are skipped.
+#
+# Usage: bash scripts/check_docs.sh   (run from anywhere; CI runs it in
+# the docs job after `cargo doc`).
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+docs=("$repo_root/README.md" "$repo_root/docs/ARCHITECTURE.md")
+
+fail=0
+for doc in "${docs[@]}"; do
+    if [[ ! -f "$doc" ]]; then
+        echo "MISSING DOC: $doc"
+        fail=1
+        continue
+    fi
+    dir="$(dirname "$doc")"
+    # Extract [text](target) markdown links, one target per line.
+    # grep exits 1 on no matches; that just means nothing to check.
+    targets="$(grep -oE '\]\([^)]+\)' "$doc" | sed -E 's/^\]\(//; s/\)$//')" || true
+    while IFS= read -r target; do
+        [[ -z "$target" ]] && continue
+        case "$target" in
+            http://*|https://*|mailto:*|\#*) continue ;;
+        esac
+        path="${target%%#*}"   # drop any #fragment
+        [[ -z "$path" ]] && continue
+        if [[ ! -e "$dir/$path" ]]; then
+            echo "BROKEN LINK in ${doc#"$repo_root"/}: ($target) -> $dir/$path"
+            fail=1
+        fi
+    done <<< "$targets"
+done
+
+if [[ "$fail" -ne 0 ]]; then
+    echo "check_docs: broken links found"
+    exit 1
+fi
+echo "check_docs: all relative links resolve"
