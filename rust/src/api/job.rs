@@ -1,0 +1,813 @@
+//! [`JobRequest`] — a [`super::Simulation`] captured as plain data.
+//!
+//! The job server's wire protocol ships simulation jobs between
+//! processes, so the builder's borrowed fields (records, config,
+//! predictor handle) are replaced with owned, serializable descriptions:
+//! a [`JobSource`] instead of `&[TraceRecord]`, a [`ConfigSpec`] instead
+//! of `&SimConfig`, and a [`PredictorSpec`] by value. A request
+//! round-trips through single-line JSON ([`JobRequest::to_json`] /
+//! [`JobRequest::from_json`]) with strict unknown-field rejection — a
+//! misspelled knob is a named error listing the accepted keys, never a
+//! silently-defaulted run.
+//!
+//! [`JobRequest::run_with`] replays the request through the ordinary
+//! [`super::Simulation`] builder against a caller-supplied predictor, so
+//! a daemon-side run is byte-identical to the in-process run the same
+//! flags would have produced (pinned by `tests/server_e2e.rs`).
+
+use std::path::PathBuf;
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::EngineOptions;
+use crate::des::{BpChoice, SimConfig};
+use crate::predictor::LatencyPredictor;
+use crate::reports::{des_trace, REFERENCE_SEED};
+use crate::server::json::{check_keys, Value};
+use crate::trace::{TraceReader, TraceRecord};
+use crate::workload::find;
+
+use super::{ExecMode, PredictorSpec, SimReport, Simulation, WeightsSource};
+
+/// Where a job's instruction trace comes from — the owned counterpart of
+/// the builder's `.bench(..)` / `.trace_file(..)` sources (caller-held
+/// record slices cannot cross the wire).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobSource {
+    /// Run the reference DES over a named benchmark for `n` instructions.
+    Bench {
+        /// Benchmark name (must be in the suite; see `repro list-benches`).
+        name: String,
+        /// Instructions to simulate.
+        n: u64,
+    },
+    /// Replay an `.smt` trace file readable by the server process.
+    TraceFile(PathBuf),
+}
+
+/// A machine configuration as data: a named base plus the same overrides
+/// the CLI's `--bp` / `--l2-kb` / `--rob` flags apply. [`build`](Self::build)
+/// reproduces the CLI's construction exactly, so daemon jobs and direct
+/// runs simulate identical machines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigSpec {
+    /// Base configuration name: `"o3"` or `"a64fx"`.
+    pub base: String,
+    /// Branch predictor override (`bimode` | `bimode-l` | `tage`).
+    pub bp: Option<String>,
+    /// L2 capacity override in KiB.
+    pub l2_kb: Option<u64>,
+    /// Reorder-buffer entries override.
+    pub rob: Option<usize>,
+}
+
+impl ConfigSpec {
+    /// The default out-of-order machine with no overrides.
+    pub fn o3() -> Self {
+        ConfigSpec { base: "o3".into(), bp: None, l2_kb: None, rob: None }
+    }
+
+    /// Materialize the [`SimConfig`] this spec describes.
+    pub fn build(&self) -> Result<SimConfig> {
+        let mut cfg = match self.base.as_str() {
+            "o3" => SimConfig::default_o3(),
+            "a64fx" => SimConfig::a64fx(),
+            other => bail!("unknown config base {other} (o3|a64fx)"),
+        };
+        if let Some(bp) = &self.bp {
+            cfg.bp = match bp.as_str() {
+                "bimode" => BpChoice::BiMode,
+                "bimode-l" => BpChoice::BiModeLarge,
+                "tage" => BpChoice::TageLite,
+                other => bail!("unknown branch predictor {other} (bimode|bimode-l|tage)"),
+            };
+        }
+        if let Some(kb) = self.l2_kb {
+            cfg.l2.size = kb << 10;
+        }
+        if let Some(rob) = self.rob {
+            cfg.rob_entries = rob;
+        }
+        Ok(cfg)
+    }
+}
+
+impl Default for ConfigSpec {
+    fn default() -> Self {
+        Self::o3()
+    }
+}
+
+/// Admission priority class. High-priority jobs are dequeued before any
+/// normal job, FIFO within each class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    /// Default class.
+    Normal,
+    /// Dequeued ahead of every queued normal job.
+    High,
+}
+
+impl Priority {
+    /// Stable lowercase name (`"normal"` / `"high"`), used on the wire.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Inverse of [`as_str`](Self::as_str).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            other => bail!("unknown priority {other} (normal|high)"),
+        }
+    }
+}
+
+/// One simulation job as owned data: source, machine, predictor, and the
+/// execution knobs of [`super::Simulation`].
+///
+/// # Examples
+///
+/// ```
+/// use simnet::api::job::{JobRequest, JobSource};
+/// use simnet::api::PredictorSpec;
+///
+/// let job = JobRequest::new(
+///     JobSource::Bench { name: "xz".into(), n: 1_000 },
+///     PredictorSpec::table(8),
+/// );
+/// let wire = job.to_json();
+/// let back = JobRequest::from_json(&wire)?;
+/// assert_eq!(back.to_json(), wire);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    /// Trace source.
+    pub source: JobSource,
+    /// Machine configuration.
+    pub config: ConfigSpec,
+    /// Predictor selection (the daemon warms one predictor per distinct
+    /// [`predictor_key`](Self::predictor_key)).
+    pub predictor: PredictorSpec,
+    /// Sub-trace parallelism (> 1 selects the batching engine).
+    pub subtraces: usize,
+    /// Concurrent shards of one shared engine (> 1 selects pool mode).
+    pub workers: usize,
+    /// CPI window in instructions (0 = none).
+    pub window: u64,
+    /// Configuration input feature for conditioned models (0.0 = unused).
+    pub cfg_feature: f32,
+    /// Workload input seed for bench sources.
+    pub input_seed: u64,
+    /// Engine execution knobs.
+    pub engine: EngineOptions,
+    /// Admission priority class.
+    pub priority: Priority,
+}
+
+/// Accepted top-level keys of the job JSON object, in canonical order.
+const JOB_KEYS: &[&str] = &[
+    "source",
+    "config",
+    "predictor",
+    "subtraces",
+    "workers",
+    "window",
+    "cfg_feature",
+    "input_seed",
+    "engine",
+    "priority",
+];
+
+impl JobRequest {
+    /// A job with the given source and predictor and every knob at the
+    /// [`super::Simulation`] default (sequential, o3 machine, reference
+    /// input seed, normal priority).
+    pub fn new(source: JobSource, predictor: PredictorSpec) -> Self {
+        JobRequest {
+            source,
+            config: ConfigSpec::o3(),
+            predictor,
+            subtraces: 1,
+            workers: 1,
+            window: 0,
+            cfg_feature: 0.0,
+            input_seed: REFERENCE_SEED,
+            engine: EngineOptions::default(),
+            priority: Priority::Normal,
+        }
+    }
+
+    /// The execution mode [`super::Simulation::run`] will select for
+    /// these knobs (same rule: workers, then sub-traces / config
+    /// feature, else sequential).
+    pub fn mode(&self) -> ExecMode {
+        if self.workers.max(1) > 1 {
+            ExecMode::Pool
+        } else if self.subtraces.max(1) > 1 || self.cfg_feature != 0.0 {
+            ExecMode::Engine
+        } else {
+            ExecMode::Sequential
+        }
+    }
+
+    /// Identity of the predictor this job needs, as a stable string.
+    /// Jobs with equal keys share one warm predictor registry entry in
+    /// the server — and are candidates for cross-tenant co-batching.
+    pub fn predictor_key(&self) -> String {
+        fn wkey(w: &WeightsSource) -> String {
+            match w {
+                WeightsSource::Auto => "auto".into(),
+                WeightsSource::Init => "init".into(),
+                WeightsSource::Path(p) => format!("path:{}", p.display()),
+            }
+        }
+        match &self.predictor {
+            PredictorSpec::Table { seq } => format!("table/seq={seq}"),
+            PredictorSpec::Ml { artifacts, model, weights } => {
+                format!("pjrt/{}/{}/w={}", artifacts.display(), model, wkey(weights))
+            }
+            PredictorSpec::Native { artifacts, model, weights, seq } => {
+                format!(
+                    "native/{}/{}/seq={}/w={}",
+                    artifacts.display(),
+                    model,
+                    seq,
+                    wkey(weights)
+                )
+            }
+        }
+    }
+
+    /// Total instructions the job will simulate, when knowable up front
+    /// (bench sources; trace files are sized only once read).
+    pub fn total_instructions(&self) -> Option<u64> {
+        match &self.source {
+            JobSource::Bench { n, .. } => Some(*n),
+            JobSource::TraceFile(_) => None,
+        }
+    }
+
+    /// Check the request without running it: the benchmark must exist,
+    /// the config must build, and the predictor spec must validate.
+    /// (Trace-file existence is checked at run time, by the open.)
+    pub fn validate(&self) -> Result<()> {
+        if let JobSource::Bench { name, .. } = &self.source {
+            if find(name).is_none() {
+                bail!("unknown benchmark {name}");
+            }
+        }
+        self.config.build()?;
+        self.predictor.validate()
+    }
+
+    /// Execute the request against an already-built predictor (the
+    /// server's warm registry entry), optionally streaming progress
+    /// through `counter`. Equivalent to building a
+    /// [`super::Simulation`] with the same knobs — pinned byte-identical
+    /// by `tests/server_e2e.rs`.
+    pub fn run_with(
+        &self,
+        predictor: &mut dyn LatencyPredictor,
+        counter: Option<Arc<AtomicU64>>,
+    ) -> Result<SimReport> {
+        let cfg = self.config.build()?;
+        let mut sim = Simulation::new()
+            .config(&cfg)
+            .predictor_ref(predictor)
+            .labeled(self.predictor.label())
+            .subtraces(self.subtraces)
+            .workers(self.workers)
+            .window(self.window)
+            .cfg_feature(self.cfg_feature)
+            .input_seed(self.input_seed)
+            .engine(self.engine);
+        sim = match &self.source {
+            JobSource::Bench { name, n } => sim.bench(name.clone(), *n),
+            JobSource::TraceFile(path) => sim.trace_file(path.clone()),
+        };
+        if let Some(c) = counter {
+            sim = sim.progress(c);
+        }
+        sim.run()
+    }
+
+    /// Materialize the trace records this job simulates, plus the
+    /// reference CPI and bench name for its report — the pieces the
+    /// server's co-batching path feeds into one shared engine.
+    pub(crate) fn materialize(
+        &self,
+        cfg: &SimConfig,
+    ) -> Result<(Vec<TraceRecord>, Option<f64>, Option<String>)> {
+        match &self.source {
+            JobSource::Bench { name, n } => {
+                let b = find(name).ok_or_else(|| anyhow!("unknown benchmark {name}"))?;
+                let (recs, stats) = des_trace(cfg, &b, *n, self.input_seed);
+                Ok((recs, Some(stats.cpi()), Some(name.clone())))
+            }
+            JobSource::TraceFile(path) => {
+                let recs: Vec<TraceRecord> =
+                    TraceReader::open(path)?.collect::<std::io::Result<_>>()?;
+                let cpi = super::trace_reference_cpi(&recs);
+                Ok((recs, Some(cpi), None))
+            }
+        }
+    }
+
+    /// Render the request as one single-line JSON object (the wire form;
+    /// canonical, so `from_json(to_json(j)).to_json() == to_json(j)`).
+    pub fn to_json(&self) -> String {
+        self.to_value().render()
+    }
+
+    fn to_value(&self) -> Value {
+        let source = match &self.source {
+            JobSource::Bench { name, n } => Value::Obj(vec![
+                ("bench".into(), Value::Str(name.clone())),
+                ("n".into(), Value::Num(*n as f64)),
+            ]),
+            JobSource::TraceFile(path) => Value::Obj(vec![(
+                "trace".into(),
+                Value::Str(path.display().to_string()),
+            )]),
+        };
+        let mut config = vec![("base".into(), Value::Str(self.config.base.clone()))];
+        if let Some(bp) = &self.config.bp {
+            config.push(("bp".into(), Value::Str(bp.clone())));
+        }
+        if let Some(kb) = self.config.l2_kb {
+            config.push(("l2_kb".into(), Value::Num(kb as f64)));
+        }
+        if let Some(rob) = self.config.rob {
+            config.push(("rob".into(), Value::Num(rob as f64)));
+        }
+        let weights = |w: &WeightsSource| match w {
+            WeightsSource::Auto => Value::Str("auto".into()),
+            WeightsSource::Init => Value::Str("init".into()),
+            WeightsSource::Path(p) => {
+                Value::Obj(vec![("path".into(), Value::Str(p.display().to_string()))])
+            }
+        };
+        let predictor = match &self.predictor {
+            PredictorSpec::Table { seq } => Value::Obj(vec![
+                ("kind".into(), Value::Str("table".into())),
+                ("seq".into(), Value::Num(*seq as f64)),
+            ]),
+            PredictorSpec::Ml { artifacts, model, weights: w } => Value::Obj(vec![
+                ("kind".into(), Value::Str("pjrt".into())),
+                ("artifacts".into(), Value::Str(artifacts.display().to_string())),
+                ("model".into(), Value::Str(model.clone())),
+                ("weights".into(), weights(w)),
+            ]),
+            PredictorSpec::Native { artifacts, model, weights: w, seq } => Value::Obj(vec![
+                ("kind".into(), Value::Str("native".into())),
+                ("artifacts".into(), Value::Str(artifacts.display().to_string())),
+                ("model".into(), Value::Str(model.clone())),
+                ("weights".into(), weights(w)),
+                ("seq".into(), Value::Num(*seq as f64)),
+            ]),
+        };
+        let engine = Value::Obj(vec![
+            ("target_batch".into(), Value::Num(self.engine.target_batch as f64)),
+            ("encode_threads".into(), Value::Num(self.engine.encode_threads as f64)),
+            ("pipeline_depth".into(), Value::Num(self.engine.pipeline_depth as f64)),
+            ("fork_predict".into(), Value::Bool(self.engine.fork_predict)),
+        ]);
+        Value::Obj(vec![
+            ("source".into(), source),
+            ("config".into(), config_value(config)),
+            ("predictor".into(), predictor),
+            ("subtraces".into(), Value::Num(self.subtraces as f64)),
+            ("workers".into(), Value::Num(self.workers as f64)),
+            ("window".into(), Value::Num(self.window as f64)),
+            ("cfg_feature".into(), Value::Num(self.cfg_feature as f64)),
+            ("input_seed".into(), Value::Num(self.input_seed as f64)),
+            ("engine".into(), engine),
+            ("priority".into(), Value::Str(self.priority.as_str().into())),
+        ])
+    }
+
+    /// Parse a request from its JSON wire form. Unknown fields at any
+    /// level are rejected by name, listing the keys that object accepts.
+    pub fn from_json(s: &str) -> Result<JobRequest> {
+        Self::from_value(&Value::parse(s)?)
+    }
+
+    /// [`from_json`](Self::from_json) over an already-parsed [`Value`]
+    /// (the server parses the enclosing protocol line once).
+    pub fn from_value(v: &Value) -> Result<JobRequest> {
+        let obj = v.as_obj().ok_or_else(|| anyhow!("job: expected a JSON object"))?;
+        check_keys(obj, "job", JOB_KEYS)?;
+        let source =
+            source_from(v.get("source").ok_or_else(|| anyhow!("job: missing \"source\""))?)?;
+        let predictor = predictor_from(
+            v.get("predictor").ok_or_else(|| anyhow!("job: missing \"predictor\""))?,
+        )?;
+        let mut job = JobRequest::new(source, predictor);
+        if let Some(c) = v.get("config") {
+            job.config = config_from(c)?;
+        }
+        if let Some(x) = v.get("subtraces") {
+            job.subtraces = get_u64(x, "subtraces")? as usize;
+        }
+        if let Some(x) = v.get("workers") {
+            job.workers = get_u64(x, "workers")? as usize;
+        }
+        if let Some(x) = v.get("window") {
+            job.window = get_u64(x, "window")?;
+        }
+        if let Some(x) = v.get("cfg_feature") {
+            job.cfg_feature =
+                x.as_f64().ok_or_else(|| anyhow!("job: \"cfg_feature\" must be a number"))? as f32;
+        }
+        if let Some(x) = v.get("input_seed") {
+            job.input_seed = get_u64(x, "input_seed")?;
+        }
+        if let Some(e) = v.get("engine") {
+            job.engine = engine_from(e)?;
+        }
+        if let Some(p) = v.get("priority") {
+            let s = p.as_str().ok_or_else(|| anyhow!("job: \"priority\" must be a string"))?;
+            job.priority = Priority::parse(s)?;
+        }
+        Ok(job)
+    }
+}
+
+/// Wrap the config pair list, defaulting an all-defaults spec to the
+/// bare object form `{"base": "o3"}` (already the case by construction).
+fn config_value(pairs: Vec<(String, Value)>) -> Value {
+    Value::Obj(pairs)
+}
+
+/// A non-negative integer member (bounded to the f64-exact range by the
+/// parser's [`Value::as_u64`]).
+fn get_u64(v: &Value, name: &str) -> Result<u64> {
+    v.as_u64().ok_or_else(|| {
+        anyhow!("job: \"{name}\" must be a non-negative integer (at most 2^53)")
+    })
+}
+
+fn source_from(v: &Value) -> Result<JobSource> {
+    let obj = v.as_obj().ok_or_else(|| anyhow!("job source: expected a JSON object"))?;
+    check_keys(obj, "job source", &["bench", "n", "trace"])?;
+    match (v.get("bench"), v.get("trace")) {
+        (Some(b), None) => {
+            let name =
+                b.as_str().ok_or_else(|| anyhow!("job source: \"bench\" must be a string"))?;
+            let n = get_u64(
+                v.get("n").ok_or_else(|| anyhow!("job source: bench needs \"n\""))?,
+                "n",
+            )?;
+            Ok(JobSource::Bench { name: name.to_string(), n })
+        }
+        (None, Some(t)) => {
+            if v.get("n").is_some() {
+                bail!("job source: \"n\" only applies to bench sources");
+            }
+            let path =
+                t.as_str().ok_or_else(|| anyhow!("job source: \"trace\" must be a string"))?;
+            Ok(JobSource::TraceFile(PathBuf::from(path)))
+        }
+        _ => bail!("job source: exactly one of \"bench\" or \"trace\" is required"),
+    }
+}
+
+fn config_from(v: &Value) -> Result<ConfigSpec> {
+    let obj = v.as_obj().ok_or_else(|| anyhow!("job config: expected a JSON object"))?;
+    check_keys(obj, "job config", &["base", "bp", "l2_kb", "rob"])?;
+    let mut spec = ConfigSpec::o3();
+    if let Some(b) = v.get("base") {
+        spec.base = b
+            .as_str()
+            .ok_or_else(|| anyhow!("job config: \"base\" must be a string"))?
+            .to_string();
+    }
+    if let Some(bp) = v.get("bp") {
+        spec.bp = Some(
+            bp.as_str()
+                .ok_or_else(|| anyhow!("job config: \"bp\" must be a string"))?
+                .to_string(),
+        );
+    }
+    if let Some(kb) = v.get("l2_kb") {
+        spec.l2_kb = Some(get_u64(kb, "l2_kb")?);
+    }
+    if let Some(rob) = v.get("rob") {
+        spec.rob = Some(get_u64(rob, "rob")? as usize);
+    }
+    // Surface bad base / bp names at admission, not mid-run.
+    spec.build().context("job config")?;
+    Ok(spec)
+}
+
+fn weights_from(v: &Value) -> Result<WeightsSource> {
+    match v {
+        Value::Str(s) if s == "auto" => Ok(WeightsSource::Auto),
+        Value::Str(s) if s == "init" => Ok(WeightsSource::Init),
+        Value::Str(s) => {
+            bail!("job predictor: unknown weights \"{s}\" (auto|init|{{\"path\": ..}})")
+        }
+        Value::Obj(pairs) => {
+            check_keys(pairs, "job predictor weights", &["path"])?;
+            let p = v
+                .get("path")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("job predictor weights: \"path\" must be a string"))?;
+            Ok(WeightsSource::Path(PathBuf::from(p)))
+        }
+        _ => bail!("job predictor: \"weights\" must be \"auto\", \"init\", or {{\"path\": ..}}"),
+    }
+}
+
+fn predictor_from(v: &Value) -> Result<PredictorSpec> {
+    let obj = v.as_obj().ok_or_else(|| anyhow!("job predictor: expected a JSON object"))?;
+    let kind = v
+        .get("kind")
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("job predictor: missing \"kind\" (table|pjrt|native)"))?;
+    let artifacts = || -> Result<PathBuf> {
+        Ok(match v.get("artifacts") {
+            None => PathBuf::from("artifacts"),
+            Some(a) => PathBuf::from(
+                a.as_str()
+                    .ok_or_else(|| anyhow!("job predictor: \"artifacts\" must be a string"))?,
+            ),
+        })
+    };
+    let model = || -> Result<String> {
+        Ok(v.get("model")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("job predictor: missing \"model\""))?
+            .to_string())
+    };
+    let seq = |default: usize| -> Result<usize> {
+        Ok(match v.get("seq") {
+            None => default,
+            Some(s) => get_u64(s, "seq")? as usize,
+        })
+    };
+    let weights = || -> Result<WeightsSource> {
+        match v.get("weights") {
+            None => Ok(WeightsSource::Auto),
+            Some(w) => weights_from(w),
+        }
+    };
+    match kind {
+        "table" => {
+            check_keys(obj, "job predictor (table)", &["kind", "seq"])?;
+            Ok(PredictorSpec::Table { seq: seq(32)? })
+        }
+        "pjrt" => {
+            check_keys(obj, "job predictor (pjrt)", &["kind", "artifacts", "model", "weights"])?;
+            Ok(PredictorSpec::Ml { artifacts: artifacts()?, model: model()?, weights: weights()? })
+        }
+        "native" => {
+            check_keys(
+                obj,
+                "job predictor (native)",
+                &["kind", "artifacts", "model", "weights", "seq"],
+            )?;
+            Ok(PredictorSpec::Native {
+                artifacts: artifacts()?,
+                model: model()?,
+                weights: weights()?,
+                seq: seq(32)?,
+            })
+        }
+        other => bail!("job predictor: unknown kind \"{other}\" (table|pjrt|native)"),
+    }
+}
+
+fn engine_from(v: &Value) -> Result<EngineOptions> {
+    let obj = v.as_obj().ok_or_else(|| anyhow!("job engine: expected a JSON object"))?;
+    check_keys(
+        obj,
+        "job engine",
+        &["target_batch", "encode_threads", "pipeline_depth", "fork_predict"],
+    )?;
+    let mut opts = EngineOptions::default();
+    if let Some(x) = v.get("target_batch") {
+        opts.target_batch = get_u64(x, "target_batch")? as usize;
+    }
+    if let Some(x) = v.get("encode_threads") {
+        opts.encode_threads = (get_u64(x, "encode_threads")? as usize).max(1);
+    }
+    if let Some(x) = v.get("pipeline_depth") {
+        opts.pipeline_depth = (get_u64(x, "pipeline_depth")? as usize).max(1);
+    }
+    if let Some(x) = v.get("fork_predict") {
+        opts.fork_predict =
+            x.as_bool().ok_or_else(|| anyhow!("job engine: \"fork_predict\" must be a bool"))?;
+    }
+    Ok(opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_request() -> JobRequest {
+        let mut job = JobRequest::new(
+            JobSource::Bench { name: "gcc".into(), n: 5_000 },
+            PredictorSpec::native("artifacts", "fc2", 8).with_weights_source(WeightsSource::Init),
+        );
+        job.config = ConfigSpec {
+            base: "o3".into(),
+            bp: Some("tage".into()),
+            l2_kb: Some(512),
+            rob: Some(192),
+        };
+        job.subtraces = 4;
+        job.workers = 2;
+        job.window = 500;
+        job.input_seed = 7;
+        job.engine.target_batch = 8;
+        job.priority = Priority::High;
+        job
+    }
+
+    #[test]
+    fn json_roundtrip_is_canonical() {
+        let job = full_request();
+        let wire = job.to_json();
+        assert!(!wire.contains('\n'), "wire form must be one line");
+        let back = JobRequest::from_json(&wire).unwrap();
+        assert_eq!(back.to_json(), wire);
+        assert_eq!(back.priority, Priority::High);
+        assert_eq!(back.config, job.config);
+        assert_eq!(back.predictor_key(), job.predictor_key());
+
+        // Minimal form: only source + predictor, everything else default.
+        let small = JobRequest::new(
+            JobSource::TraceFile(PathBuf::from("/tmp/t.smt")),
+            PredictorSpec::table(16),
+        );
+        let back = JobRequest::from_json(&small.to_json()).unwrap();
+        assert_eq!(back.to_json(), small.to_json());
+        assert_eq!(back.source, small.source);
+    }
+
+    #[test]
+    fn unknown_fields_are_named_with_accepted_list() {
+        let cases = [
+            ("{\"sauce\": 1}", "unknown field \"sauce\""),
+            ("{\"sauce\": 1}", "accepted: source, config, predictor"),
+            (
+                "{\"source\": {\"bench\": \"gcc\", \"m\": 1}, \
+                 \"predictor\": {\"kind\": \"table\"}}",
+                "accepted: bench, n, trace",
+            ),
+            (
+                "{\"source\": {\"bench\": \"gcc\", \"n\": 1}, \
+                 \"predictor\": {\"kind\": \"table\", \"model\": \"x\"}}",
+                "accepted: kind, seq",
+            ),
+            (
+                "{\"source\": {\"bench\": \"gcc\", \"n\": 1}, \
+                 \"predictor\": {\"kind\": \"table\"}, \"config\": {\"cache\": 1}}",
+                "accepted: base, bp, l2_kb, rob",
+            ),
+        ];
+        for (input, needle) in cases {
+            let err = JobRequest::from_json(input).unwrap_err().to_string();
+            assert!(err.contains(needle), "input {input}: err {err:?}");
+        }
+    }
+
+    #[test]
+    fn malformed_requests_are_named_errors() {
+        for (input, needle) in [
+            ("[]", "expected a JSON object"),
+            ("{\"predictor\": {\"kind\": \"table\"}}", "missing \"source\""),
+            ("{\"source\": {\"bench\": \"gcc\", \"n\": 1}}", "missing \"predictor\""),
+            (
+                "{\"source\": {}, \"predictor\": {\"kind\": \"table\"}}",
+                "exactly one of \"bench\" or \"trace\"",
+            ),
+            (
+                "{\"source\": {\"trace\": \"t\", \"n\": 5}, \"predictor\": {\"kind\": \"table\"}}",
+                "only applies to bench",
+            ),
+            (
+                "{\"source\": {\"bench\": \"gcc\", \"n\": 1}, \"predictor\": {\"kind\": \"x\"}}",
+                "unknown kind",
+            ),
+            (
+                "{\"source\": {\"bench\": \"gcc\", \"n\": 1}, \
+                 \"predictor\": {\"kind\": \"pjrt\"}}",
+                "missing \"model\"",
+            ),
+            (
+                "{\"source\": {\"bench\": \"gcc\", \"n\": 1}, \
+                 \"predictor\": {\"kind\": \"table\"}, \"subtraces\": 1.5}",
+                "non-negative integer",
+            ),
+            (
+                "{\"source\": {\"bench\": \"gcc\", \"n\": 1}, \
+                 \"predictor\": {\"kind\": \"table\"}, \"priority\": \"urgent\"}",
+                "unknown priority",
+            ),
+            (
+                "{\"source\": {\"bench\": \"gcc\", \"n\": 1}, \
+                 \"predictor\": {\"kind\": \"table\"}, \"config\": {\"bp\": \"gshare\"}}",
+                "unknown branch predictor",
+            ),
+        ] {
+            let err = JobRequest::from_json(input).unwrap_err().to_string();
+            assert!(err.contains(needle), "input {input}: err {err:?}");
+        }
+    }
+
+    #[test]
+    fn config_spec_matches_cli_construction() {
+        let spec = ConfigSpec {
+            base: "o3".into(),
+            bp: Some("tage".into()),
+            l2_kb: Some(512),
+            rob: Some(192),
+        };
+        let cfg = spec.build().unwrap();
+        assert_eq!(cfg.l2.size, 512 << 10);
+        assert_eq!(cfg.rob_entries, 192);
+        assert!(matches!(cfg.bp, BpChoice::TageLite));
+        assert!(ConfigSpec { base: "vax".into(), ..ConfigSpec::o3() }.build().is_err());
+    }
+
+    #[test]
+    fn mode_and_key_follow_knobs() {
+        let mut job = JobRequest::new(
+            JobSource::Bench { name: "xz".into(), n: 100 },
+            PredictorSpec::table(8),
+        );
+        assert_eq!(job.mode(), ExecMode::Sequential);
+        assert_eq!(job.predictor_key(), "table/seq=8");
+        assert_eq!(job.total_instructions(), Some(100));
+        job.subtraces = 4;
+        assert_eq!(job.mode(), ExecMode::Engine);
+        job.workers = 2;
+        assert_eq!(job.mode(), ExecMode::Pool);
+
+        // Same spec fields, same key — different seq, different key.
+        let a = JobRequest::new(
+            JobSource::Bench { name: "xz".into(), n: 1 },
+            PredictorSpec::native("artifacts", "fc2", 8),
+        );
+        let b = JobRequest::new(
+            JobSource::Bench { name: "gcc".into(), n: 2 },
+            PredictorSpec::native("artifacts", "fc2", 8),
+        );
+        assert_eq!(a.predictor_key(), b.predictor_key());
+        let c = JobRequest::new(
+            JobSource::Bench { name: "xz".into(), n: 1 },
+            PredictorSpec::native("artifacts", "fc2", 16),
+        );
+        assert_ne!(a.predictor_key(), c.predictor_key());
+    }
+
+    #[test]
+    fn validate_names_bad_benchmarks() {
+        let job = JobRequest::new(
+            JobSource::Bench { name: "not_a_bench".into(), n: 10 },
+            PredictorSpec::table(8),
+        );
+        let err = job.validate().unwrap_err().to_string();
+        assert!(err.contains("not_a_bench"), "err: {err}");
+        assert!(full_request().validate().is_ok());
+    }
+
+    #[test]
+    fn run_with_matches_direct_simulation() {
+        // Sequential and engine runs through a JobRequest must reproduce
+        // the direct builder byte-for-byte (cycles and windows).
+        for subtraces in [1usize, 4] {
+            let mut job = JobRequest::new(
+                JobSource::Bench { name: "xz".into(), n: 1_000 },
+                PredictorSpec::table(8),
+            );
+            job.subtraces = subtraces;
+            job.window = 250;
+            let mut p = job.predictor.build().unwrap();
+            let via_job = job.run_with(p.as_mut(), None).unwrap();
+
+            let direct = Simulation::new()
+                .bench("xz", 1_000)
+                .predictor(PredictorSpec::table(8))
+                .subtraces(subtraces)
+                .window(250)
+                .run()
+                .unwrap();
+            assert_eq!(via_job.mode, direct.mode);
+            assert_eq!(via_job.outcome.cycles, direct.outcome.cycles);
+            assert_eq!(via_job.outcome.windows, direct.outcome.windows);
+            assert_eq!(via_job.predictor, direct.predictor);
+        }
+    }
+}

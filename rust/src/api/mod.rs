@@ -52,10 +52,13 @@
 // carry documentation (CI compiles docs with RUSTDOCFLAGS=-D warnings).
 #![warn(missing_docs)]
 
+pub mod job;
 pub mod report;
 pub mod spec;
 
 use std::path::PathBuf;
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -63,7 +66,8 @@ pub use report::{ExecMode, SimReport};
 pub use spec::{export_name, Backend, PredictorSpec, WeightsSource};
 
 use crate::coordinator::{
-    simulate_pool_report, simulate_sequential, BatchEngine, EngineOptions, JobSpec, PoolOptions,
+    simulate_pool_report, simulate_sequential_progress, BatchEngine, EngineOptions, JobSpec,
+    PoolOptions,
 };
 use crate::des::SimConfig;
 use crate::predictor::LatencyPredictor;
@@ -121,6 +125,7 @@ pub struct Simulation<'a> {
     window: u64,
     cfg_feature: f32,
     seed: u64,
+    progress: Option<Arc<AtomicU64>>,
 }
 
 impl Default for Simulation<'_> {
@@ -144,6 +149,7 @@ impl<'a> Simulation<'a> {
             window: 0,
             cfg_feature: 0.0,
             seed: REFERENCE_SEED,
+            progress: None,
         }
     }
 
@@ -236,6 +242,15 @@ impl<'a> Simulation<'a> {
         self
     }
 
+    /// Shared counter bumped once per simulated instruction, on every
+    /// execution mode — the job server reads it to stream progress
+    /// events while [`run`](Self::run) is still executing. Results are
+    /// unaffected.
+    pub fn progress(mut self, counter: Arc<AtomicU64>) -> Self {
+        self.progress = Some(counter);
+        self
+    }
+
     /// Execute the session: resolve the input, build (or borrow) the
     /// predictor, pick the execution mode from the knobs, and return the
     /// unified report.
@@ -251,6 +266,7 @@ impl<'a> Simulation<'a> {
             window,
             cfg_feature,
             seed,
+            progress,
         } = self;
 
         // Default config is materialized here only when none was given.
@@ -309,16 +325,19 @@ impl<'a> Simulation<'a> {
         };
 
         let (outcome, stats) = match mode {
-            ExecMode::Sequential => (simulate_sequential(records, cfg, predictor, window)?, None),
+            ExecMode::Sequential => (
+                simulate_sequential_progress(records, cfg, predictor, window, progress.as_deref())?,
+                None,
+            ),
             ExecMode::Engine => {
                 let mut eng = BatchEngine::with_options(predictor, engine);
-                eng.submit(JobSpec { records, cfg, subtraces, window, cfg_feature });
+                eng.submit(JobSpec { records, cfg, subtraces, window, cfg_feature, progress });
                 let report = eng.run()?;
                 let stats = report.stats.clone();
                 (report.merged(), Some(stats))
             }
             ExecMode::Pool => {
-                let opts = PoolOptions { workers, subtraces, window, cfg_feature, engine };
+                let opts = PoolOptions { workers, subtraces, window, cfg_feature, engine, progress };
                 let (out, stats) = simulate_pool_report(records, cfg, predictor, &opts)?;
                 (out, Some(stats))
             }

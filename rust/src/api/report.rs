@@ -141,6 +141,16 @@ impl SimReport {
         fields
     }
 
+    /// Render the report as one single-line JSON object — same fields
+    /// and values as [`to_json`](Self::to_json), no newlines. The job
+    /// server's wire protocol is newline-delimited, so embedded reports
+    /// use this form.
+    pub fn to_json_compact(&self) -> String {
+        let fields = self.json_fields();
+        let body: Vec<String> = fields.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+        format!("{{{}}}", body.join(", "))
+    }
+
     /// Render the report as one pretty-printed JSON object.
     pub fn to_json(&self) -> String {
         let fields = self.json_fields();

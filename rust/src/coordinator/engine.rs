@@ -68,6 +68,7 @@
 //! fork (e.g. a single PJRT device handle) fall back to the shared-handle
 //! pipelined loop above.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -94,6 +95,12 @@ pub struct JobSpec<'a> {
     pub window: u64,
     /// Configuration input feature (§5 ROB study), 0.0 when unused.
     pub cfg_feature: f32,
+    /// Live progress counter, bumped once per simulated instruction
+    /// across all of the job's sub-traces (relaxed ordering — readers
+    /// only need an eventually-fresh count, not synchronization). The
+    /// job server hands one in per job to stream progress events;
+    /// `None` costs nothing on the hot path.
+    pub progress: Option<Arc<AtomicU64>>,
 }
 
 /// Execution knobs for [`BatchEngine`] (CLI: `--target-batch`,
@@ -109,7 +116,7 @@ pub struct JobSpec<'a> {
 /// assert_eq!(opts.pipeline_depth, 2); // double-buffered
 /// assert!(opts.fork_predict); // per-worker handles when the predictor forks
 /// ```
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EngineOptions {
     /// Target predictor-batch size (0 = all active sub-traces per batch).
     pub target_batch: usize,
@@ -235,6 +242,8 @@ struct SubTrace<'a> {
     window: u64,
     /// Owning job index (for outcome reassembly).
     job: usize,
+    /// The owning job's shared progress counter, if it has one.
+    progress: Option<Arc<AtomicU64>>,
 }
 
 /// Multi-job shared-batch simulation engine. Construct with a predictor
@@ -283,6 +292,7 @@ impl<'a, 'p> BatchEngine<'a, 'p> {
                     window_start: 0,
                     window: spec.window,
                     job,
+                    progress: spec.progress.clone(),
                 });
             }
         }
@@ -357,6 +367,9 @@ fn scatter_one(sub: &mut SubTrace<'_>, pred: (u32, u32, u32)) {
     let s_lat = if rec.inst.is_store() { s_lat.max(e + 1) } else { 0 };
     sub.tracker.push(&rec.inst, &rec.hist, f, e.max(1), s_lat);
     sub.pos += 1;
+    if let Some(p) = &sub.progress {
+        p.fetch_add(1, Ordering::Relaxed);
+    }
     sub.window_insts += 1;
     if sub.window > 0 && sub.window_insts == sub.window {
         let cyc = sub.tracker.cur_tick - sub.window_start;
@@ -967,7 +980,7 @@ mod tests {
     }
 
     fn job<'a>(records: &'a [TraceRecord], cfg: &'a SimConfig, subtraces: usize) -> JobSpec<'a> {
-        JobSpec { records, cfg, subtraces, window: 1_000, cfg_feature: 0.0 }
+        JobSpec { records, cfg, subtraces, window: 1_000, cfg_feature: 0.0, progress: None }
     }
 
     #[test]
@@ -1159,6 +1172,31 @@ mod tests {
         let r2 = serial.run().unwrap();
         assert_eq!(report.jobs[1].cycles, r2.jobs[1].cycles);
         assert_eq!(report.jobs[1].windows, r2.jobs[1].windows);
+    }
+
+    #[test]
+    fn progress_counter_tracks_instructions() {
+        // The job server's hand-off hook: a shared counter bumped once
+        // per simulated instruction, on the serial and threaded paths.
+        let cfg = SimConfig::default_o3();
+        let recs = make_records("xz", 1_500);
+        for threads in [1usize, 4] {
+            let progress = Arc::new(AtomicU64::new(0));
+            let mut p = TablePredictor::new(16);
+            let opts = EngineOptions { encode_threads: threads, ..EngineOptions::default() };
+            let mut engine = BatchEngine::with_options(&mut p, opts);
+            engine.submit(JobSpec {
+                records: &recs,
+                cfg: &cfg,
+                subtraces: 3,
+                window: 0,
+                cfg_feature: 0.0,
+                progress: Some(Arc::clone(&progress)),
+            });
+            let report = engine.run().unwrap();
+            assert_eq!(progress.load(Ordering::Relaxed), report.jobs[0].instructions);
+            assert_eq!(report.jobs[0].instructions, 1_500);
+        }
     }
 
     #[test]

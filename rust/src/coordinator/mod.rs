@@ -24,7 +24,7 @@ pub mod sequential;
 pub use engine::{BatchEngine, EngineOptions, EngineReport, EngineStats, JobSpec};
 pub use parallel::{simulate_parallel, simulate_parallel_cfg};
 pub use pool::{simulate_pool, simulate_pool_report, PoolOptions};
-pub use sequential::simulate_sequential;
+pub use sequential::{simulate_sequential, simulate_sequential_progress};
 
 /// Result of an ML-simulated run.
 #[derive(Debug, Clone, Default)]

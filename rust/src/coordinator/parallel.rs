@@ -47,7 +47,14 @@ pub fn simulate_parallel_cfg(
     cfg_feature: f32,
 ) -> Result<SimOutcome> {
     let mut engine = BatchEngine::new(predictor, 0);
-    engine.submit(JobSpec { records, cfg, subtraces: num_subtraces, window, cfg_feature });
+    engine.submit(JobSpec {
+        records,
+        cfg,
+        subtraces: num_subtraces,
+        window,
+        cfg_feature,
+        progress: None,
+    });
     let report = engine.run()?;
     Ok(report.merged())
 }

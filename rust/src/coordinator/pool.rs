@@ -51,6 +51,10 @@ pub struct PoolOptions {
     /// Shared-engine execution knobs (target batch, encode threads,
     /// pipeline depth).
     pub engine: EngineOptions,
+    /// Shared progress counter bumped once per simulated instruction
+    /// across every shard (see [`JobSpec::progress`]); `None` costs
+    /// nothing.
+    pub progress: Option<std::sync::Arc<std::sync::atomic::AtomicU64>>,
 }
 
 impl Default for PoolOptions {
@@ -61,6 +65,7 @@ impl Default for PoolOptions {
             window: 0,
             cfg_feature: 0.0,
             engine: EngineOptions::default(),
+            progress: None,
         }
     }
 }
@@ -113,6 +118,7 @@ pub fn simulate_pool_report(
             subtraces,
             window: opts.window,
             cfg_feature: opts.cfg_feature,
+            progress: opts.progress.clone(),
         });
     }
 
@@ -150,6 +156,7 @@ mod tests {
                 pipeline_depth: 1,
                 fork_predict: true,
             },
+            progress: None,
         }
     }
 

@@ -4,6 +4,7 @@
 //! (F, E, S) → push into the context queues → `curTick += F`. The final
 //! drain adds the paper's `Delta` from Eq. 1.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -23,6 +24,19 @@ pub fn simulate_sequential(
     predictor: &mut dyn LatencyPredictor,
     window: u64,
 ) -> Result<SimOutcome> {
+    simulate_sequential_progress(records, cfg, predictor, window, None)
+}
+
+/// [`simulate_sequential`] that additionally bumps `progress` once per
+/// simulated instruction (relaxed ordering) — the job server's streaming
+/// progress hook. Results are identical to the plain entry point.
+pub fn simulate_sequential_progress(
+    records: &[TraceRecord],
+    cfg: &SimConfig,
+    predictor: &mut dyn LatencyPredictor,
+    window: u64,
+    progress: Option<&AtomicU64>,
+) -> Result<SimOutcome> {
     let seq = predictor.seq_len();
     let mut tracker = ContextTracker::with_mode(cfg, predictor.context_mode());
     let mut buf = vec![0.0f32; seq * NUM_FEATURES];
@@ -39,6 +53,9 @@ pub fn simulate_sequential(
         let s = if rec.inst.is_store() { s.max(e + 1) } else { 0 };
         tracker.push(&rec.inst, &rec.hist, f, e.max(1), s);
         out.instructions += 1;
+        if let Some(p) = progress {
+            p.fetch_add(1, Ordering::Relaxed);
+        }
         window_insts += 1;
         if window > 0 && window_insts == window {
             out.windows.push((window_insts, tracker.cur_tick - window_start_tick));

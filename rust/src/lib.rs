@@ -26,6 +26,9 @@
 //! - [`api`]: the unified session API — [`api::Simulation`] builder,
 //!   [`api::PredictorSpec`], and the machine-readable [`api::SimReport`]
 //!   every CLI/report/bench caller drives runs through.
+//! - [`server`]: the resident job server — warm predictor registry,
+//!   priority admission queue, newline-delimited JSON protocol, and
+//!   cross-tenant co-batching through one shared engine.
 //! - [`stats`]: error metrics, CPI series, report generation.
 
 pub mod api;
@@ -37,6 +40,7 @@ pub mod isa;
 pub mod predictor;
 pub mod reports;
 pub mod runtime;
+pub mod server;
 pub mod stats;
 pub mod tensor;
 pub mod trace;

@@ -7,6 +7,10 @@
 //! gen-dataset    run the DES over the training benchmarks, build a .smd
 //! simulate-des   DES-only run (CPI + throughput)
 //! simulate-ml    ML simulation of a benchmark (sequential/parallel/pooled)
+//! serve          resident job server (warm predictors, co-batched tenants)
+//! submit         send a simulation job to a running server
+//! status         query a job (or the whole server) by id
+//! shutdown       drain and stop a running server
 //! report         table4 | fig5 | fig6 | fig10 | attribution
 //! sweep          subtrace-size | subtraces | workers | branch-predictor |
 //!                l2-size | rob-size
@@ -15,19 +19,26 @@
 //!
 //! Hand-rolled argument parsing (clap is not vendored in this image); every
 //! flag is `--key value`. Each subcommand rejects flags it does not accept,
-//! naming the ones it does. All ML-simulation runs are constructed through
+//! naming the ones it does — the accepted sets all live in one
+//! [`FLAG_TABLE`]. All ML-simulation runs are constructed through
 //! [`simnet::api::Simulation`]; `simulate-ml --json PATH` writes the run's
-//! [`simnet::api::SimReport`] as JSON.
+//! [`simnet::api::SimReport`] as JSON, and `submit` ships the same run
+//! description to a `serve` daemon as a [`simnet::api::job::JobRequest`].
 
 use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use simnet::api::job::{ConfigSpec, JobRequest, JobSource, Priority};
 use simnet::api::{Backend, PredictorSpec, SimReport, Simulation, WeightsSource};
 use simnet::coordinator::EngineOptions;
-use simnet::des::{simulate, BpChoice, SimConfig};
+use simnet::des::{simulate, SimConfig};
 use simnet::reports::{self, attribution, figs, sweeps, table4};
+use simnet::server::json::Value;
+use simnet::server::{protocol, JobServer, ServerOptions};
 use simnet::trace::{build_dataset, DatasetOptions, TraceRecord, TraceWriter};
 use simnet::workload::{find, suite, training_set};
 
@@ -36,6 +47,79 @@ const CONFIG_FLAGS: &[&str] = &["config", "bp", "l2-kb", "rob"];
 
 /// Flags that select a predictor ([`predictor_spec_from`]).
 const PREDICTOR_FLAGS: &[&str] = &["table", "seq", "model", "weights", "artifacts", "backend"];
+
+/// Run-shaping flags `simulate-ml` and `submit` share (source selection
+/// and the execution knobs of a [`Simulation`] / [`JobRequest`]).
+const RUN_FLAGS: &[&str] = &[
+    "bench",
+    "n",
+    "trace",
+    "input-seed",
+    "subtraces",
+    "workers",
+    "window",
+    "target-batch",
+    "encode-threads",
+    "pipeline-depth",
+    "no-fork-predict",
+];
+
+/// The accepted flag sets of every subcommand (report/sweep variants are
+/// keyed as `"report fig5"`-style compound names), resolved through
+/// [`check_flags_for`] — one table instead of an inline list at each
+/// call site.
+const FLAG_TABLE: &[(&str, &[&[&str]])] = &[
+    ("list-benches", &[]),
+    ("gen-trace", &[CONFIG_FLAGS, &["bench", "n", "out", "input-seed"]]),
+    (
+        "gen-dataset",
+        &[CONFIG_FLAGS, &["out", "benches", "n-per", "seq", "limit", "context", "rob-mix"]],
+    ),
+    ("simulate-des", &[CONFIG_FLAGS, &["bench", "n", "input-seed"]]),
+    ("simulate-ml", &[CONFIG_FLAGS, PREDICTOR_FLAGS, RUN_FLAGS, &["json"]]),
+    ("serve", &[&["addr", "queue-cap", "max-cobatch", "quiet"]]),
+    (
+        "submit",
+        &[CONFIG_FLAGS, PREDICTOR_FLAGS, RUN_FLAGS, &["addr", "priority", "follow", "json"]],
+    ),
+    ("status", &[&["addr", "id", "wait", "json"]]),
+    ("shutdown", &[&["addr"]]),
+    ("report table4", &[CONFIG_FLAGS, &["models", "n", "subtrace", "artifacts"]]),
+    (
+        "report fig5",
+        &[
+            CONFIG_FLAGS,
+            &["table", "seq", "models", "artifacts", "backend", "n", "benches", "subtrace"],
+        ],
+    ),
+    (
+        "report fig6",
+        &[
+            CONFIG_FLAGS,
+            &["table", "seq", "models", "artifacts", "backend", "n", "benches", "window"],
+        ],
+    ),
+    ("report fig10", &[CONFIG_FLAGS, &["models", "bench", "artifacts", "n", "subtrace"]]),
+    ("report attribution", &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["samples", "benches", "n"]]),
+    ("report dataset-size", &[CONFIG_FLAGS, &["artifacts", "n"]]),
+    ("sweep subtrace-size", &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "benches", "sizes"]]),
+    ("sweep l2-size", &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "benches", "sizes"]]),
+    ("sweep rob-size", &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "benches", "sizes"]]),
+    ("sweep subtraces", &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "counts", "bench"]]),
+    ("sweep workers", &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "counts", "subtraces", "bench"]]),
+    ("sweep branch-predictor", &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "benches"]]),
+];
+
+/// Look `cmd` up in [`FLAG_TABLE`] and reject any flag outside its
+/// accepted set, listing the accepted ones.
+fn check_flags_for(args: &Args, cmd: &str) -> Result<()> {
+    let allowed = FLAG_TABLE
+        .iter()
+        .find(|(c, _)| *c == cmd)
+        .map(|(_, a)| *a)
+        .unwrap_or_else(|| unreachable!("no FLAG_TABLE entry for {cmd}"));
+    args.check_flags(cmd, allowed)
+}
 
 /// Parsed `--key value` flags plus positional words.
 struct Args {
@@ -112,29 +196,31 @@ impl Args {
     }
 }
 
-/// Build a SimConfig from common flags: --config o3|a64fx, --bp
-/// bimode|bimode-l|tage, --l2-kb N, --rob N.
-fn config_from(args: &Args) -> Result<SimConfig> {
-    let mut cfg = match args.get("config").unwrap_or("o3") {
-        "o3" => SimConfig::default_o3(),
-        "a64fx" => SimConfig::a64fx(),
-        other => bail!("unknown --config {other} (o3|a64fx)"),
+/// Capture the machine-config flags (--config o3|a64fx, --bp
+/// bimode|bimode-l|tage, --l2-kb N, --rob N) as a [`ConfigSpec`] — the
+/// serializable form a [`JobRequest`] carries over the wire. Validated
+/// eagerly so a bad name fails here, with the flag context, not on the
+/// server.
+fn config_spec_from(args: &Args) -> Result<ConfigSpec> {
+    let spec = ConfigSpec {
+        base: args.get("config").unwrap_or("o3").to_string(),
+        bp: args.get("bp").map(str::to_string),
+        l2_kb: match args.get("l2-kb") {
+            None => None,
+            Some(kb) => Some(kb.parse::<u64>().context("--l2-kb")?),
+        },
+        rob: match args.get("rob") {
+            None => None,
+            Some(rob) => Some(rob.parse::<usize>().context("--rob")?),
+        },
     };
-    if let Some(bp) = args.get("bp") {
-        cfg.bp = match bp {
-            "bimode" => BpChoice::BiMode,
-            "bimode-l" => BpChoice::BiModeLarge,
-            "tage" => BpChoice::TageLite,
-            other => bail!("unknown --bp {other}"),
-        };
-    }
-    if let Some(kb) = args.get("l2-kb") {
-        cfg.l2.size = kb.parse::<u64>().context("--l2-kb")? << 10;
-    }
-    if let Some(rob) = args.get("rob") {
-        cfg.rob_entries = rob.parse().context("--rob")?;
-    }
-    Ok(cfg)
+    spec.build()?;
+    Ok(spec)
+}
+
+/// Build a SimConfig from the common machine-config flags.
+fn config_from(args: &Args) -> Result<SimConfig> {
+    config_spec_from(args)?.build()
 }
 
 fn artifacts_dir(args: &Args) -> PathBuf {
@@ -223,6 +309,10 @@ fn main() -> Result<()> {
         "gen-dataset" => cmd_gen_dataset(&args),
         "simulate-des" => cmd_simulate_des(&args),
         "simulate-ml" => cmd_simulate_ml(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
+        "status" => cmd_status(&args),
+        "shutdown" => cmd_shutdown(&args),
         "report" => cmd_report(&args),
         "sweep" => cmd_sweep(&args),
         "list-benches" => cmd_list_benches(&args),
@@ -247,6 +337,11 @@ fn print_usage() {
          \x20              [--target-batch B] [--encode-threads T] [--pipeline-depth D]\n\
          \x20              [--no-fork-predict]\n\
          \x20              [--trace file.smt] [--artifacts DIR] [--window W] [--json out.json]\n\
+         \x20 serve        [--addr 127.0.0.1:7878] [--queue-cap N] [--max-cobatch N] [--quiet]\n\
+         \x20 submit       --bench NAME --n N [simulate-ml flags] [--addr A] [--priority normal|high]\n\
+         \x20              [--follow] [--json out.json]\n\
+         \x20 status       [--addr A] [--id N [--wait] [--json out.json]]\n\
+         \x20 shutdown     [--addr A]\n\
          \x20 report       table4|fig5|fig6|fig10|attribution [--models a,b] [--n N] [--benches ...]\n\
          \x20 sweep        subtrace-size|subtraces|workers|branch-predictor|l2-size|rob-size [...]\n\
          \x20 list-benches\n\n\
@@ -255,7 +350,7 @@ fn print_usage() {
 }
 
 fn cmd_list_benches(args: &Args) -> Result<()> {
-    args.check_flags("list-benches", &[])?;
+    check_flags_for(args, "list-benches")?;
     let mut t = simnet::stats::Table::new(&["benchmark", "category", "set"]);
     for b in suite() {
         t.row(vec![
@@ -269,7 +364,7 @@ fn cmd_list_benches(args: &Args) -> Result<()> {
 }
 
 fn cmd_gen_trace(args: &Args) -> Result<()> {
-    args.check_flags("gen-trace", &[CONFIG_FLAGS, &["bench", "n", "out", "input-seed"]])?;
+    check_flags_for(args, "gen-trace")?;
     let bench = args.get("bench").ok_or_else(|| anyhow!("--bench required"))?;
     let n: u64 = args.num("n", 100_000)?;
     let out = args.get("out").ok_or_else(|| anyhow!("--out required"))?;
@@ -291,10 +386,7 @@ fn cmd_gen_trace(args: &Args) -> Result<()> {
 }
 
 fn cmd_gen_dataset(args: &Args) -> Result<()> {
-    args.check_flags(
-        "gen-dataset",
-        &[CONFIG_FLAGS, &["out", "benches", "n-per", "seq", "limit", "context", "rob-mix"]],
-    )?;
+    check_flags_for(args, "gen-dataset")?;
     let out = args.get("out").ok_or_else(|| anyhow!("--out required"))?;
     let benches = args
         .list("benches")
@@ -359,7 +451,7 @@ fn cmd_gen_dataset(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate_des(args: &Args) -> Result<()> {
-    args.check_flags("simulate-des", &[CONFIG_FLAGS, &["bench", "n", "input-seed"]])?;
+    check_flags_for(args, "simulate-des")?;
     let bench = args.get("bench").ok_or_else(|| anyhow!("--bench required"))?;
     let n: u64 = args.num("n", 100_000)?;
     let cfg = config_from(args)?;
@@ -413,41 +505,27 @@ fn print_report(report: &SimReport) {
     }
 }
 
-fn cmd_simulate_ml(args: &Args) -> Result<()> {
-    args.check_flags(
-        "simulate-ml",
-        &[
-            CONFIG_FLAGS,
-            PREDICTOR_FLAGS,
-            &[
-                "bench",
-                "n",
-                "trace",
-                "input-seed",
-                "subtraces",
-                "workers",
-                "window",
-                "target-batch",
-                "encode-threads",
-                "pipeline-depth",
-                "no-fork-predict",
-                "json",
-            ],
-        ],
-    )?;
-    let cfg = config_from(args)?;
-    let n: u64 = args.num("n", 100_000)?;
-    let window: u64 = args.num("window", 0)?;
-    let workers: usize = args.num("workers", 1)?;
-    let subtraces: usize = args.num("subtraces", 1)?;
-    let engine = EngineOptions {
+/// Engine knobs shared by `simulate-ml` and `submit` (`--target-batch`,
+/// `--encode-threads`, `--pipeline-depth`, `--no-fork-predict`).
+fn engine_options_from(args: &Args) -> Result<EngineOptions> {
+    Ok(EngineOptions {
         target_batch: args.num("target-batch", 0)?,
         encode_threads: args.num("encode-threads", 1)?,
         pipeline_depth: args.num("pipeline-depth", 2)?,
         // Presence flag: forked per-worker predictor handles are the
         // default; --no-fork-predict forces the shared-handle pipeline.
         fork_predict: args.get("no-fork-predict").is_none(),
-    };
+    })
+}
+
+fn cmd_simulate_ml(args: &Args) -> Result<()> {
+    check_flags_for(args, "simulate-ml")?;
+    let cfg = config_from(args)?;
+    let n: u64 = args.num("n", 100_000)?;
+    let window: u64 = args.num("window", 0)?;
+    let workers: usize = args.num("workers", 1)?;
+    let subtraces: usize = args.num("subtraces", 1)?;
+    let engine = engine_options_from(args)?;
     if engine.encode_threads > 1 && workers <= 1 && subtraces <= 1 {
         eprintln!(
             "note: --encode-threads/--pipeline-depth only apply to the batch engine; \
@@ -487,37 +565,229 @@ fn cmd_simulate_ml(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Default address shared by `serve` and its client subcommands.
+const DEFAULT_ADDR: &str = "127.0.0.1:7878";
+
+fn server_addr(args: &Args) -> String {
+    args.get("addr").unwrap_or(DEFAULT_ADDR).to_string()
+}
+
+/// Bail with the server's named error (and stable code) unless the
+/// response says ok.
+fn expect_ok(v: &Value, what: &str) -> Result<()> {
+    if v.get("ok").and_then(Value::as_bool) == Some(true) {
+        return Ok(());
+    }
+    let code = v.get("code").and_then(Value::as_str).unwrap_or("error");
+    let msg = v.get("error").and_then(Value::as_str).unwrap_or("malformed server response");
+    bail!("{what}: {msg} [{code}]")
+}
+
+/// Build the [`JobRequest`] a `submit` ships: the same source, config,
+/// predictor and engine flags `simulate-ml` takes, plus `--priority`.
+fn job_request_from(args: &Args) -> Result<JobRequest> {
+    let source = if let Some(path) = args.get("trace") {
+        // Same conflict rule as simulate-ml: the trace file fixes the
+        // workload, so flags it would shadow are rejected. The path is
+        // read by the *server*, so it must be reachable from there.
+        for f in ["bench", "n", "input-seed"] {
+            if args.get(f).is_some() {
+                bail!("--trace conflicts with --{f} (the trace file fixes the workload)");
+            }
+        }
+        JobSource::TraceFile(PathBuf::from(path))
+    } else {
+        let bench = args.get("bench").ok_or_else(|| anyhow!("--bench or --trace required"))?;
+        JobSource::Bench { name: bench.to_string(), n: args.num("n", 100_000)? }
+    };
+    let mut job = JobRequest::new(source, predictor_spec_from(args, "c3")?);
+    job.config = config_spec_from(args)?;
+    job.subtraces = args.num("subtraces", 1)?;
+    job.workers = args.num("workers", 1)?;
+    job.window = args.num("window", 0)?;
+    job.input_seed = args.num("input-seed", reports::REFERENCE_SEED)?;
+    job.engine = engine_options_from(args)?;
+    job.priority = Priority::parse(args.get("priority").unwrap_or("normal"))?;
+    Ok(job)
+}
+
+/// Print a completed remote job's report summary and optionally write
+/// the embedded [`SimReport`] JSON to a file.
+fn finish_remote_report(id: u64, report: &Value, json_out: Option<&str>) -> Result<()> {
+    let insns = report.get("instructions").and_then(Value::as_u64).unwrap_or(0);
+    let cycles = report.get("cycles").and_then(Value::as_u64).unwrap_or(0);
+    let cpi = report.get("cpi").and_then(Value::as_f64).unwrap_or(f64::NAN);
+    println!("job {id} done: {insns} instructions, {cycles} cycles, cpi={cpi:.4}");
+    if let Some(path) = json_out {
+        std::fs::write(path, format!("{}\n", report.render()))
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    check_flags_for(args, "serve")?;
+    let opts = ServerOptions {
+        queue_capacity: args.num("queue-cap", 64usize)?,
+        max_cobatch: args.num("max-cobatch", 4usize)?,
+        quiet: args.get("quiet").is_some(),
+    };
+    let server = JobServer::bind(&server_addr(args), opts)?;
+    println!("repro job server listening on {}", server.local_addr());
+    server.run()
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    check_flags_for(args, "submit")?;
+    let addr = server_addr(args);
+    let job = job_request_from(args)?;
+    job.validate()?;
+    if args.get("follow").is_some() {
+        return submit_follow(&addr, &job, args.get("json"));
+    }
+    if args.get("json").is_some() {
+        bail!("--json needs --follow here (or fetch it later with `repro status --id N --json`)");
+    }
+    let v = protocol::roundtrip(&addr, &protocol::submit_request(&job, false))?;
+    expect_ok(&v, "submit")?;
+    let id = v
+        .get("id")
+        .and_then(Value::as_u64)
+        .ok_or_else(|| anyhow!("malformed submit response from {addr}"))?;
+    println!("job {id} admitted at {addr} (poll with `repro status --addr {addr} --id {id}`)");
+    Ok(())
+}
+
+/// Streaming submit: keep the connection open and relay the server's
+/// event lines until the job completes.
+fn submit_follow(addr: &str, job: &JobRequest, json_out: Option<&str>) -> Result<()> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to job server {addr}"))?;
+    stream.write_all(protocol::submit_request(job, true).as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        bail!("job server {addr} closed the connection without responding");
+    }
+    let v = Value::parse(line.trim_end())?;
+    expect_ok(&v, "submit")?;
+    let id = v
+        .get("id")
+        .and_then(Value::as_u64)
+        .ok_or_else(|| anyhow!("malformed submit response from {addr}"))?;
+    println!("job {id} admitted at {addr}");
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("job server {addr} closed the event stream before job {id} finished");
+        }
+        let ev = Value::parse(line.trim_end())?;
+        match ev.get("event").and_then(Value::as_str) {
+            Some("state") => {
+                println!("job {id}: {}", ev.get("state").and_then(Value::as_str).unwrap_or("?"));
+            }
+            Some("progress") => {
+                let done = ev.get("instructions").and_then(Value::as_u64).unwrap_or(0);
+                match ev.get("total").and_then(Value::as_u64) {
+                    Some(total) => println!("job {id}: {done}/{total} instructions"),
+                    None => println!("job {id}: {done} instructions"),
+                }
+            }
+            Some("done") => {
+                let report =
+                    ev.get("report").ok_or_else(|| anyhow!("done event without a report"))?;
+                return finish_remote_report(id, report, json_out);
+            }
+            Some("failed") => bail!(
+                "job {id} failed: {}",
+                ev.get("error").and_then(Value::as_str).unwrap_or("unknown error")
+            ),
+            _ => bail!("job server {addr} sent an unknown event line: {}", line.trim_end()),
+        }
+    }
+}
+
+fn cmd_status(args: &Args) -> Result<()> {
+    check_flags_for(args, "status")?;
+    let addr = server_addr(args);
+    if args.get("id").is_none() {
+        // No --id: server-wide stats.
+        for f in ["wait", "json"] {
+            if args.get(f).is_some() {
+                bail!("--{f} needs --id");
+            }
+        }
+        let v = protocol::roundtrip(&addr, &protocol::stats_request())?;
+        expect_ok(&v, "stats")?;
+        let jobs = v.get("jobs");
+        let count = |k: &str| {
+            jobs.and_then(|j| j.get(k)).and_then(Value::as_u64).unwrap_or(0).to_string()
+        };
+        println!(
+            "jobs: queued={} running={} done={} failed={}",
+            count("queued"),
+            count("running"),
+            count("done"),
+            count("failed")
+        );
+        for p in v.get("predictors").and_then(Value::as_arr).unwrap_or(&[]) {
+            println!(
+                "warm predictor {}: jobs={} served={}",
+                p.get("key").and_then(Value::as_str).unwrap_or("?"),
+                p.get("jobs").and_then(Value::as_u64).unwrap_or(0),
+                p.get("served").and_then(Value::as_u64).unwrap_or(0)
+            );
+        }
+        return Ok(());
+    }
+    let id: u64 = args.num("id", 0)?;
+    let wait = args.get("wait").is_some();
+    loop {
+        let v = protocol::roundtrip(&addr, &protocol::status_request(id))?;
+        expect_ok(&v, "status")?;
+        let state = v.get("state").and_then(Value::as_str).unwrap_or("?");
+        match state {
+            "done" => {
+                let report =
+                    v.get("report").ok_or_else(|| anyhow!("done status without a report"))?;
+                return finish_remote_report(id, report, args.get("json"));
+            }
+            "failed" => bail!(
+                "job {id} failed: {}",
+                v.get("error").and_then(Value::as_str).unwrap_or("unknown error")
+            ),
+            _ => {
+                if !wait {
+                    let done = v.get("instructions").and_then(Value::as_u64).unwrap_or(0);
+                    match v.get("total").and_then(Value::as_u64) {
+                        Some(total) => println!("job {id}: {state} ({done}/{total} instructions)"),
+                        None => println!("job {id}: {state} ({done} instructions)"),
+                    }
+                    return Ok(());
+                }
+                std::thread::sleep(std::time::Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+fn cmd_shutdown(args: &Args) -> Result<()> {
+    check_flags_for(args, "shutdown")?;
+    let addr = server_addr(args);
+    let v = protocol::roundtrip(&addr, &protocol::shutdown_request())?;
+    expect_ok(&v, "shutdown")?;
+    println!("job server at {addr} is shutting down");
+    Ok(())
+}
+
 fn cmd_report(args: &Args) -> Result<()> {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("table4");
     match which {
-        "table4" => args.check_flags(
-            "report table4",
-            &[CONFIG_FLAGS, &["models", "n", "subtrace", "artifacts"]],
-        )?,
-        "fig5" => args.check_flags(
-            "report fig5",
-            &[
-                CONFIG_FLAGS,
-                &["table", "seq", "models", "artifacts", "backend", "n", "benches", "subtrace"],
-            ],
-        )?,
-        "fig6" => args.check_flags(
-            "report fig6",
-            &[
-                CONFIG_FLAGS,
-                &["table", "seq", "models", "artifacts", "backend", "n", "benches", "window"],
-            ],
-        )?,
-        "fig10" => args.check_flags(
-            "report fig10",
-            &[CONFIG_FLAGS, &["models", "bench", "artifacts", "n", "subtrace"]],
-        )?,
-        "attribution" => args.check_flags(
-            "report attribution",
-            &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["samples", "benches", "n"]],
-        )?,
-        "dataset-size" => {
-            args.check_flags("report dataset-size", &[CONFIG_FLAGS, &["artifacts", "n"]])?
+        "table4" | "fig5" | "fig6" | "fig10" | "attribution" | "dataset-size" => {
+            check_flags_for(args, &format!("report {which}"))?
         }
         other => {
             bail!("unknown report {other} (table4|fig5|fig6|fig10|attribution|dataset-size)")
@@ -622,27 +892,14 @@ fn report_specs(args: &Args, artifacts: &Path) -> Result<Vec<PredictorSpec>> {
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("");
-    match which {
-        "subtrace-size" | "l2-size" | "rob-size" => args.check_flags(
-            &format!("sweep {which}"),
-            &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "benches", "sizes"]],
-        )?,
-        "subtraces" => args.check_flags(
-            "sweep subtraces",
-            &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "counts", "bench"]],
-        )?,
-        "workers" => args.check_flags(
-            "sweep workers",
-            &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "counts", "subtraces", "bench"]],
-        )?,
-        "branch-predictor" => args.check_flags(
-            "sweep branch-predictor",
-            &[CONFIG_FLAGS, PREDICTOR_FLAGS, &["n", "benches"]],
-        )?,
-        other => bail!(
-            "unknown sweep {other} (subtrace-size|subtraces|workers|branch-predictor|l2-size|rob-size)"
-        ),
+    const SWEEPS: &[&str] =
+        &["subtrace-size", "l2-size", "rob-size", "subtraces", "workers", "branch-predictor"];
+    if !SWEEPS.contains(&which) {
+        bail!(
+            "unknown sweep {which} (subtrace-size|subtraces|workers|branch-predictor|l2-size|rob-size)"
+        );
     }
+    check_flags_for(args, &format!("sweep {which}"))?;
     let cfg = config_from(args)?;
     let n: u64 = args.num("n", 48_000)?;
     let benches = args.list("benches");

@@ -1,0 +1,501 @@
+//! Minimal strict JSON for the job-server wire protocol (serde is not
+//! vendored in this image, so the protocol layer parses by hand).
+//!
+//! [`Value::parse`] accepts exactly the JSON grammar — named errors with
+//! byte offsets, a recursion-depth cap, no trailing garbage — and
+//! [`Value::render`] emits a canonical single-line form (object keys in
+//! their original order, integers rendered without a fraction). Parsing
+//! and re-rendering a report therefore yields a stable canonical string,
+//! which is what the daemon-vs-direct equivalence tests compare after
+//! zeroing the timing fields.
+
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Objects stay ordered (insertion order), so a parse → render round
+/// trip of protocol messages is deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// JSON `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number (always carried as `f64`).
+    Num(f64),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<Value>),
+    /// An object, in key insertion order (duplicate keys rejected).
+    Obj(Vec<(String, Value)>),
+}
+
+/// Parser recursion cap — far above any protocol message, low enough
+/// that a hostile deeply-nested line cannot blow the daemon's stack.
+const MAX_DEPTH: usize = 64;
+
+impl Value {
+    /// Parse one complete JSON document; trailing non-whitespace is an
+    /// error, as is any grammar violation (named, with a byte offset).
+    pub fn parse(input: &str) -> Result<Value> {
+        let mut p = Parser { b: input.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            bail!("json: trailing characters at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    /// Member lookup on an object (`None` for other variants or a
+    /// missing key).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Mutable member lookup on an object.
+    pub fn get_mut(&mut self, key: &str) -> Option<&mut Value> {
+        match self {
+            Value::Obj(pairs) => pairs.iter_mut().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Replace (or append) a member on an object; no-op on other
+    /// variants.
+    pub fn set(&mut self, key: &str, val: Value) {
+        if let Value::Obj(pairs) = self {
+            for (k, v) in pairs.iter_mut() {
+                if k == key {
+                    *v = val;
+                    return;
+                }
+            }
+            pairs.push((key.to_string(), val));
+        }
+    }
+
+    /// String payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric payload, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integer payload: a number with no fractional part
+    /// inside the f64-exact range (`<= 2^53`).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= 9_007_199_254_740_992.0 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Boolean payload, if this is a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Member slice, if this is an object.
+    pub fn as_obj(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Obj(pairs) => Some(pairs),
+            _ => None,
+        }
+    }
+
+    /// Element slice, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Whether this is JSON `null`.
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    /// Canonical single-line rendering (see module docs).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(true) => out.push_str("true"),
+            Value::Bool(false) => out.push_str("false"),
+            Value::Num(x) => out.push_str(&render_num(*x)),
+            Value::Str(s) => out.push_str(&quote(s)),
+            Value::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    out.push_str(&quote(k));
+                    out.push_str(": ");
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Canonical number form: integers (within f64-exact range) render with
+/// no fraction, so `1.500000` and `1.5` both survive a round trip as a
+/// single stable spelling.
+fn render_num(x: f64) -> String {
+    if !x.is_finite() {
+        return "null".into();
+    }
+    if x.fract() == 0.0 && x.abs() <= 9_007_199_254_740_992.0 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Strict-schema helper: reject object members outside `accepted`,
+/// naming the offending field and the accepted list (the protocol's
+/// "misspelled knob is a named error" rule).
+pub fn check_keys(obj: &[(String, Value)], ctx: &str, accepted: &[&str]) -> Result<()> {
+    for (k, _) in obj {
+        if !accepted.contains(&k.as_str()) {
+            bail!("{ctx}: unknown field \"{k}\"; accepted: {}", accepted.join(", "));
+        }
+    }
+    Ok(())
+}
+
+/// Render a string as a JSON string literal.
+pub fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, msg: &str) -> anyhow::Error {
+        anyhow!("json: {msg} at byte {}", self.i)
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(&c) = self.b.get(self.i) {
+            if matches!(c, b' ' | b'\t' | b'\n' | b'\r') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, lit: &str) -> Result<()> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{lit}`")))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Value> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        match self.peek() {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'n') => self.eat("null").map(|_| Value::Null),
+            Some(b't') => self.eat("true").map(|_| Value::Bool(true)),
+            Some(b'f') => self.eat("false").map(|_| Value::Bool(false)),
+            Some(b'"') => self.string().map(Value::Str),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(self.err(&format!("unexpected character `{}`", c as char))),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Value> {
+        self.i += 1; // consume '['
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Value::Arr(items));
+                }
+                _ => return Err(self.err("expected `,` or `]` in array")),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Value> {
+        self.i += 1; // consume '{'
+        let mut pairs: Vec<(String, Value)> = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Value::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            if self.peek() != Some(b'"') {
+                return Err(self.err("expected string key in object"));
+            }
+            let key = self.string()?;
+            if pairs.iter().any(|(k, _)| *k == key) {
+                return Err(self.err(&format!("duplicate key \"{key}\"")));
+            }
+            self.skip_ws();
+            if self.peek() != Some(b':') {
+                return Err(self.err("expected `:` after object key"));
+            }
+            self.i += 1;
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Value::Obj(pairs));
+                }
+                _ => return Err(self.err("expected `,` or `}` in object")),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).expect("ascii number bytes");
+        let x: f64 = text.parse().map_err(|_| self.err(&format!("bad number `{text}`")))?;
+        if !x.is_finite() {
+            return Err(self.err(&format!("non-finite number `{text}`")));
+        }
+        Ok(Value::Num(x))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.i += 1; // consume opening quote
+        let mut out = String::new();
+        loop {
+            let c = self.peek().ok_or_else(|| self.err("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek().ok_or_else(|| self.err("unterminated escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // Surrogate pair: require the low half.
+                                self.eat("\\u").map_err(|_| self.err("lone high surrogate"))?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(self.err("invalid low surrogate"));
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                return Err(self.err("lone low surrogate"));
+                            } else {
+                                hi
+                            };
+                            out.push(
+                                char::from_u32(cp)
+                                    .ok_or_else(|| self.err("invalid unicode escape"))?,
+                            );
+                        }
+                        _ => return Err(self.err("invalid escape")),
+                    }
+                }
+                c if c < 0x20 => return Err(self.err("raw control character in string")),
+                c if c < 0x80 => out.push(c as char),
+                _ => {
+                    // Multi-byte UTF-8: the input was a valid &str, so
+                    // re-decode the sequence starting one byte back.
+                    let start = self.i - 1;
+                    let s = std::str::from_utf8(&self.b[start..])
+                        .map_err(|_| self.err("invalid utf-8 in string"))?;
+                    let ch = s.chars().next().expect("non-empty remainder");
+                    self.i = start + ch.len_utf8();
+                    out.push(ch);
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            return Err(self.err("truncated \\u escape"));
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| self.err("bad \\u escape"))?;
+        self.i += 4;
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_containers() {
+        assert_eq!(Value::parse("null").unwrap(), Value::Null);
+        assert_eq!(Value::parse(" true ").unwrap(), Value::Bool(true));
+        assert_eq!(Value::parse("-2.5e1").unwrap(), Value::Num(-25.0));
+        assert_eq!(Value::parse("\"a\\nb\"").unwrap(), Value::Str("a\nb".into()));
+        let v = Value::parse("{\"a\": [1, 2, {\"b\": null}], \"c\": false}").unwrap();
+        assert_eq!(v.get("c"), Some(&Value::Bool(false)));
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn rejects_malformed_input_with_named_errors() {
+        for (input, needle) in [
+            ("{not json", "string key"),
+            ("", "end of input"),
+            ("[1, 2", "expected `,` or `]`"),
+            ("{\"a\": 1,}", "string key"),
+            ("{\"a\": 1} trailing", "trailing"),
+            ("\"unterminated", "unterminated"),
+            ("{\"a\": 1, \"a\": 2}", "duplicate key"),
+            ("nulL", "expected `null`"),
+            ("1e999", "non-finite"),
+        ] {
+            let err = Value::parse(input).unwrap_err().to_string();
+            assert!(err.contains(needle), "input {input:?}: err {err:?}");
+        }
+    }
+
+    #[test]
+    fn depth_cap_rejects_hostile_nesting() {
+        let deep = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+        let err = Value::parse(&deep).unwrap_err().to_string();
+        assert!(err.contains("nesting too deep"), "err: {err}");
+    }
+
+    #[test]
+    fn render_is_canonical_and_roundtrips() {
+        let v = Value::parse("{\"b\":1.500000,\"a\":[1.0, 2],\"s\":\"x\\ty\"}").unwrap();
+        let rendered = v.render();
+        assert_eq!(rendered, "{\"b\": 1.5, \"a\": [1, 2], \"s\": \"x\\ty\"}");
+        // A second round trip is a fixed point.
+        assert_eq!(Value::parse(&rendered).unwrap().render(), rendered);
+    }
+
+    #[test]
+    fn unicode_escapes_and_raw_utf8() {
+        assert_eq!(Value::parse("\"\\u00e9\"").unwrap(), Value::Str("é".into()));
+        assert_eq!(Value::parse("\"\\ud83d\\ude00\"").unwrap(), Value::Str("😀".into()));
+        assert_eq!(Value::parse("\"héllo\"").unwrap(), Value::Str("héllo".into()));
+        assert!(Value::parse("\"\\ud83d\"").is_err());
+    }
+
+    #[test]
+    fn u64_accessor_is_strict() {
+        assert_eq!(Value::parse("42").unwrap().as_u64(), Some(42));
+        assert_eq!(Value::parse("42.5").unwrap().as_u64(), None);
+        assert_eq!(Value::parse("-1").unwrap().as_u64(), None);
+    }
+}

@@ -1,0 +1,624 @@
+//! Simulation-as-a-service: the resident multi-tenant job server.
+//!
+//! Spawning a process per simulation re-pays predictor construction
+//! (artifact resolution, weight loads, buffer allocation) on every run —
+//! exactly the cost a DL-based simulator wants amortized, since the
+//! paper's throughput case (§3.3) rests on keeping one warm model fed
+//! with large batches. `repro serve` instead keeps a daemon resident:
+//!
+//! - **Warm predictors** ([`registry`]): one live predictor per distinct
+//!   [`crate::api::job::JobRequest::predictor_key`], built on first use
+//!   and reused by every later job from any client.
+//! - **Bounded two-class admission** ([`queue`]): at most
+//!   `queue_capacity` queued jobs, high priority before normal, each
+//!   job queryable by id through its whole `queued → running →
+//!   done | failed` lifecycle.
+//! - **Cross-tenant co-batching**: concurrently queued engine-mode jobs
+//!   that share a predictor key and engine options execute as ONE
+//!   [`crate::coordinator::BatchEngine`] group, multiplexing every
+//!   tenant's sub-traces into common accelerator batches. The engine's
+//!   deterministic schedule guarantees batch composition cannot change
+//!   per-job results, so co-batching is invisible except in throughput.
+//! - **Newline-delimited JSON protocol** ([`protocol`]): submit /
+//!   status / stats / ping / shutdown, plus streamed progress events.
+//!   Malformed input of any kind is a named error line — never a daemon
+//!   panic, never a dropped sibling connection.
+//!
+//! A daemon-run job's final report is byte-identical to the same job run
+//! in-process via [`crate::api::Simulation`] (up to wall-clock timing
+//! fields; pinned by `tests/server_e2e.rs`).
+
+pub mod json;
+pub mod protocol;
+pub mod queue;
+pub mod registry;
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::api::job::JobRequest;
+use crate::api::{ExecMode, SimReport};
+use crate::coordinator::{BatchEngine, JobSpec};
+use crate::des::SimConfig;
+use crate::predictor::LatencyPredictor;
+use crate::trace::TraceRecord;
+
+use self::json::quote;
+use self::protocol::{err_line, read_request_line, LineRead, Request};
+use self::queue::{AdmitError, JobSnapshot, JobState, JobTable};
+use self::registry::PredictorRegistry;
+
+/// Daemon configuration (`repro serve` flags).
+#[derive(Debug, Clone, Copy)]
+pub struct ServerOptions {
+    /// Maximum queued (not yet running) jobs before submits are
+    /// rejected with `queue_full`.
+    pub queue_capacity: usize,
+    /// Maximum jobs co-batched into one engine group.
+    pub max_cobatch: usize,
+    /// Suppress per-event stderr logging.
+    pub quiet: bool,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions { queue_capacity: 64, max_cobatch: 4, quiet: false }
+    }
+}
+
+/// Shared state each connection thread works against.
+struct Shared {
+    table: JobTable,
+    registry: PredictorRegistry,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+    quiet: bool,
+}
+
+impl Shared {
+    fn log(&self, msg: &str) {
+        if !self.quiet {
+            eprintln!("[serve] {msg}");
+        }
+    }
+}
+
+/// The resident job server. [`bind`](Self::bind) it, then [`run`](Self::run)
+/// it on the current thread until a shutdown request drains it.
+pub struct JobServer {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    max_cobatch: usize,
+}
+
+impl JobServer {
+    /// Bind the listener and set up the (still empty) job table and
+    /// predictor registry.
+    pub fn bind(addr: &str, opts: ServerOptions) -> Result<JobServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding job server to {addr}"))?;
+        let local = listener.local_addr().context("resolving bound address")?;
+        Ok(JobServer {
+            listener,
+            shared: Arc::new(Shared {
+                table: JobTable::new(opts.queue_capacity),
+                registry: PredictorRegistry::new(),
+                shutdown: AtomicBool::new(false),
+                addr: local,
+                quiet: opts.quiet,
+            }),
+            max_cobatch: opts.max_cobatch.max(1),
+        })
+    }
+
+    /// The actually-bound address (resolves `:0` ephemeral ports — the
+    /// tests bind those).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Serve until a shutdown request: accepts connections (one thread
+    /// each), runs the scheduler loop, and on shutdown drains the
+    /// in-flight group before returning.
+    pub fn run(self) -> Result<()> {
+        let JobServer { listener, shared, max_cobatch } = self;
+        shared.log(&format!("listening on {}", shared.addr));
+        let scheduler = {
+            let shared = shared.clone();
+            std::thread::spawn(move || scheduler_loop(&shared, max_cobatch))
+        };
+        for conn in listener.incoming() {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let shared = shared.clone();
+            // Connection errors (disconnects, write failures) end that
+            // connection's thread only; the daemon and every other
+            // tenant are unaffected.
+            std::thread::spawn(move || {
+                let _ = serve_connection(stream, &shared);
+            });
+        }
+        shared.table.begin_shutdown();
+        let _ = scheduler.join();
+        shared.log("drained; exiting");
+        Ok(())
+    }
+}
+
+/// Map a request-parsing error message onto the protocol error code:
+/// job-description problems are `bad_job`, everything else (JSON or
+/// protocol shape) is `bad_request`.
+fn error_code(msg: &str) -> &'static str {
+    if msg.starts_with("job") {
+        "bad_job"
+    } else {
+        "bad_request"
+    }
+}
+
+fn serve_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    loop {
+        let line = match read_request_line(&mut reader)? {
+            LineRead::Eof => return Ok(()),
+            LineRead::TooLong => {
+                let msg = format!("request line exceeds {} bytes", protocol::MAX_LINE);
+                writeln!(writer, "{}", err_line("line_too_long", &msg))?;
+                writer.flush()?;
+                continue;
+            }
+            LineRead::Line(l) => l,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let request = match Request::parse(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                writeln!(writer, "{}", err_line(error_code(&msg), &msg))?;
+                writer.flush()?;
+                continue;
+            }
+        };
+        match request {
+            Request::Ping => {
+                writeln!(writer, "{{\"ok\": true}}")?;
+                writer.flush()?;
+            }
+            Request::Stats => {
+                writeln!(writer, "{}", stats_line(shared))?;
+                writer.flush()?;
+            }
+            Request::Status { id } => {
+                match shared.table.snapshot(id) {
+                    Some(snap) => writeln!(writer, "{}", status_line(&snap))?,
+                    None => writeln!(writer, "{}", err_line("not_found", &format!("no job {id}")))?,
+                }
+                writer.flush()?;
+            }
+            Request::Submit { job, stream } => {
+                if let Err(e) = job.validate() {
+                    let msg = format!("{e:#}");
+                    writeln!(writer, "{}", err_line("bad_job", &msg))?;
+                    writer.flush()?;
+                    continue;
+                }
+                match shared.table.submit(job) {
+                    Err(e @ AdmitError::QueueFull { .. }) => {
+                        writeln!(writer, "{}", err_line("queue_full", &e.to_string()))?;
+                        writer.flush()?;
+                    }
+                    Err(AdmitError::ShuttingDown) => {
+                        writeln!(
+                            writer,
+                            "{}",
+                            err_line("shutting_down", &AdmitError::ShuttingDown.to_string())
+                        )?;
+                        writer.flush()?;
+                    }
+                    Ok(id) => {
+                        shared.log(&format!("job {id} admitted"));
+                        writeln!(writer, "{{\"ok\": true, \"id\": {id}}}")?;
+                        writer.flush()?;
+                        if stream {
+                            // A streaming client that disconnects only
+                            // ends the stream; the job keeps running.
+                            let _ = stream_events(&shared.table, id, &mut writer);
+                        }
+                    }
+                }
+            }
+            Request::Shutdown => {
+                writeln!(writer, "{{\"ok\": true}}")?;
+                writer.flush()?;
+                shared.log("shutdown requested");
+                shared.shutdown.store(true, Ordering::SeqCst);
+                shared.table.begin_shutdown();
+                // Wake the accept loop so it observes the flag.
+                let _ = TcpStream::connect(shared.addr);
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// One status response line; the final report is embedded verbatim (it
+/// is already canonical single-line JSON).
+fn status_line(snap: &JobSnapshot) -> String {
+    let mut s = format!(
+        "{{\"ok\": true, \"id\": {}, \"state\": {}, \"priority\": {}, \
+         \"instructions\": {}, \"total\": {}",
+        snap.id,
+        quote(snap.state.as_str()),
+        quote(snap.priority.as_str()),
+        snap.instructions,
+        snap.total.map(|t| t.to_string()).unwrap_or_else(|| "null".into()),
+    );
+    if let Some(e) = &snap.error {
+        s.push_str(&format!(", \"error\": {}", quote(e)));
+    }
+    if let Some(r) = &snap.report_json {
+        s.push_str(&format!(", \"report\": {r}"));
+    }
+    s.push('}');
+    s
+}
+
+/// The stats response line: job counts by state plus one entry per warm
+/// predictor.
+fn stats_line(shared: &Shared) -> String {
+    let (queued, running, done, failed) = shared.table.counts();
+    let preds: Vec<String> = shared
+        .registry
+        .stats()
+        .iter()
+        .map(|s| {
+            format!(
+                "{{\"key\": {}, \"label\": {}, \"jobs\": {}, \"served\": {}}}",
+                quote(&s.key),
+                quote(&s.label),
+                s.jobs,
+                s.served
+            )
+        })
+        .collect();
+    format!(
+        "{{\"ok\": true, \"jobs\": {{\"queued\": {queued}, \"running\": {running}, \
+         \"done\": {done}, \"failed\": {failed}}}, \"predictors\": [{}]}}",
+        preds.join(", ")
+    )
+}
+
+/// Push event lines for one job until it completes: a `state` line on
+/// every lifecycle change, `progress` lines while running, and a final
+/// `done` (with the embedded report) or `failed` line.
+fn stream_events(table: &JobTable, id: u64, w: &mut impl Write) -> std::io::Result<()> {
+    let mut last_state: Option<JobState> = None;
+    let mut last_progress = u64::MAX;
+    loop {
+        let Some(snap) = table.snapshot(id) else { return Ok(()) };
+        if last_state != Some(snap.state) {
+            last_state = Some(snap.state);
+            match snap.state {
+                JobState::Done => {
+                    writeln!(
+                        w,
+                        "{{\"event\": \"done\", \"id\": {id}, \"report\": {}}}",
+                        snap.report_json.as_deref().unwrap_or("null")
+                    )?;
+                    return w.flush();
+                }
+                JobState::Failed => {
+                    writeln!(
+                        w,
+                        "{{\"event\": \"failed\", \"id\": {id}, \"error\": {}}}",
+                        quote(snap.error.as_deref().unwrap_or("unknown error"))
+                    )?;
+                    return w.flush();
+                }
+                state => {
+                    writeln!(
+                        w,
+                        "{{\"event\": \"state\", \"id\": {id}, \"state\": {}}}",
+                        quote(state.as_str())
+                    )?;
+                }
+            }
+        }
+        if snap.state == JobState::Running && snap.instructions != last_progress {
+            last_progress = snap.instructions;
+            writeln!(
+                w,
+                "{{\"event\": \"progress\", \"id\": {id}, \"instructions\": {}, \"total\": {}}}",
+                snap.instructions,
+                snap.total.map(|t| t.to_string()).unwrap_or_else(|| "null".into())
+            )?;
+        }
+        w.flush()?;
+        table.wait_update(Duration::from_millis(100));
+    }
+}
+
+/// Pull job groups off the queue until shutdown drains it. A panic in
+/// one group (a predictor bug, a malformed artifact) fails that group's
+/// jobs and the loop continues — one tenant cannot take the daemon down.
+fn scheduler_loop(shared: &Shared, max_cobatch: usize) {
+    while let Some(group) = shared.table.next_group(max_cobatch) {
+        let outcome = catch_unwind(AssertUnwindSafe(|| run_group(shared, &group)));
+        if let Err(panic) = outcome {
+            let msg = panic_message(&panic);
+            for (id, _, _) in &group {
+                if let Some(snap) = shared.table.snapshot(*id) {
+                    if matches!(snap.state, JobState::Running | JobState::Queued) {
+                        shared.table.fail(*id, format!("internal error: {msg}"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".into()
+    }
+}
+
+/// Execute one dequeued group against its warm predictor: a lone job
+/// replays through [`JobRequest::run_with`]; a co-batch group shares one
+/// engine ([`run_cobatch`]).
+fn run_group(shared: &Shared, group: &[(u64, JobRequest, Arc<AtomicU64>)]) {
+    let predictor = match shared.registry.acquire(&group[0].1, group.len() as u64) {
+        Ok(p) => p,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for (id, _, _) in group {
+                shared.table.fail(*id, msg.clone());
+            }
+            return;
+        }
+    };
+    // A previous panic may have poisoned the lock; the predictor state
+    // is still internally consistent (poisoning only records the fact),
+    // so recover it rather than wedging every later job on this key.
+    let mut guard = match predictor.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    if let [(id, job, progress)] = group {
+        match job.run_with(guard.as_mut(), Some(progress.clone())) {
+            Ok(report) => {
+                shared.table.finish(*id, report.to_json_compact());
+                shared.log(&format!("job {id} done"));
+            }
+            Err(e) => {
+                shared.table.fail(*id, format!("{e:#}"));
+                shared.log(&format!("job {id} failed"));
+            }
+        }
+    } else {
+        run_cobatch(shared, guard.as_mut(), group);
+    }
+}
+
+/// A materialized group member, owning everything its `JobSpec` borrows.
+struct Prepared {
+    id: u64,
+    job: JobRequest,
+    cfg: SimConfig,
+    records: Vec<TraceRecord>,
+    des_cpi: Option<f64>,
+    bench: Option<String>,
+    progress: Arc<AtomicU64>,
+}
+
+/// Run a co-batched group through ONE shared engine: every member's
+/// sub-traces multiplex into common predictor batches, and each job
+/// still gets its own per-job outcome (engine invariance: batch
+/// composition cannot change results).
+fn run_cobatch(
+    shared: &Shared,
+    predictor: &mut dyn LatencyPredictor,
+    group: &[(u64, JobRequest, Arc<AtomicU64>)],
+) {
+    let mut prepared: Vec<Prepared> = Vec::with_capacity(group.len());
+    for (id, job, progress) in group {
+        let built = job.config.build().and_then(|cfg| {
+            let (records, des_cpi, bench) = job.materialize(&cfg)?;
+            Ok((cfg, records, des_cpi, bench))
+        });
+        match built {
+            Ok((cfg, records, des_cpi, bench)) => {
+                shared.table.set_total(*id, records.len() as u64);
+                prepared.push(Prepared {
+                    id: *id,
+                    job: job.clone(),
+                    cfg,
+                    records,
+                    des_cpi,
+                    bench,
+                    progress: progress.clone(),
+                });
+            }
+            // Materialization failures (bad trace path, unreadable file)
+            // fail that member alone; the rest of the group still runs.
+            Err(e) => shared.table.fail(*id, format!("{e:#}")),
+        }
+    }
+    if prepared.is_empty() {
+        return;
+    }
+    let mut engine = BatchEngine::with_options(predictor, prepared[0].job.engine);
+    for p in &prepared {
+        engine.submit(JobSpec {
+            records: &p.records,
+            cfg: &p.cfg,
+            subtraces: p.job.subtraces.max(1),
+            window: p.job.window,
+            cfg_feature: p.job.cfg_feature,
+            progress: Some(p.progress.clone()),
+        });
+    }
+    match engine.run() {
+        Ok(report) => {
+            for (k, p) in prepared.iter().enumerate() {
+                let sim = SimReport {
+                    predictor: p.job.predictor.label(),
+                    mode: ExecMode::Engine,
+                    bench: p.bench.clone(),
+                    config: p.cfg.name.to_string(),
+                    outcome: report.jobs[k].clone(),
+                    engine: Some(report.stats.clone()),
+                    des_cpi: p.des_cpi,
+                };
+                shared.table.finish(p.id, sim.to_json_compact());
+                shared.log(&format!("job {} done (co-batched x{})", p.id, prepared.len()));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for p in &prepared {
+                shared.table.fail(p.id, msg.clone());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::job::{JobSource, Priority};
+    use crate::api::{PredictorSpec, Simulation};
+    use crate::server::json::Value;
+
+    fn shared() -> Shared {
+        Shared {
+            table: JobTable::new(16),
+            registry: PredictorRegistry::new(),
+            shutdown: AtomicBool::new(false),
+            addr: "127.0.0.1:0".parse().unwrap(),
+            quiet: true,
+        }
+    }
+
+    fn engine_job(bench: &str, n: u64, subtraces: usize) -> JobRequest {
+        let mut j = JobRequest::new(
+            JobSource::Bench { name: bench.into(), n },
+            PredictorSpec::table(8),
+        );
+        j.subtraces = subtraces;
+        j
+    }
+
+    #[test]
+    fn cobatched_group_matches_direct_runs() {
+        // Two tenants, same predictor key, different benches and
+        // sub-trace counts: one shared engine must reproduce each job's
+        // direct (single-tenant) cycles, windows, and instructions.
+        let s = shared();
+        let a = s.table.submit(engine_job("gcc", 3_000, 4)).unwrap();
+        let b = s.table.submit(engine_job("xz", 2_000, 2)).unwrap();
+        let group = s.table.next_group(4).unwrap();
+        assert_eq!(group.len(), 2, "same-key engine jobs must co-batch");
+        run_group(&s, &group);
+
+        for (id, bench, n, subtraces) in [(a, "gcc", 3_000u64, 4usize), (b, "xz", 2_000, 2)] {
+            let snap = s.table.snapshot(id).unwrap();
+            assert_eq!(snap.state, JobState::Done, "err: {:?}", snap.error);
+            let got = Value::parse(snap.report_json.as_deref().unwrap()).unwrap();
+            let direct = Simulation::new()
+                .bench(bench, n)
+                .predictor(PredictorSpec::table(8))
+                .subtraces(subtraces)
+                .run()
+                .unwrap();
+            assert_eq!(
+                got.get("cycles").and_then(Value::as_u64),
+                Some(direct.outcome.cycles),
+                "{bench}: co-batched cycles must match the direct run"
+            );
+            assert_eq!(
+                got.get("instructions").and_then(Value::as_u64),
+                Some(direct.outcome.instructions)
+            );
+            assert_eq!(got.get("bench").and_then(Value::as_str), Some(bench));
+            // Progress reached the full instruction count.
+            assert_eq!(snap.instructions, n);
+        }
+        // One warm predictor served both tenants.
+        assert_eq!(s.registry.len(), 1);
+        assert_eq!(s.registry.stats()[0].jobs, 2);
+    }
+
+    #[test]
+    fn failed_member_does_not_sink_the_group() {
+        let s = shared();
+        let good = s.table.submit(engine_job("gcc", 1_000, 2)).unwrap();
+        let mut bad = engine_job("gcc", 1_000, 2);
+        bad.source = JobSource::TraceFile("/nonexistent/trace.smt".into());
+        let bad = s.table.submit(bad).unwrap();
+        let group = s.table.next_group(4).unwrap();
+        assert_eq!(group.len(), 2);
+        run_group(&s, &group);
+        assert_eq!(s.table.snapshot(good).unwrap().state, JobState::Done);
+        let snap = s.table.snapshot(bad).unwrap();
+        assert_eq!(snap.state, JobState::Failed);
+        assert!(snap.error.unwrap().contains("trace.smt"));
+    }
+
+    #[test]
+    fn lone_job_runs_via_run_with_and_matches_direct() {
+        let s = shared();
+        let mut job = engine_job("leela", 1_500, 1);
+        job.window = 500;
+        job.priority = Priority::High;
+        let id = s.table.submit(job).unwrap();
+        let group = s.table.next_group(4).unwrap();
+        run_group(&s, &group);
+        let snap = s.table.snapshot(id).unwrap();
+        assert_eq!(snap.state, JobState::Done);
+        let got = Value::parse(snap.report_json.as_deref().unwrap()).unwrap();
+        assert_eq!(got.get("mode").and_then(Value::as_str), Some("sequential"));
+        let direct = Simulation::new()
+            .bench("leela", 1_500)
+            .predictor(PredictorSpec::table(8))
+            .window(500)
+            .run()
+            .unwrap();
+        assert_eq!(got.get("cycles").and_then(Value::as_u64), Some(direct.outcome.cycles));
+    }
+
+    #[test]
+    fn status_and_stats_lines_are_valid_json() {
+        let s = shared();
+        let id = s.table.submit(engine_job("gcc", 100, 1)).unwrap();
+        let snap = s.table.snapshot(id).unwrap();
+        let v = Value::parse(&status_line(&snap)).unwrap();
+        assert_eq!(v.get("state").and_then(Value::as_str), Some("queued"));
+        assert_eq!(v.get("total").and_then(Value::as_u64), Some(100));
+        let v = Value::parse(&stats_line(&s)).unwrap();
+        assert_eq!(v.get("jobs").and_then(|j| j.get("queued")).and_then(Value::as_u64), Some(1));
+    }
+
+    #[test]
+    fn error_codes_partition_by_message() {
+        assert_eq!(error_code("json: trailing characters at byte 3"), "bad_request");
+        assert_eq!(error_code("request: unknown cmd \"x\""), "bad_request");
+        assert_eq!(error_code("job: unknown field \"sauce\""), "bad_job");
+        assert_eq!(error_code("job predictor: missing \"model\""), "bad_job");
+    }
+}

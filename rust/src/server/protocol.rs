@@ -1,0 +1,312 @@
+//! The job server's wire protocol: newline-delimited JSON over TCP.
+//!
+//! Every request is one line, one JSON object with a `"cmd"` member;
+//! every response is one line, one JSON object with an `"ok"` member.
+//! A submit with `"stream": true` is followed by additional event lines
+//! until the job leaves the system. The line length is bounded
+//! ([`MAX_LINE`]) so a hostile client cannot make the daemon buffer
+//! without limit — an oversized line is a named error, and the
+//! connection stays usable.
+//!
+//! ```text
+//! > {"cmd": "submit", "job": {...}}            < {"ok": true, "id": 3}
+//! > {"cmd": "status", "id": 3}                 < {"ok": true, "id": 3, "state": "done", ...}
+//! > {"cmd": "stats"}                           < {"ok": true, "jobs": {...}, "predictors": [...]}
+//! > {"cmd": "ping"}                            < {"ok": true}
+//! > {"cmd": "shutdown"}                        < {"ok": true}
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::api::job::JobRequest;
+
+use super::json::{check_keys, quote, Value};
+
+/// Upper bound on one protocol line in bytes. Large enough for any job
+/// description or embedded report (compact reports are a few KiB), small
+/// enough to bound a connection's buffering.
+pub const MAX_LINE: usize = 1 << 20;
+
+/// A parsed client request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Admit a job; with `stream`, keep the connection open and push
+    /// progress events until the job completes.
+    Submit {
+        /// The job description.
+        job: JobRequest,
+        /// Stream progress events after the admission response.
+        stream: bool,
+    },
+    /// Query one job's lifecycle state by id.
+    Status {
+        /// Server-assigned job id.
+        id: u64,
+    },
+    /// Query server-wide counters (queue lengths, warm predictors).
+    Stats,
+    /// Liveness probe.
+    Ping,
+    /// Drain and stop the daemon.
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line (strict: unknown members and unknown
+    /// commands are named errors).
+    pub fn parse(line: &str) -> Result<Request> {
+        Self::from_value(&Value::parse(line)?)
+    }
+
+    /// [`parse`](Self::parse) over an already-parsed [`Value`].
+    pub fn from_value(v: &Value) -> Result<Request> {
+        let obj = v.as_obj().ok_or_else(|| anyhow!("request: expected a JSON object"))?;
+        let cmd = v.get("cmd").and_then(Value::as_str).ok_or_else(|| {
+            anyhow!("request: missing \"cmd\" (submit|status|stats|ping|shutdown)")
+        })?;
+        match cmd {
+            "submit" => {
+                check_keys(obj, "submit request", &["cmd", "job", "stream"])?;
+                let job = JobRequest::from_value(
+                    v.get("job").ok_or_else(|| anyhow!("submit request: missing \"job\""))?,
+                )?;
+                let stream = match v.get("stream") {
+                    None => false,
+                    Some(s) => s
+                        .as_bool()
+                        .ok_or_else(|| anyhow!("submit request: \"stream\" must be a bool"))?,
+                };
+                Ok(Request::Submit { job, stream })
+            }
+            "status" => {
+                check_keys(obj, "status request", &["cmd", "id"])?;
+                let id = v
+                    .get("id")
+                    .and_then(Value::as_u64)
+                    .ok_or_else(|| anyhow!("status request: missing integer \"id\""))?;
+                Ok(Request::Status { id })
+            }
+            "stats" => {
+                check_keys(obj, "stats request", &["cmd"])?;
+                Ok(Request::Stats)
+            }
+            "ping" => {
+                check_keys(obj, "ping request", &["cmd"])?;
+                Ok(Request::Ping)
+            }
+            "shutdown" => {
+                check_keys(obj, "shutdown request", &["cmd"])?;
+                Ok(Request::Shutdown)
+            }
+            other => bail!("request: unknown cmd \"{other}\" (submit|status|stats|ping|shutdown)"),
+        }
+    }
+}
+
+/// One request line for a submit (the `repro submit` client and tests
+/// build their lines through these, so client and server can't drift).
+pub fn submit_request(job: &JobRequest, stream: bool) -> String {
+    let mut line = format!("{{\"cmd\": \"submit\", \"job\": {}", job.to_json());
+    if stream {
+        line.push_str(", \"stream\": true");
+    }
+    line.push('}');
+    line
+}
+
+/// One request line for a status query.
+pub fn status_request(id: u64) -> String {
+    format!("{{\"cmd\": \"status\", \"id\": {id}}}")
+}
+
+/// One request line for the stats query.
+pub fn stats_request() -> String {
+    "{\"cmd\": \"stats\"}".into()
+}
+
+/// One request line for the liveness probe.
+pub fn ping_request() -> String {
+    "{\"cmd\": \"ping\"}".into()
+}
+
+/// One request line for the shutdown command.
+pub fn shutdown_request() -> String {
+    "{\"cmd\": \"shutdown\"}".into()
+}
+
+/// One error response line: `{"ok": false, "code": .., "error": ..}`.
+/// Codes are stable machine-readable names (`bad_request`, `bad_job`,
+/// `line_too_long`, `queue_full`, `shutting_down`, `not_found`).
+pub fn err_line(code: &str, msg: &str) -> String {
+    format!("{{\"ok\": false, \"code\": {}, \"error\": {}}}", quote(code), quote(msg))
+}
+
+/// Outcome of one bounded line read.
+#[derive(Debug)]
+pub enum LineRead {
+    /// The peer closed the connection (including mid-line).
+    Eof,
+    /// The line exceeded [`MAX_LINE`]; it was drained through its
+    /// newline, so the connection remains usable.
+    TooLong,
+    /// One complete line (newline stripped).
+    Line(String),
+}
+
+/// Read one newline-terminated line without ever buffering more than
+/// [`MAX_LINE`] bytes of it.
+pub fn read_request_line(r: &mut impl BufRead) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF. A partial unterminated line is discarded: the peer
+            // disconnected mid-request.
+            return Ok(LineRead::Eof);
+        }
+        if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
+            if buf.len() + pos > MAX_LINE {
+                r.consume(pos + 1);
+                return Ok(LineRead::TooLong);
+            }
+            buf.extend_from_slice(&chunk[..pos]);
+            r.consume(pos + 1);
+            let line = String::from_utf8(buf).map_err(|_| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, "non-utf8 request line")
+            })?;
+            return Ok(LineRead::Line(line));
+        }
+        let len = chunk.len();
+        if buf.len() + len > MAX_LINE {
+            // Already oversized: stop buffering, drain to the newline so
+            // the next request starts clean.
+            buf.clear();
+            r.consume(len);
+            loop {
+                let chunk = r.fill_buf()?;
+                if chunk.is_empty() {
+                    return Ok(LineRead::Eof);
+                }
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(pos) => {
+                        r.consume(pos + 1);
+                        return Ok(LineRead::TooLong);
+                    }
+                    None => {
+                        let len = chunk.len();
+                        r.consume(len);
+                    }
+                }
+            }
+        }
+        buf.extend_from_slice(chunk);
+        r.consume(len);
+    }
+}
+
+/// Client side of one request/response exchange: connect, send `line`,
+/// read one response line, parse it. (Streaming submits keep reading
+/// from the returned connection instead.)
+pub fn roundtrip(addr: &str, line: &str) -> Result<Value> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to job server {addr}"))?;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    match read_request_line(&mut reader)? {
+        LineRead::Line(resp) => {
+            Value::parse(&resp).with_context(|| format!("bad response from {addr}"))
+        }
+        LineRead::Eof => bail!("job server {addr} closed the connection without responding"),
+        LineRead::TooLong => bail!("job server {addr} sent an oversized response line"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::job::JobSource;
+    use crate::api::PredictorSpec;
+    use std::io::BufReader;
+
+    fn sample_job() -> JobRequest {
+        JobRequest::new(
+            JobSource::Bench { name: "gcc".into(), n: 500 },
+            PredictorSpec::table(8),
+        )
+    }
+
+    #[test]
+    fn request_builders_parse_back() {
+        let job = sample_job();
+        match Request::parse(&submit_request(&job, false)).unwrap() {
+            Request::Submit { job: j, stream } => {
+                assert!(!stream);
+                assert_eq!(j.to_json(), job.to_json());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match Request::parse(&submit_request(&job, true)).unwrap() {
+            Request::Submit { stream, .. } => assert!(stream),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(matches!(Request::parse(&status_request(7)).unwrap(), Request::Status { id: 7 }));
+        assert!(matches!(Request::parse(&stats_request()).unwrap(), Request::Stats));
+        assert!(matches!(Request::parse(&ping_request()).unwrap(), Request::Ping));
+        assert!(matches!(Request::parse(&shutdown_request()).unwrap(), Request::Shutdown));
+    }
+
+    #[test]
+    fn malformed_requests_are_named_errors() {
+        for (line, needle) in [
+            ("nonsense", "json:"),
+            ("[1]", "expected a JSON object"),
+            ("{}", "missing \"cmd\""),
+            ("{\"cmd\": \"fly\"}", "unknown cmd \"fly\""),
+            ("{\"cmd\": \"ping\", \"x\": 1}", "accepted: cmd"),
+            ("{\"cmd\": \"status\"}", "missing integer \"id\""),
+            ("{\"cmd\": \"submit\"}", "missing \"job\""),
+            ("{\"cmd\": \"submit\", \"job\": {\"sauce\": 1}}", "unknown field \"sauce\""),
+        ] {
+            let err = Request::parse(line).unwrap_err().to_string();
+            assert!(err.contains(needle), "line {line}: err {err:?}");
+        }
+    }
+
+    #[test]
+    fn err_line_is_valid_json() {
+        let v = Value::parse(&err_line("bad_request", "oops \"quoted\"")).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+        assert_eq!(v.get("code").and_then(Value::as_str), Some("bad_request"));
+        assert_eq!(v.get("error").and_then(Value::as_str), Some("oops \"quoted\""));
+    }
+
+    #[test]
+    fn bounded_read_handles_lines_eof_and_oversize() {
+        let mut r = BufReader::new(&b"{\"cmd\": \"ping\"}\nrest"[..]);
+        assert!(matches!(
+            read_request_line(&mut r).unwrap(),
+            LineRead::Line(l) if l == "{\"cmd\": \"ping\"}"
+        ));
+        // "rest" has no newline: disconnect mid-request.
+        assert!(matches!(read_request_line(&mut r).unwrap(), LineRead::Eof));
+
+        let mut big = vec![b'x'; MAX_LINE + 1024];
+        big.push(b'\n');
+        big.extend_from_slice(b"{\"cmd\": \"ping\"}\n");
+        let mut r = BufReader::new(&big[..]);
+        assert!(matches!(read_request_line(&mut r).unwrap(), LineRead::TooLong));
+        // The connection is still usable after the oversized line.
+        assert!(matches!(
+            read_request_line(&mut r).unwrap(),
+            LineRead::Line(l) if l == "{\"cmd\": \"ping\"}"
+        ));
+
+        let mut r = BufReader::new(&b""[..]);
+        assert!(matches!(read_request_line(&mut r).unwrap(), LineRead::Eof));
+    }
+}

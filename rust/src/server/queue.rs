@@ -1,0 +1,456 @@
+//! Bounded admission queue + job lifecycle table for the job server.
+//!
+//! Admission is bounded (`capacity` queued jobs; beyond that submits are
+//! rejected with a named [`AdmitError`], not buffered without limit) and
+//! two-class: high-priority jobs dequeue before any normal job, FIFO
+//! within each class. Every admitted job lives in the table through the
+//! `queued → running → done | failed` lifecycle and stays queryable by
+//! id after completion ([`JobTable::snapshot`]).
+//!
+//! [`JobTable::next_group`] is where cross-tenant co-batching starts:
+//! when the scheduler pops an engine-mode job, every other queued
+//! engine-mode job with the same predictor key and engine options rides
+//! along in the same group, and the server runs the whole group through
+//! ONE shared [`crate::coordinator::BatchEngine`]. The engine's
+//! deterministic schedule makes this safe: batch composition cannot
+//! change a job's results (pinned by the server's equivalence tests).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::api::job::{JobRequest, Priority};
+use crate::api::ExecMode;
+
+/// Lifecycle state of an admitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted, waiting for a scheduler slot.
+    Queued,
+    /// Executing (or grouped into an executing co-batch).
+    Running,
+    /// Completed; the report JSON is available.
+    Done,
+    /// Errored (or cancelled by shutdown); the error string is available.
+    Failed,
+}
+
+impl JobState {
+    /// Stable lowercase name used on the wire.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+/// Why a submit was rejected at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The bounded queue already holds `capacity` queued jobs.
+    QueueFull {
+        /// The queue's configured capacity.
+        capacity: usize,
+    },
+    /// The server is draining; no new jobs are admitted.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull { capacity } => {
+                write!(f, "job queue full ({capacity} queued jobs)")
+            }
+            AdmitError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// Point-in-time view of one job, queryable by id for the job's whole
+/// lifetime (completed jobs stay in the table).
+#[derive(Debug, Clone)]
+pub struct JobSnapshot {
+    /// Server-assigned job id.
+    pub id: u64,
+    /// Current lifecycle state.
+    pub state: JobState,
+    /// Admission priority class.
+    pub priority: Priority,
+    /// Instructions simulated so far (live while running).
+    pub instructions: u64,
+    /// Total instructions, when knowable (bench sources know up front;
+    /// trace files once the run opens them).
+    pub total: Option<u64>,
+    /// Failure message (failed jobs).
+    pub error: Option<String>,
+    /// Final report as single-line JSON (done jobs).
+    pub report_json: Option<String>,
+}
+
+struct Entry {
+    job: JobRequest,
+    state: JobState,
+    priority: Priority,
+    progress: Arc<AtomicU64>,
+    total: Option<u64>,
+    error: Option<String>,
+    report_json: Option<String>,
+}
+
+struct Inner {
+    next_id: u64,
+    jobs: HashMap<u64, Entry>,
+    high: VecDeque<u64>,
+    normal: VecDeque<u64>,
+    shutdown: bool,
+}
+
+/// The server's job table: bounded two-class admission, blocking
+/// scheduler hand-off with co-batch grouping, and lifecycle queries.
+/// Every method takes `&self`; the table is shared via `Arc` between
+/// the listener threads and the scheduler.
+pub struct JobTable {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl JobTable {
+    /// A table admitting at most `capacity` queued jobs at a time.
+    pub fn new(capacity: usize) -> Self {
+        JobTable {
+            capacity,
+            inner: Mutex::new(Inner {
+                next_id: 1,
+                jobs: HashMap::new(),
+                high: VecDeque::new(),
+                normal: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Admit a job, returning its id — or a named rejection when the
+    /// queue is full or the server is draining.
+    pub fn submit(&self, job: JobRequest) -> Result<u64, AdmitError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.shutdown {
+            return Err(AdmitError::ShuttingDown);
+        }
+        if inner.high.len() + inner.normal.len() >= self.capacity {
+            return Err(AdmitError::QueueFull { capacity: self.capacity });
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let priority = job.priority;
+        let total = job.total_instructions();
+        inner.jobs.insert(
+            id,
+            Entry {
+                job,
+                state: JobState::Queued,
+                priority,
+                progress: Arc::new(AtomicU64::new(0)),
+                total,
+                error: None,
+                report_json: None,
+            },
+        );
+        match priority {
+            Priority::High => inner.high.push_back(id),
+            Priority::Normal => inner.normal.push_back(id),
+        }
+        self.cv.notify_all();
+        Ok(id)
+    }
+
+    /// Block until work is available, then dequeue the next job group
+    /// (at most `max` jobs), marking every member running. The head is
+    /// the oldest highest-class job; when it runs in engine mode, queued
+    /// engine-mode jobs sharing its predictor key and engine options are
+    /// grouped with it for co-batched execution. Returns `None` once the
+    /// table is shut down and drained.
+    #[allow(clippy::type_complexity)]
+    pub fn next_group(&self, max: usize) -> Option<Vec<(u64, JobRequest, Arc<AtomicU64>)>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.high.is_empty() && inner.normal.is_empty() {
+                if inner.shutdown {
+                    return None;
+                }
+                inner = self.cv.wait(inner).unwrap();
+                continue;
+            }
+            let head = inner
+                .high
+                .pop_front()
+                .or_else(|| inner.normal.pop_front())
+                .expect("non-empty queue");
+            let head_job = &inner.jobs[&head].job;
+            let mut ids = vec![head];
+            if head_job.mode() == ExecMode::Engine && max > 1 {
+                let key = head_job.predictor_key();
+                let opts = head_job.engine;
+                // Scan both classes in dequeue order; matching engine-mode
+                // jobs ride along, everything else keeps its queue slot.
+                let mut take = |queue: &VecDeque<u64>, jobs: &HashMap<u64, Entry>| {
+                    let mut taken = Vec::new();
+                    for &id in queue {
+                        if ids.len() + taken.len() >= max {
+                            break;
+                        }
+                        let job = &jobs[&id].job;
+                        if job.mode() == ExecMode::Engine
+                            && job.engine == opts
+                            && job.predictor_key() == key
+                        {
+                            taken.push(id);
+                        }
+                    }
+                    taken
+                };
+                let mut extra = take(&inner.high, &inner.jobs);
+                extra.extend(take(&inner.normal, &inner.jobs));
+                inner.high.retain(|id| !extra.contains(id));
+                inner.normal.retain(|id| !extra.contains(id));
+                ids.extend(extra);
+            }
+            let group = ids
+                .into_iter()
+                .map(|id| {
+                    let entry = inner.jobs.get_mut(&id).expect("queued id in table");
+                    entry.state = JobState::Running;
+                    (id, entry.job.clone(), entry.progress.clone())
+                })
+                .collect();
+            self.cv.notify_all();
+            return Some(group);
+        }
+    }
+
+    /// The job's live progress counter (shared with the running
+    /// simulation), if the id exists.
+    pub fn progress_handle(&self, id: u64) -> Option<Arc<AtomicU64>> {
+        self.inner.lock().unwrap().jobs.get(&id).map(|e| e.progress.clone())
+    }
+
+    /// Record the job's total instruction count once known (trace-file
+    /// sources learn it when the run opens the file).
+    pub fn set_total(&self, id: u64, total: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.jobs.get_mut(&id) {
+            e.total = Some(total);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Mark the job done with its final report JSON.
+    pub fn finish(&self, id: u64, report_json: String) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.jobs.get_mut(&id) {
+            e.state = JobState::Done;
+            e.report_json = Some(report_json);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Mark the job failed with an error message.
+    pub fn fail(&self, id: u64, error: String) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.jobs.get_mut(&id) {
+            e.state = JobState::Failed;
+            e.error = Some(error);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Point-in-time view of one job, if the id exists.
+    pub fn snapshot(&self, id: u64) -> Option<JobSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        inner.jobs.get(&id).map(|e| JobSnapshot {
+            id,
+            state: e.state,
+            priority: e.priority,
+            instructions: e.progress.load(Ordering::Relaxed),
+            total: e.total,
+            error: e.error.clone(),
+            report_json: e.report_json.clone(),
+        })
+    }
+
+    /// Job counts by state: `(queued, running, done, failed)`.
+    pub fn counts(&self) -> (usize, usize, usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        let mut c = (0, 0, 0, 0);
+        for e in inner.jobs.values() {
+            match e.state {
+                JobState::Queued => c.0 += 1,
+                JobState::Running => c.1 += 1,
+                JobState::Done => c.2 += 1,
+                JobState::Failed => c.3 += 1,
+            }
+        }
+        c
+    }
+
+    /// Stop admitting jobs, fail everything still queued, and wake every
+    /// waiter (the scheduler then drains and exits).
+    pub fn begin_shutdown(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.shutdown = true;
+        let queued: Vec<u64> = inner.high.drain(..).chain(inner.normal.drain(..)).collect();
+        for id in queued {
+            if let Some(e) = inner.jobs.get_mut(&id) {
+                e.state = JobState::Failed;
+                e.error = Some("server is shutting down".into());
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Whether [`begin_shutdown`](Self::begin_shutdown) has been called.
+    pub fn is_shutdown(&self) -> bool {
+        self.inner.lock().unwrap().shutdown
+    }
+
+    /// Block until any job changes state (or the timeout passes) — the
+    /// status-wait and event-stream loops poll through this instead of
+    /// spinning.
+    pub fn wait_update(&self, timeout: Duration) {
+        let inner = self.inner.lock().unwrap();
+        let _unused = self.cv.wait_timeout(inner, timeout).unwrap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::job::JobSource;
+    use crate::api::PredictorSpec;
+
+    fn job(bench: &str, subtraces: usize, priority: Priority, seq: usize) -> JobRequest {
+        let mut j = JobRequest::new(
+            JobSource::Bench { name: bench.into(), n: 100 },
+            PredictorSpec::table(seq),
+        );
+        j.subtraces = subtraces;
+        j.priority = priority;
+        j
+    }
+
+    #[test]
+    fn high_priority_dequeues_first_fifo_within_class() {
+        let table = JobTable::new(8);
+        let a = table.submit(job("gcc", 1, Priority::Normal, 8)).unwrap();
+        let b = table.submit(job("xz", 1, Priority::Normal, 8)).unwrap();
+        let c = table.submit(job("leela", 1, Priority::High, 8)).unwrap();
+        let order: Vec<u64> =
+            (0..3).map(|_| table.next_group(4).unwrap()[0].0).collect();
+        assert_eq!(order, vec![c, a, b]);
+    }
+
+    #[test]
+    fn sequential_jobs_never_group() {
+        let table = JobTable::new(8);
+        table.submit(job("gcc", 1, Priority::Normal, 8)).unwrap();
+        table.submit(job("xz", 1, Priority::Normal, 8)).unwrap();
+        assert_eq!(table.next_group(4).unwrap().len(), 1);
+        assert_eq!(table.next_group(4).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn engine_jobs_with_shared_predictor_cobatch() {
+        let table = JobTable::new(8);
+        let a = table.submit(job("gcc", 4, Priority::Normal, 8)).unwrap();
+        let b = table.submit(job("xz", 4, Priority::Normal, 16)).unwrap(); // different key
+        let c = table.submit(job("leela", 2, Priority::Normal, 8)).unwrap();
+        let group = table.next_group(4).unwrap();
+        let ids: Vec<u64> = group.iter().map(|(id, _, _)| *id).collect();
+        assert_eq!(ids, vec![a, c], "same-key engine jobs group; {b} stays queued");
+        assert_eq!(table.snapshot(c).unwrap().state, JobState::Running);
+        assert_eq!(table.snapshot(b).unwrap().state, JobState::Queued);
+        let group = table.next_group(4).unwrap();
+        assert_eq!(group[0].0, b);
+    }
+
+    #[test]
+    fn cobatch_respects_max_and_options() {
+        let table = JobTable::new(8);
+        for _ in 0..4 {
+            table.submit(job("gcc", 4, Priority::Normal, 8)).unwrap();
+        }
+        let mut other = job("xz", 4, Priority::Normal, 8);
+        other.engine.target_batch = 64; // same key, different engine opts
+        let e = table.submit(other).unwrap();
+        assert_eq!(table.next_group(3).unwrap().len(), 3);
+        assert_eq!(table.next_group(3).unwrap().len(), 1);
+        let group = table.next_group(3).unwrap();
+        assert_eq!((group[0].0, group.len()), (e, 1));
+    }
+
+    #[test]
+    fn queue_full_and_shutdown_are_named_rejections() {
+        let table = JobTable::new(1);
+        table.submit(job("gcc", 1, Priority::Normal, 8)).unwrap();
+        let err = table.submit(job("xz", 1, Priority::Normal, 8)).unwrap_err();
+        assert_eq!(err, AdmitError::QueueFull { capacity: 1 });
+        assert!(err.to_string().contains("queue full"));
+        table.begin_shutdown();
+        let err = table.submit(job("xz", 1, Priority::Normal, 8)).unwrap_err();
+        assert_eq!(err, AdmitError::ShuttingDown);
+    }
+
+    #[test]
+    fn shutdown_fails_queued_jobs_and_unblocks_scheduler() {
+        let table = Arc::new(JobTable::new(4));
+        let id = table.submit(job("gcc", 1, Priority::Normal, 8)).unwrap();
+        table.next_group(4).unwrap(); // drain it to running
+        let waiter = {
+            let table = table.clone();
+            std::thread::spawn(move || table.next_group(4))
+        };
+        let queued = table.submit(job("xz", 1, Priority::High, 8)).unwrap();
+        // The waiter takes the new job or shutdown drains it; either way
+        // the thread must return promptly after begin_shutdown.
+        std::thread::sleep(Duration::from_millis(20));
+        table.begin_shutdown();
+        let group = waiter.join().unwrap();
+        match group {
+            Some(g) => assert_eq!(g[0].0, queued),
+            None => {
+                let snap = table.snapshot(queued).unwrap();
+                assert_eq!(snap.state, JobState::Failed);
+                assert!(snap.error.unwrap().contains("shutting down"));
+            }
+        }
+        assert!(table.next_group(4).is_none(), "drained + shutdown returns None");
+        assert_eq!(table.snapshot(id).unwrap().state, JobState::Running);
+    }
+
+    #[test]
+    fn lifecycle_snapshots_track_state() {
+        let table = JobTable::new(4);
+        let id = table.submit(job("gcc", 1, Priority::Normal, 8)).unwrap();
+        let snap = table.snapshot(id).unwrap();
+        assert_eq!(snap.state, JobState::Queued);
+        assert_eq!(snap.total, Some(100), "bench sources know their total up front");
+        let group = table.next_group(4).unwrap();
+        group[0].2.fetch_add(42, Ordering::Relaxed);
+        let snap = table.snapshot(id).unwrap();
+        assert_eq!((snap.state, snap.instructions), (JobState::Running, 42));
+        table.finish(id, "{}".into());
+        let snap = table.snapshot(id).unwrap();
+        assert_eq!(snap.state, JobState::Done);
+        assert_eq!(snap.report_json.as_deref(), Some("{}"));
+        assert_eq!(table.counts(), (0, 0, 1, 0));
+        assert!(table.snapshot(999).is_none());
+    }
+}

@@ -1,0 +1,152 @@
+//! Warm predictor registry — the reason the server is *resident*.
+//!
+//! Building a predictor is the expensive part of a short simulation job
+//! (artifact resolution, weight loading, buffer allocation), so the
+//! server builds each distinct [`JobRequest::predictor_key`] once and
+//! keeps the live predictor warm across jobs. Subsequent jobs with the
+//! same key — from any client — reuse the entry, and the per-worker
+//! `fork` path inside the engine still applies on top (forked handles
+//! share the warm weights).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::api::job::JobRequest;
+use crate::predictor::LatencyPredictor;
+
+/// A warm predictor shared between scheduler runs. The mutex serializes
+/// groups on the same predictor; jobs *within* a group share batches
+/// inside one engine instead of contending on this lock.
+pub type SharedPredictor = Arc<Mutex<Box<dyn LatencyPredictor>>>;
+
+struct Entry {
+    predictor: SharedPredictor,
+    label: String,
+    jobs: u64,
+}
+
+/// One warm entry per distinct predictor key (see module docs).
+#[derive(Default)]
+pub struct PredictorRegistry {
+    entries: Mutex<HashMap<String, Entry>>,
+}
+
+/// Usage counters for one registry entry (`repro status --stats` view).
+#[derive(Debug, Clone)]
+pub struct RegistryStat {
+    /// The predictor key ([`JobRequest::predictor_key`]).
+    pub key: String,
+    /// Human-readable predictor label.
+    pub label: String,
+    /// Jobs that have acquired this entry.
+    pub jobs: u64,
+    /// Predictions served by the warm predictor so far.
+    pub served: u64,
+}
+
+impl PredictorRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The warm predictor for `job`'s key, building it on first use.
+    /// `group_jobs` is the number of jobs acquiring it together (one
+    /// co-batched group counts every member).
+    pub fn acquire(&self, job: &JobRequest, group_jobs: u64) -> Result<SharedPredictor> {
+        let key = job.predictor_key();
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(entry) = entries.get_mut(&key) {
+            entry.jobs += group_jobs;
+            return Ok(entry.predictor.clone());
+        }
+        let built = job
+            .predictor
+            .build()
+            .with_context(|| format!("building predictor for key {key}"))?;
+        let predictor: SharedPredictor = Arc::new(Mutex::new(built));
+        entries.insert(
+            key,
+            Entry { predictor: predictor.clone(), label: job.predictor.label(), jobs: group_jobs },
+        );
+        Ok(predictor)
+    }
+
+    /// Usage counters for every warm entry, sorted by key for stable
+    /// output.
+    pub fn stats(&self) -> Vec<RegistryStat> {
+        let entries = self.entries.lock().unwrap();
+        let mut out: Vec<RegistryStat> = entries
+            .iter()
+            .map(|(key, e)| RegistryStat {
+                key: key.clone(),
+                label: e.label.clone(),
+                jobs: e.jobs,
+                served: e.predictor.lock().unwrap().served(),
+            })
+            .collect();
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        out
+    }
+
+    /// Number of warm entries.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Whether no predictor has been built yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::job::JobSource;
+    use crate::api::PredictorSpec;
+
+    fn job(seq: usize) -> JobRequest {
+        JobRequest::new(
+            JobSource::Bench { name: "gcc".into(), n: 100 },
+            PredictorSpec::table(seq),
+        )
+    }
+
+    #[test]
+    fn same_key_shares_one_entry() {
+        let reg = PredictorRegistry::new();
+        let a = reg.acquire(&job(8), 1).unwrap();
+        let b = reg.acquire(&job(8), 2).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "equal keys must share the warm predictor");
+        assert_eq!(reg.len(), 1);
+        let c = reg.acquire(&job(16), 1).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(reg.len(), 2);
+        let stats = reg.stats();
+        assert_eq!(stats[0].jobs, 3, "group acquisition counts every member");
+        assert_eq!(stats[0].label, "table");
+    }
+
+    #[test]
+    fn served_counts_accumulate_across_jobs() {
+        let reg = PredictorRegistry::new();
+        let p = reg.acquire(&job(8), 1).unwrap();
+        {
+            let mut p = p.lock().unwrap();
+            let inputs = vec![0.0f32; p.seq_len() * crate::features::NUM_FEATURES];
+            p.predict(&inputs, 1).unwrap();
+        }
+        assert_eq!(reg.stats()[0].served, 1);
+    }
+
+    #[test]
+    fn bad_spec_is_a_named_build_error() {
+        let reg = PredictorRegistry::new();
+        let err = reg.acquire(&job(0), 1).unwrap_err().to_string();
+        assert!(err.contains("table/seq=0"), "err: {err}");
+        assert!(reg.is_empty(), "failed builds leave no entry behind");
+    }
+}

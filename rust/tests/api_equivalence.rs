@@ -51,7 +51,14 @@ fn builder_engine_matches_legacy_batch_engine() {
         EngineOptions { target_batch: 8, encode_threads: 1, pipeline_depth: 1, fork_predict: true };
     let mut p = TablePredictor::new(16);
     let mut engine = BatchEngine::with_options(&mut p, opts);
-    let job = JobSpec { records: &recs, cfg: &cfg, subtraces: 4, window: 500, cfg_feature: 0.0 };
+    let job = JobSpec {
+        records: &recs,
+        cfg: &cfg,
+        subtraces: 4,
+        window: 500,
+        cfg_feature: 0.0,
+        progress: None,
+    };
     engine.submit(job);
     let legacy = engine.run().unwrap();
     let legacy_stats = legacy.stats.clone();
@@ -109,7 +116,14 @@ fn builder_pool_matches_legacy_pool() {
     let (recs, cfg) = records("gcc", 6_000);
     let engine =
         EngineOptions { target_batch: 0, encode_threads: 1, pipeline_depth: 1, fork_predict: true };
-    let opts = PoolOptions { workers: 3, subtraces: 12, window: 500, cfg_feature: 0.0, engine };
+    let opts = PoolOptions {
+        workers: 3,
+        subtraces: 12,
+        window: 500,
+        cfg_feature: 0.0,
+        engine,
+        progress: None,
+    };
     let mut p = TablePredictor::new(16);
     let (legacy_out, legacy_stats) = simulate_pool_report(&recs, &cfg, &mut p, &opts).unwrap();
 

@@ -1,0 +1,299 @@
+//! End-to-end tests for the resident job server: a real daemon on a
+//! real TCP socket, exercised through the same `protocol` helpers the
+//! `repro` client subcommands use.
+//!
+//! The load-bearing property is report equivalence: a job that travels
+//! through admission, the warm-predictor registry, and the scheduler
+//! must produce the same `SimReport` JSON as a direct in-process
+//! `Simulation::run()` — byte-identical once the timing-derived fields
+//! (wall clock, MIPS, engine seconds) are scrubbed from both sides.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+use simnet::api::job::{JobRequest, JobSource, Priority};
+use simnet::api::{PredictorSpec, Simulation, WeightsSource};
+use simnet::server::json::Value;
+use simnet::server::{protocol, JobServer, ServerOptions};
+
+fn quiet_opts() -> ServerOptions {
+    ServerOptions { quiet: true, ..Default::default() }
+}
+
+/// Bind to an ephemeral port and run the daemon on a background thread.
+fn start_server(opts: ServerOptions) -> (String, thread::JoinHandle<()>) {
+    let server = JobServer::bind("127.0.0.1:0", opts).expect("bind job server");
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("server run"));
+    (addr, handle)
+}
+
+fn stop_server(addr: &str, handle: thread::JoinHandle<()>) {
+    let v = protocol::roundtrip(addr, &protocol::shutdown_request()).expect("shutdown");
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+    handle.join().expect("server thread");
+}
+
+fn submit(addr: &str, job: &JobRequest) -> u64 {
+    let v = protocol::roundtrip(addr, &protocol::submit_request(job, false)).expect("submit");
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "rejected: {}", v.render());
+    v.get("id").and_then(Value::as_u64).expect("id")
+}
+
+/// Poll a job to completion and return its final status response.
+fn wait_done(addr: &str, id: u64) -> Value {
+    for _ in 0..1500 {
+        let v = protocol::roundtrip(addr, &protocol::status_request(id)).expect("status");
+        match v.get("state").and_then(Value::as_str) {
+            Some("done") => return v,
+            Some("failed") => panic!(
+                "job {id} failed: {}",
+                v.get("error").and_then(Value::as_str).unwrap_or("?")
+            ),
+            _ => thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    panic!("job {id} did not finish in time");
+}
+
+/// Canonical rendering with the timing-derived fields zeroed: two runs
+/// of the same job agree on everything else.
+fn scrubbed(report: &Value) -> String {
+    let mut v = report.clone();
+    for key in ["wall_seconds", "mips"] {
+        if v.get(key).is_some() {
+            v.set(key, Value::Num(0.0));
+        }
+    }
+    if let Some(engine) = v.get_mut("engine") {
+        if !engine.is_null() {
+            for key in ["predict_seconds", "engine_seconds", "predictor_idle"] {
+                if engine.get(key).is_some() {
+                    engine.set(key, Value::Num(0.0));
+                }
+            }
+        }
+    }
+    v.render()
+}
+
+/// Run the same job description in-process through the public
+/// `Simulation` builder — the reference the daemon must match.
+fn direct_report(job: &JobRequest) -> Value {
+    let cfg = job.config.build().expect("config");
+    let mut sim = Simulation::new()
+        .config(&cfg)
+        .predictor(job.predictor.clone())
+        .subtraces(job.subtraces)
+        .workers(job.workers)
+        .window(job.window)
+        .engine(job.engine)
+        .input_seed(job.input_seed);
+    sim = match &job.source {
+        JobSource::Bench { name, n } => sim.bench(name.clone(), *n),
+        JobSource::TraceFile(path) => sim.trace_file(path.clone()),
+    };
+    Value::parse(&sim.run().expect("direct run").to_json_compact()).expect("direct json")
+}
+
+fn native_fc2() -> PredictorSpec {
+    PredictorSpec::native("artifacts", "fc2", 8).with_weights_source(WeightsSource::Init)
+}
+
+fn bench_job(spec: PredictorSpec, subtraces: usize) -> JobRequest {
+    let mut job = JobRequest::new(JobSource::Bench { name: "gcc".into(), n: 3_000 }, spec);
+    job.subtraces = subtraces;
+    job.window = 500;
+    job
+}
+
+#[test]
+fn daemon_reports_match_direct_runs() {
+    let (addr, handle) = start_server(quiet_opts());
+    // 2x2: sequential and engine mode, table and native predictors.
+    for (spec, subtraces) in [
+        (PredictorSpec::table(16), 1usize),
+        (PredictorSpec::table(16), 4),
+        (native_fc2(), 1),
+        (native_fc2(), 4),
+    ] {
+        let job = bench_job(spec, subtraces);
+        let id = submit(&addr, &job);
+        let status = wait_done(&addr, id);
+        let daemon = status.get("report").expect("report in done status");
+        let direct = direct_report(&job);
+        assert_eq!(
+            scrubbed(daemon),
+            scrubbed(&direct),
+            "daemon/direct mismatch for {} subtraces={subtraces}",
+            job.predictor_key()
+        );
+    }
+    stop_server(&addr, handle);
+}
+
+#[test]
+fn concurrent_jobs_share_one_warm_predictor() {
+    let (addr, handle) = start_server(ServerOptions { max_cobatch: 4, ..quiet_opts() });
+    let gcc = bench_job(PredictorSpec::table(16), 4);
+    let mut xz = bench_job(PredictorSpec::table(16), 4);
+    xz.source = JobSource::Bench { name: "xz".into(), n: 2_000 };
+    xz.priority = Priority::High;
+
+    // Submit back-to-back so the scheduler may co-batch them; each job's
+    // outcome must still match its solo in-process run (engine-stats
+    // fields reflect the whole group, so compare outcome fields only).
+    let ids = [submit(&addr, &gcc), submit(&addr, &xz)];
+    for (id, job) in ids.iter().zip([&gcc, &xz]) {
+        let status = wait_done(&addr, *id);
+        let daemon = status.get("report").expect("report");
+        let direct = direct_report(job);
+        for key in ["instructions", "cycles", "cpi", "windows", "predictor", "config"] {
+            assert_eq!(
+                daemon.get(key),
+                direct.get(key),
+                "{key} mismatch for job {id} ({:?})",
+                job.source
+            );
+        }
+    }
+
+    // Both tenants went through one registry entry.
+    let stats = protocol::roundtrip(&addr, &protocol::stats_request()).expect("stats");
+    let preds = stats.get("predictors").and_then(Value::as_arr).expect("predictors");
+    assert_eq!(preds.len(), 1, "stats: {}", stats.render());
+    assert_eq!(preds[0].get("key").and_then(Value::as_str), Some("table/seq=16"));
+    assert_eq!(preds[0].get("jobs").and_then(Value::as_u64), Some(2));
+    let jobs = stats.get("jobs").expect("jobs counts");
+    assert_eq!(jobs.get("done").and_then(Value::as_u64), Some(2));
+    stop_server(&addr, handle);
+}
+
+#[test]
+fn streaming_submit_emits_events_and_final_report() {
+    let (addr, handle) = start_server(quiet_opts());
+    let job = bench_job(PredictorSpec::table(16), 1);
+
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    stream.write_all(protocol::submit_request(&job, true).as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let admit = Value::parse(line.trim_end()).expect("admission response");
+    assert_eq!(admit.get("ok").and_then(Value::as_bool), Some(true));
+    let id = admit.get("id").and_then(Value::as_u64).expect("id");
+
+    let mut saw_lifecycle = false;
+    loop {
+        line.clear();
+        assert_ne!(reader.read_line(&mut line).unwrap(), 0, "stream ended before done event");
+        let ev = Value::parse(line.trim_end()).expect("event line");
+        assert_eq!(ev.get("id").and_then(Value::as_u64), Some(id));
+        match ev.get("event").and_then(Value::as_str) {
+            Some("state") | Some("progress") => saw_lifecycle = true,
+            Some("done") => {
+                let report = ev.get("report").expect("report in done event");
+                assert_eq!(scrubbed(report), scrubbed(&direct_report(&job)));
+                break;
+            }
+            other => panic!("unexpected event {other:?}: {}", line.trim_end()),
+        }
+    }
+    assert!(saw_lifecycle, "no state/progress events before done");
+    stop_server(&addr, handle);
+}
+
+#[test]
+fn mid_stream_disconnect_does_not_kill_the_job_or_daemon() {
+    let (addr, handle) = start_server(quiet_opts());
+    let job = bench_job(PredictorSpec::table(16), 4);
+
+    let id = {
+        let mut stream = TcpStream::connect(&addr).expect("connect");
+        stream.write_all(protocol::submit_request(&job, true).as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let admit = Value::parse(line.trim_end()).expect("admission response");
+        admit.get("id").and_then(Value::as_u64).expect("id")
+        // Connection dropped here, mid-event-stream.
+    };
+
+    // The job still runs to completion and the daemon still answers.
+    let status = wait_done(&addr, id);
+    assert!(status.get("report").is_some());
+    let ping = protocol::roundtrip(&addr, &protocol::ping_request()).expect("ping");
+    assert_eq!(ping.get("ok").and_then(Value::as_bool), Some(true));
+    stop_server(&addr, handle);
+}
+
+#[test]
+fn wire_protocol_rejects_garbage_without_dying() {
+    let (addr, handle) = start_server(quiet_opts());
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut send = |line: &str| -> Value {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Value::parse(resp.trim_end()).unwrap_or_else(|e| panic!("bad response {resp:?}: {e}"))
+    };
+
+    // Every case is a named error with a stable code, all down one
+    // connection that stays usable throughout.
+    for (line, code, needle) in [
+        ("{nope", "bad_request", "json:"),
+        ("[1, 2]", "bad_request", "expected a JSON object"),
+        ("{\"cmd\": \"fly\"}", "bad_request", "unknown cmd"),
+        ("{\"cmd\": \"submit\", \"job\": {\"sauce\": 1}}", "bad_job", "unknown field \"sauce\""),
+        ("{\"cmd\": \"status\", \"id\": 99}", "not_found", "no job 99"),
+    ] {
+        let v = send(line);
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false), "line {line}");
+        assert_eq!(v.get("code").and_then(Value::as_str), Some(code), "line {line}");
+        let err = v.get("error").and_then(Value::as_str).unwrap_or("");
+        assert!(err.contains(needle), "line {line}: error {err:?}");
+    }
+
+    // A job that parses but names a bogus benchmark is a bad_job.
+    let bogus = JobRequest::new(
+        JobSource::Bench { name: "not-a-bench".into(), n: 10 },
+        PredictorSpec::table(8),
+    );
+    let v = send(&protocol::submit_request(&bogus, false));
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+    assert_eq!(v.get("code").and_then(Value::as_str), Some("bad_job"));
+
+    // Oversized request line: named rejection, connection survives.
+    let huge = "x".repeat(protocol::MAX_LINE + 1024);
+    let v = send(&huge);
+    assert_eq!(v.get("code").and_then(Value::as_str), Some("line_too_long"));
+    let v = send(&protocol::ping_request());
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+    stop_server(&addr, handle);
+}
+
+#[test]
+fn full_queue_rejects_with_named_error() {
+    // Capacity zero: every submit bounces with queue_full before any
+    // predictor work happens.
+    let (addr, handle) = start_server(ServerOptions { queue_capacity: 0, ..quiet_opts() });
+    let job = bench_job(PredictorSpec::table(16), 1);
+    let v = protocol::roundtrip(&addr, &protocol::submit_request(&job, false)).expect("submit");
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+    assert_eq!(v.get("code").and_then(Value::as_str), Some("queue_full"));
+    assert!(
+        v.get("error").and_then(Value::as_str).unwrap_or("").contains("queue full"),
+        "error: {}",
+        v.render()
+    );
+    stop_server(&addr, handle);
+}

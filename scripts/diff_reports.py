@@ -1,0 +1,54 @@
+#!/usr/bin/env python3
+"""Diff two SimReport JSON files, ignoring timing-derived fields.
+
+Usage: python3 scripts/diff_reports.py A.json B.json
+
+The job server's equivalence contract is that a daemon-run job returns
+the same SimReport as a direct in-process ``Simulation::run()``. Wall
+clock, MIPS, and the engine's seconds/idle fractions legitimately vary
+between runs; everything else (instructions, cycles, CPI, windows,
+deterministic engine stats) must match exactly. Exit 0 on match, 1 with
+a per-key diff otherwise.
+
+This is the Python twin of the ``scrubbed()`` helper in
+``rust/tests/server_e2e.rs`` — keep the two key lists in sync.
+"""
+
+import json
+import sys
+
+TIMING_KEYS = ("wall_seconds", "mips")
+ENGINE_TIMING_KEYS = ("predict_seconds", "engine_seconds", "predictor_idle")
+
+
+def scrubbed(report):
+    out = dict(report)
+    for key in TIMING_KEYS:
+        out.pop(key, None)
+    if isinstance(out.get("engine"), dict):
+        engine = dict(out["engine"])
+        for key in ENGINE_TIMING_KEYS:
+            engine.pop(key, None)
+        out["engine"] = engine
+    return out
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__.strip().splitlines()[2], file=sys.stderr)
+        return 2
+    with open(argv[1]) as f:
+        a = scrubbed(json.load(f))
+    with open(argv[2]) as f:
+        b = scrubbed(json.load(f))
+    if a == b:
+        print(f"reports match ({argv[1]} == {argv[2]}, timing fields excluded)")
+        return 0
+    for key in sorted(set(a) | set(b)):
+        if a.get(key) != b.get(key):
+            print(f"MISMATCH {key}: {a.get(key)!r} != {b.get(key)!r}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
