@@ -1,0 +1,170 @@
+//! Bench: feature-encode throughput — the gather half of the batching
+//! engine, isolated from prediction. Replays a DES trace through a warm
+//! `ContextTracker` and measures how fast each encoding path turns
+//! instructions into `seq x NUM_FEATURES` model inputs:
+//!
+//! * `encode_legacy_seqS` — per-slot AoS encoding (`encode_input`), one
+//!   contiguous 50-float row per timestep, rebuilt from the context
+//!   deque every call.
+//! * `encode_soa_seqS` — the reusable structure-of-arrays panels
+//!   (`SoaBatch::encode_into`) the engine gathers with, interleaved into
+//!   the same AoS layout at the end. Bit-identical output (asserted).
+//!
+//! "MIPS" here is millions of *encoded instructions* per second, so the
+//! rows gate on the same scale as the engine bench.
+//!
+//! Flags / env:
+//! * `--quick` (or `SIMNET_BENCH_QUICK=1`) — small trace + trimmed sweep
+//!   for the CI bench-smoke job.
+//! * `--json PATH` — additionally write the results as JSON
+//!   (`BENCH_encode.json` in CI; compared against `bench/baseline.json`
+//!   by `scripts/compare_bench.py`).
+//! * `SIMNET_BENCH_N` — override the instruction count.
+
+mod common;
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use simnet::des::{simulate, SimConfig};
+use simnet::features::soa::SoaBatch;
+use simnet::features::{ContextTracker, NUM_FEATURES};
+use simnet::stats::Table;
+use simnet::trace::TraceRecord;
+use simnet::workload::find;
+
+/// Batch slots cycled through while replaying — matches the engine's
+/// panel-reuse pattern (one SoA panel set serving many slots).
+const SLOTS: usize = 64;
+
+struct Row {
+    name: String,
+    seq: usize,
+    mips: f64,
+}
+
+/// Replay the trace once, encoding every instruction into its batch slot
+/// and then retiring it with its recorded latencies (the ground-truth
+/// replay the engine performs with predicted latencies). Returns
+/// (seconds, checksum); the checksum pins the two paths to each other.
+fn replay<F>(recs: &[TraceRecord], cfg: &SimConfig, width: usize, mut encode: F) -> (f64, f64)
+where
+    F: FnMut(&ContextTracker, &TraceRecord, usize, &mut [f32]),
+{
+    let mut tracker = ContextTracker::new(cfg);
+    let mut batch = vec![0.0f32; SLOTS * width];
+    let mut checksum = 0.0f64;
+    let t0 = Instant::now();
+    for (i, rec) in recs.iter().enumerate() {
+        let slot = i % SLOTS;
+        let out = &mut batch[slot * width..(slot + 1) * width];
+        encode(&tracker, rec, slot, out);
+        checksum += (out[0] + out[width - 1]) as f64;
+        let s_lat = if rec.inst.is_store() { rec.s_lat.max(rec.e_lat + 1) } else { 0 };
+        tracker.push(&rec.inst, &rec.hist, rec.f_lat, rec.e_lat.max(1), s_lat);
+    }
+    (t0.elapsed().as_secs_f64(), checksum)
+}
+
+/// Run both encode paths at one sequence length, `reps` passes each
+/// (best-of, to shrug off scheduler noise), and return (legacy, soa).
+fn run_seq(recs: &[TraceRecord], cfg: &SimConfig, seq: usize, reps: usize) -> (Row, Row) {
+    let width = seq * NUM_FEATURES;
+    let n = recs.len() as f64;
+    let mips = |secs: f64| n / secs.max(1e-12) / 1e6;
+
+    let mut legacy_best = 0.0f64;
+    let mut legacy_sum = 0.0f64;
+    for _ in 0..reps {
+        let (secs, sum) = replay(recs, cfg, width, |t, rec, _slot, out| {
+            t.encode_input(&rec.inst, &rec.hist, seq, out)
+        });
+        legacy_best = legacy_best.max(mips(secs));
+        legacy_sum = sum;
+    }
+
+    let mut soa = SoaBatch::new(SLOTS, seq);
+    let mut soa_best = 0.0f64;
+    let mut soa_sum = 0.0f64;
+    for _ in 0..reps {
+        let (secs, sum) = replay(recs, cfg, width, |t, rec, slot, out| {
+            soa.encode_into(t, &rec.inst, &rec.hist, slot, out)
+        });
+        soa_best = soa_best.max(mips(secs));
+        soa_sum = sum;
+    }
+    assert_eq!(
+        legacy_sum.to_bits(),
+        soa_sum.to_bits(),
+        "SoA encode must stay bit-identical to legacy at seq {seq}"
+    );
+
+    (
+        Row { name: format!("encode_legacy_seq{seq}"), seq, mips: legacy_best },
+        Row { name: format!("encode_soa_seq{seq}"), seq, mips: soa_best },
+    )
+}
+
+fn write_json(path: &str, n: u64, quick: bool, rows: &[Row]) {
+    let mut s = String::from("{\n");
+    let _ = writeln!(s, "  \"bench\": \"encode\",");
+    let _ = writeln!(s, "  \"n\": {n},");
+    let _ = writeln!(s, "  \"quick\": {quick},");
+    let _ = writeln!(s, "  \"slots\": {SLOTS},");
+    let _ = writeln!(s, "  \"configs\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(
+            s,
+            "    {{\"name\": \"{}\", \"seq\": {}, \"mips\": {:.4}}}{comma}",
+            r.name, r.seq, r.mips
+        );
+    }
+    let _ = writeln!(s, "  ]");
+    s.push_str("}\n");
+    std::fs::write(path, s).expect("write bench json");
+    println!("\nwrote {path}");
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let quick = argv.iter().any(|a| a == "--quick")
+        || std::env::var("SIMNET_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
+
+    let n = common::bench_n(if quick { 60_000 } else { 300_000 });
+    let cfg = SimConfig::default_o3();
+    let b = find("xz").unwrap();
+    let mut recs: Vec<TraceRecord> = Vec::new();
+    simulate(&cfg, b.workload(1).stream(), n, |e| recs.push(TraceRecord::from(e)));
+
+    let seqs: &[usize] = if quick { &[16] } else { &[8, 16, 32] };
+    let reps = if quick { 2 } else { 3 };
+
+    common::hr(&format!(
+        "feature-encode throughput: legacy AoS vs SoA panels \
+         ({n} instructions, {SLOTS} slots, best of {reps})"
+    ));
+    let mut table = Table::new(&["seq", "legacy M-enc/s", "SoA M-enc/s", "speedup"]);
+    let mut rows = Vec::new();
+    for &seq in seqs {
+        let (legacy, soa) = run_seq(&recs, &cfg, seq, reps);
+        table.row(vec![
+            seq.to_string(),
+            format!("{:.2}", legacy.mips),
+            format!("{:.2}", soa.mips),
+            format!("{:.2}x", soa.mips / legacy.mips.max(1e-12)),
+        ]);
+        rows.push(legacy);
+        rows.push(soa);
+    }
+    print!("{}", table.render());
+
+    if let Some(path) = json_path {
+        write_json(&path, n, quick, &rows);
+    }
+}

@@ -24,9 +24,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::EngineOptions;
 use crate::des::{BpChoice, SimConfig};
 use crate::predictor::LatencyPredictor;
-use crate::reports::{des_trace, REFERENCE_SEED};
+use crate::reports::REFERENCE_SEED;
 use crate::server::json::{check_keys, Value};
-use crate::trace::{TraceReader, TraceRecord};
+use crate::trace::{InputStats, TraceRecord, TraceSource};
 use crate::workload::find;
 
 use super::{ExecMode, PredictorSpec, SimReport, Simulation, WeightsSource};
@@ -45,6 +45,17 @@ pub enum JobSource {
     },
     /// Replay an `.smt` trace file readable by the server process.
     TraceFile(PathBuf),
+}
+
+impl JobSource {
+    /// The unified [`TraceSource`] this wire source resolves through —
+    /// `mmap` is the job's read-path switch, applied to trace files.
+    pub fn to_trace_source(&self, mmap: bool) -> TraceSource<'static> {
+        match self {
+            JobSource::Bench { name, n } => TraceSource::bench(name.clone(), *n),
+            JobSource::TraceFile(path) => TraceSource::File { path: path.clone(), mmap },
+        }
+    }
 }
 
 /// A machine configuration as data: a named base plus the same overrides
@@ -170,6 +181,10 @@ pub struct JobRequest {
     pub engine: EngineOptions,
     /// Admission priority class.
     pub priority: Priority,
+    /// Whether trace-file sources may take the zero-copy mmap read path
+    /// (default: true; targets without the syscall shim fall back to the
+    /// buffered reader regardless).
+    pub mmap: bool,
 }
 
 /// Accepted top-level keys of the job JSON object, in canonical order.
@@ -184,6 +199,7 @@ const JOB_KEYS: &[&str] = &[
     "input_seed",
     "engine",
     "priority",
+    "mmap",
 ];
 
 impl JobRequest {
@@ -202,6 +218,7 @@ impl JobRequest {
             input_seed: REFERENCE_SEED,
             engine: EngineOptions::default(),
             priority: Priority::Normal,
+            mmap: true,
         }
     }
 
@@ -288,11 +305,8 @@ impl JobRequest {
             .window(self.window)
             .cfg_feature(self.cfg_feature)
             .input_seed(self.input_seed)
-            .engine(self.engine);
-        sim = match &self.source {
-            JobSource::Bench { name, n } => sim.bench(name.clone(), *n),
-            JobSource::TraceFile(path) => sim.trace_file(path.clone()),
-        };
+            .engine(self.engine)
+            .source(self.source.to_trace_source(self.mmap));
         if let Some(c) = counter {
             sim = sim.progress(c);
         }
@@ -300,25 +314,18 @@ impl JobRequest {
     }
 
     /// Materialize the trace records this job simulates, plus the
-    /// reference CPI and bench name for its report — the pieces the
-    /// server's co-batching path feeds into one shared engine.
+    /// reference CPI, bench name, and input byte accounting for its
+    /// report — the pieces the server's co-batching path feeds into one
+    /// shared engine. Resolved through the same
+    /// [`TraceSource`] code path as [`super::Simulation::run`].
     pub(crate) fn materialize(
         &self,
         cfg: &SimConfig,
-    ) -> Result<(Vec<TraceRecord>, Option<f64>, Option<String>)> {
-        match &self.source {
-            JobSource::Bench { name, n } => {
-                let b = find(name).ok_or_else(|| anyhow!("unknown benchmark {name}"))?;
-                let (recs, stats) = des_trace(cfg, &b, *n, self.input_seed);
-                Ok((recs, Some(stats.cpi()), Some(name.clone())))
-            }
-            JobSource::TraceFile(path) => {
-                let recs: Vec<TraceRecord> =
-                    TraceReader::open(path)?.collect::<std::io::Result<_>>()?;
-                let cpi = super::trace_reference_cpi(&recs);
-                Ok((recs, Some(cpi), None))
-            }
-        }
+    ) -> Result<(Vec<TraceRecord>, Option<f64>, Option<String>, InputStats)> {
+        let source = self.source.to_trace_source(self.mmap);
+        let (recs, cpi, bench, input) =
+            super::resolve_source(&source, cfg, self.input_seed, true)?;
+        Ok((recs.into_owned(), cpi, bench, input))
     }
 
     /// Render the request as one single-line JSON object (the wire form;
@@ -391,6 +398,7 @@ impl JobRequest {
             ("input_seed".into(), Value::Num(self.input_seed as f64)),
             ("engine".into(), engine),
             ("priority".into(), Value::Str(self.priority.as_str().into())),
+            ("mmap".into(), Value::Bool(self.mmap)),
         ])
     }
 
@@ -436,6 +444,9 @@ impl JobRequest {
         if let Some(p) = v.get("priority") {
             let s = p.as_str().ok_or_else(|| anyhow!("job: \"priority\" must be a string"))?;
             job.priority = Priority::parse(s)?;
+        }
+        if let Some(m) = v.get("mmap") {
+            job.mmap = m.as_bool().ok_or_else(|| anyhow!("job: \"mmap\" must be a bool"))?;
         }
         Ok(job)
     }
@@ -631,6 +642,7 @@ mod tests {
         job.input_seed = 7;
         job.engine.target_batch = 8;
         job.priority = Priority::High;
+        job.mmap = false;
         job
     }
 
@@ -644,6 +656,7 @@ mod tests {
         assert_eq!(back.priority, Priority::High);
         assert_eq!(back.config, job.config);
         assert_eq!(back.predictor_key(), job.predictor_key());
+        assert!(!back.mmap, "mmap switch must survive the wire");
 
         // Minimal form: only source + predictor, everything else default.
         let small = JobRequest::new(

@@ -56,11 +56,12 @@ pub mod job;
 pub mod report;
 pub mod spec;
 
+use std::borrow::Cow;
 use std::path::PathBuf;
 use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 pub use report::{ExecMode, SimReport};
 pub use spec::{export_name, Backend, PredictorSpec, WeightsSource};
@@ -72,19 +73,8 @@ use crate::coordinator::{
 use crate::des::SimConfig;
 use crate::predictor::LatencyPredictor;
 use crate::reports::{des_trace, REFERENCE_SEED};
-use crate::trace::{TraceReader, TraceRecord};
+use crate::trace::{load_trace, InputStats, TraceRecord, TraceSource};
 use crate::workload::find;
-
-/// Where a run's instruction records come from.
-enum Source<'a> {
-    Unset,
-    /// Caller-held trace records (no copy).
-    Records(&'a [TraceRecord]),
-    /// Benchmark run through the reference DES for `n` instructions.
-    Bench { name: String, n: u64 },
-    /// An `.smt` trace file.
-    TraceFile(PathBuf),
-}
 
 /// Where a run's predictor comes from.
 enum Predictor<'a> {
@@ -115,7 +105,7 @@ enum Predictor<'a> {
 /// # Ok::<(), anyhow::Error>(())
 /// ```
 pub struct Simulation<'a> {
-    source: Source<'a>,
+    source: Option<TraceSource<'a>>,
     cfg: Option<&'a SimConfig>,
     predictor: Predictor<'a>,
     label: Option<String>,
@@ -125,6 +115,7 @@ pub struct Simulation<'a> {
     window: u64,
     cfg_feature: f32,
     seed: u64,
+    mmap: bool,
     progress: Option<Arc<AtomicU64>>,
 }
 
@@ -139,7 +130,7 @@ impl<'a> Simulation<'a> {
     /// the reference input seed; input and predictor must still be set.
     pub fn new() -> Self {
         Simulation {
-            source: Source::Unset,
+            source: None,
             cfg: None,
             predictor: Predictor::Unset,
             label: None,
@@ -149,28 +140,44 @@ impl<'a> Simulation<'a> {
             window: 0,
             cfg_feature: 0.0,
             seed: REFERENCE_SEED,
+            mmap: true,
             progress: None,
         }
     }
 
+    /// Set the input from a [`TraceSource`] value — the unified input
+    /// shape shared with the CLI and the job server. The convenience
+    /// builders below ([`records`](Self::records), [`bench`](Self::bench),
+    /// [`trace_file`](Self::trace_file)) are thin wrappers over this.
+    pub fn source(mut self, source: TraceSource<'a>) -> Self {
+        self.source = Some(source);
+        self
+    }
+
     /// Simulate caller-held trace records (the reference CPI is derived
     /// from the records' own fetch latencies).
-    pub fn records(mut self, records: &'a [TraceRecord]) -> Self {
-        self.source = Source::Records(records);
-        self
+    pub fn records(self, records: &'a [TraceRecord]) -> Self {
+        self.source(TraceSource::records(records))
     }
 
     /// Run the reference DES over benchmark `name` for `n` instructions
     /// and simulate the resulting trace (the DES CPI becomes the
     /// reference).
-    pub fn bench(mut self, name: impl Into<String>, n: u64) -> Self {
-        self.source = Source::Bench { name: name.into(), n };
-        self
+    pub fn bench(self, name: impl Into<String>, n: u64) -> Self {
+        self.source(TraceSource::bench(name, n))
     }
 
     /// Simulate an `.smt` trace file.
-    pub fn trace_file(mut self, path: impl Into<PathBuf>) -> Self {
-        self.source = Source::TraceFile(path.into());
+    pub fn trace_file(self, path: impl Into<PathBuf>) -> Self {
+        self.source(TraceSource::file(path))
+    }
+
+    /// Whether trace files may take the zero-copy mmap read path
+    /// (default: true). ANDed with the per-[`TraceSource::File`] flag, so
+    /// either side can force the buffered path; targets without the
+    /// syscall shim fall back regardless.
+    pub fn mmap(mut self, on: bool) -> Self {
+        self.mmap = on;
         self
     }
 
@@ -266,6 +273,7 @@ impl<'a> Simulation<'a> {
             window,
             cfg_feature,
             seed,
+            mmap,
             progress,
         } = self;
 
@@ -279,28 +287,13 @@ impl<'a> Simulation<'a> {
             }
         };
 
-        // Holds records materialized by the bench / trace-file sources;
-        // deferred so the caller-records path never allocates.
-        let owned: Vec<TraceRecord>;
-        let (records, des_cpi, bench) = match source {
-            Source::Unset => {
-                bail!("no input: call .records(..), .bench(..), or .trace_file(..)")
-            }
-            Source::Records(r) => (r, Some(trace_reference_cpi(r)), None),
-            Source::Bench { name, n } => {
-                let b = find(&name).ok_or_else(|| anyhow!("unknown benchmark {name}"))?;
-                let (recs, stats) = des_trace(cfg, &b, n, seed);
-                owned = recs;
-                (&owned[..], Some(stats.cpi()), Some(name))
-            }
-            Source::TraceFile(path) => {
-                let recs: Vec<TraceRecord> =
-                    TraceReader::open(&path)?.collect::<std::io::Result<_>>()?;
-                owned = recs;
-                let cpi = trace_reference_cpi(&owned);
-                (&owned[..], Some(cpi), None)
-            }
-        };
+        let source = source.ok_or_else(|| {
+            anyhow!("no input: call .records(..), .bench(..), .trace_file(..), or .source(..)")
+        })?;
+        // resolve_source borrows the caller's records straight through
+        // (Cow::Borrowed), so the caller-records path never allocates.
+        let (records, des_cpi, bench, input) = resolve_source(&source, cfg, seed, mmap)?;
+        let records: &[TraceRecord] = &records;
 
         let mut built: Option<Box<dyn LatencyPredictor>> = None;
         let (predictor, spec_label): (&mut dyn LatencyPredictor, String) = match predictor {
@@ -351,7 +344,38 @@ impl<'a> Simulation<'a> {
             outcome,
             engine: stats,
             des_cpi,
+            input,
         })
+    }
+}
+
+/// Resolve a [`TraceSource`] into the records to simulate, the reference
+/// CPI, the bench name (when the source was a benchmark), and the input
+/// byte accounting — the one code path behind the builder, the CLI, and
+/// the job server. `mmap` is the session-level switch; a
+/// [`TraceSource::File`] takes the zero-copy path only when both its own
+/// flag and the session flag allow it.
+pub(crate) fn resolve_source<'a>(
+    source: &'a TraceSource<'a>,
+    cfg: &SimConfig,
+    seed: u64,
+    mmap: bool,
+) -> Result<(Cow<'a, [TraceRecord]>, Option<f64>, Option<String>, InputStats)> {
+    match source {
+        TraceSource::Records(r) => {
+            Ok((Cow::Borrowed(*r), Some(trace_reference_cpi(r)), None, InputStats::default()))
+        }
+        TraceSource::Bench { name, n } => {
+            let b = find(name).ok_or_else(|| anyhow!("unknown benchmark {name}"))?;
+            let (recs, stats) = des_trace(cfg, &b, *n, seed);
+            Ok((Cow::Owned(recs), Some(stats.cpi()), Some(name.clone()), InputStats::default()))
+        }
+        TraceSource::File { path, mmap: file_mmap } => {
+            let (recs, input) = load_trace(path, mmap && *file_mmap)
+                .with_context(|| format!("open {}", path.display()))?;
+            let cpi = trace_reference_cpi(&recs);
+            Ok((Cow::Owned(recs), Some(cpi), None, input))
+        }
     }
 }
 

@@ -9,6 +9,7 @@
 //! top-level objects without duplicating the format.
 
 use crate::coordinator::{EngineStats, SimOutcome};
+use crate::trace::InputStats;
 
 /// How [`super::Simulation::run`] executed the job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,6 +71,10 @@ pub struct SimReport {
     /// Reference CPI: the DES's when the input was a benchmark, the
     /// trace's own fetch-latency CPI when the input was a trace.
     pub des_cpi: Option<f64>,
+    /// Input byte accounting: bytes served zero-copy through the mmap
+    /// path vs staged through buffered `read` copies (both zero for
+    /// in-memory and bench sources).
+    pub input: InputStats,
 }
 
 impl SimReport {
@@ -109,6 +114,8 @@ impl SimReport {
             ),
             ("mips", json_f(self.mips())),
             ("wall_seconds", json_f(self.outcome.wall_seconds)),
+            ("bytes_mapped", self.input.bytes_mapped.to_string()),
+            ("bytes_copied", self.input.bytes_copied.to_string()),
         ];
         let windows: Vec<String> =
             self.outcome.windows.iter().map(|(n, c)| format!("[{n}, {c}]")).collect();
@@ -119,20 +126,23 @@ impl SimReport {
                 None => "null".into(),
                 Some(s) => format!(
                     "{{\"batches\": {}, \"slots\": {}, \"target_batch\": {}, \
-                     \"starved\": {}, \"subtraces\": {}, \"encode_threads\": {}, \
-                     \"pipeline_depth\": {}, \"mean_occupancy\": {}, \"fill\": {}, \
-                     \"predictor_idle\": {}, \"predict_seconds\": {}, \
+                     \"starved\": {}, \"filled\": {}, \"subtraces\": {}, \
+                     \"encode_threads\": {}, \"pipeline_depth\": {}, \
+                     \"mean_occupancy\": {}, \"fill\": {}, \"predictor_idle\": {}, \
+                     \"encode_seconds\": {}, \"predict_seconds\": {}, \
                      \"engine_seconds\": {}}}",
                     s.batches,
                     s.slots,
                     s.target_batch,
                     s.starved,
+                    s.filled,
                     s.subtraces,
                     s.encode_threads,
                     s.pipeline_depth,
                     json_f(s.mean_occupancy()),
                     json_f(s.fill_ratio()),
                     json_f(s.predictor_idle()),
+                    json_f(s.encode_seconds),
                     json_f(s.predict_seconds),
                     json_f(s.engine_seconds),
                 ),

@@ -77,6 +77,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::des::SimConfig;
+use crate::features::soa::SoaBatch;
 use crate::features::{ContextTracker, NUM_FEATURES};
 use crate::predictor::LatencyPredictor;
 use crate::trace::TraceRecord;
@@ -153,12 +154,21 @@ pub struct EngineStats {
     pub target_batch: usize,
     /// Batches that went out with fewer slots than the target.
     pub starved: u64,
+    /// Batches that went out exactly at the target size
+    /// (`batches - starved`; schedule-derived, so identical across the
+    /// serial, pipelined, and forked loops).
+    pub filled: u64,
     /// Sub-traces created across all jobs.
     pub subtraces: u64,
     /// Encode/scatter worker threads the run used (1 = serial loop).
     pub encode_threads: usize,
     /// Batch buffers in flight (1 = no encode/predict overlap).
     pub pipeline_depth: usize,
+    /// Wall seconds spent filling and interleaving the SoA encode panels.
+    /// Serial runs report the caller thread's total; threaded runs report
+    /// the slowest worker's encode time (the critical path), mirroring
+    /// `predict_seconds`.
+    pub encode_seconds: f64,
     /// Wall seconds spent inside `LatencyPredictor::predict` calls. With
     /// forked per-worker handles this is the slowest worker's predict
     /// time — the critical path — so derived throughput stays meaningful.
@@ -388,7 +398,9 @@ fn finish_sub(sub: &mut SubTrace<'_>) {
 }
 
 /// The single-threaded engine loop: gather → predict → scatter, one
-/// chunk of at most `cap` slots at a time.
+/// chunk of at most `cap` slots at a time. The gather stage fills the
+/// reusable SoA panels ([`SoaBatch`]) and interleaves them into the AoS
+/// predictor batch — bit-identical to encoding each slot directly.
 fn serial_loop(
     predictor: &mut dyn LatencyPredictor,
     subs: &mut [SubTrace<'_>],
@@ -399,6 +411,7 @@ fn serial_loop(
 ) -> Result<()> {
     let mut active: Vec<usize> = (0..subs.len()).filter(|&i| !subs[i].records.is_empty()).collect();
     let mut batch = vec![0.0f32; cap * width];
+    let mut soa = SoaBatch::new(cap, seq);
     while !active.is_empty() {
         // One round advances every active sub-trace by one instruction,
         // in chunks of at most `cap` slots.
@@ -406,16 +419,19 @@ fn serial_loop(
         while base < active.len() {
             let take = cap.min(active.len() - base);
             // Gather: encode the next instruction of each slot.
+            let te = Instant::now();
             for k in 0..take {
                 let sub = &subs[active[base + k]];
                 let rec = &sub.records[sub.pos];
-                sub.tracker.encode_input(
+                soa.encode_into(
+                    &sub.tracker,
                     &rec.inst,
                     &rec.hist,
-                    seq,
+                    k,
                     &mut batch[k * width..(k + 1) * width],
                 );
             }
+            stats.encode_seconds += te.elapsed().as_secs_f64();
             // One shared inference across jobs and sub-traces.
             let t = Instant::now();
             let preds = predictor.predict(&batch[..take * width], take)?;
@@ -424,6 +440,8 @@ fn serial_loop(
             stats.slots += take as u64;
             if take < cap {
                 stats.starved += 1;
+            } else {
+                stats.filled += 1;
             }
             // Scatter: demux predictions back to each slot's sub-trace.
             for k in 0..take {
@@ -584,14 +602,18 @@ struct WorkerCtx<'a> {
     lens: Arc<Vec<usize>>,
     bufs: Vec<BufPtr>,
     depth: usize,
+    cap: usize,
     seq: usize,
     width: usize,
 }
 
-fn encode_worker<'a>(mut cx: WorkerCtx<'a>) -> (usize, Vec<SubTrace<'a>>) {
+fn encode_worker<'a>(mut cx: WorkerCtx<'a>) -> (usize, Vec<SubTrace<'a>>, f64) {
     let mut sentinel = PanicSentinel { tx: cx.done_tx.clone(), armed: true };
     let mut cur_round = 0usize;
     let mut active: Vec<usize> = (0..cx.lens.len()).filter(|&g| cx.lens[g] > 0).collect();
+    // Private SoA panels, reused for every chunk this worker encodes.
+    let mut soa = SoaBatch::new(cx.cap, cx.seq);
+    let mut encode_seconds = 0.0f64;
     while let Ok(cmd) = cx.rx.recv() {
         match cmd {
             Cmd::Encode { q } => {
@@ -606,6 +628,7 @@ fn encode_worker<'a>(mut cx: WorkerCtx<'a>) -> (usize, Vec<SubTrace<'a>>) {
                     active.retain(|&g| lens[g] > r);
                 }
                 let buf = cx.bufs[q % cx.depth];
+                let te = Instant::now();
                 for s in d.base..d.base + d.take {
                     let g = active[s];
                     if g % cx.workers == cx.w {
@@ -620,9 +643,10 @@ fn encode_worker<'a>(mut cx: WorkerCtx<'a>) -> (usize, Vec<SubTrace<'a>>) {
                                 cx.width,
                             )
                         };
-                        sub.tracker.encode_input(&rec.inst, &rec.hist, cx.seq, out);
+                        soa.encode_into(&sub.tracker, &rec.inst, &rec.hist, s - d.base, out);
                     }
                 }
+                encode_seconds += te.elapsed().as_secs_f64();
                 // Coordinator may be gone on an error path; just exit then.
                 if cx.done_tx.send(q).is_err() {
                     break;
@@ -648,7 +672,7 @@ fn encode_worker<'a>(mut cx: WorkerCtx<'a>) -> (usize, Vec<SubTrace<'a>>) {
     // A recv error means the coordinator bailed early; return the
     // sub-traces as-is — the caller is about to discard them.
     sentinel.armed = false;
-    (cx.w, cx.subs)
+    (cx.w, cx.subs, encode_seconds)
 }
 
 /// The pipelined engine loop. Runs the exact schedule of [`serial_loop`]
@@ -687,7 +711,7 @@ fn pipelined_loop<'a>(
     let mut buf_store: Vec<Vec<f32>> = (0..depth).map(|_| vec![0.0f32; cap * width]).collect();
     let buf_ptrs: Vec<BufPtr> = buf_store.iter_mut().map(|b| BufPtr(b.as_mut_ptr())).collect();
 
-    let collected = thread::scope(|scope| -> Result<Vec<(usize, Vec<SubTrace<'a>>)>> {
+    let collected = thread::scope(|scope| -> Result<Vec<(usize, Vec<SubTrace<'a>>, f64)>> {
         let (done_tx, done_rx) = mpsc::channel::<usize>();
         let mut cmd_txs: Vec<mpsc::Sender<Cmd>> = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
@@ -704,6 +728,7 @@ fn pipelined_loop<'a>(
                 lens: Arc::clone(&lens),
                 bufs: buf_ptrs.clone(),
                 depth,
+                cap,
                 seq,
                 width,
             };
@@ -758,6 +783,8 @@ fn pipelined_loop<'a>(
             stats.slots += d.take as u64;
             if d.take < cap {
                 stats.starved += 1;
+            } else {
+                stats.filled += 1;
             }
             let preds = Arc::new(preds);
             for tx in &cmd_txs {
@@ -780,13 +807,17 @@ fn pipelined_loop<'a>(
     drop(buf_ptrs);
     drop(buf_store);
 
-    // Reassemble global submission order (g = local * workers + w).
+    // Reassemble global submission order (g = local * workers + w) and
+    // charge the slowest worker's encode time (the critical path).
     let mut out: Vec<Option<SubTrace<'a>>> = (0..total).map(|_| None).collect();
-    for (w, mine) in collected {
+    let mut encode_crit = 0.0f64;
+    for (w, mine, encode_secs) in collected {
+        encode_crit = encode_crit.max(encode_secs);
         for (local, sub) in mine.into_iter().enumerate() {
             out[local * workers + w] = Some(sub);
         }
     }
+    stats.encode_seconds += encode_crit;
     Ok(out.into_iter().map(|s| s.expect("sub-trace lost in pipeline")).collect())
 }
 
@@ -829,14 +860,16 @@ struct ForkedCtx<'a> {
 /// One forked worker: walks the global chunk schedule and, per chunk,
 /// encodes its owned slots into a private batch, predicts them on its own
 /// handle, and scatters — fully independent of every other worker.
-/// Returns the shard, the handle's served count, and its predict wall
-/// time.
-fn forked_worker<'a>(mut cx: ForkedCtx<'a>) -> Result<(usize, Vec<SubTrace<'a>>, u64, f64)> {
+/// Returns the shard, the handle's served count, and its predict and
+/// encode wall times.
+fn forked_worker<'a>(mut cx: ForkedCtx<'a>) -> Result<(usize, Vec<SubTrace<'a>>, u64, f64, f64)> {
     let mut cur_round = 0usize;
     let mut active: Vec<usize> = (0..cx.lens.len()).filter(|&g| cx.lens[g] > 0).collect();
     let mut batch = vec![0.0f32; cx.cap * cx.width];
+    let mut soa = SoaBatch::new(cx.cap, cx.seq);
     let mut owned: Vec<usize> = Vec::with_capacity(cx.cap);
     let mut predict_seconds = 0.0f64;
+    let mut encode_seconds = 0.0f64;
     for q in 0..cx.sched.total_chunks {
         let d = cx.sched.desc(q);
         // Advance the replicated active list to the chunk's round (chunks
@@ -859,16 +892,19 @@ fn forked_worker<'a>(mut cx: ForkedCtx<'a>) -> Result<(usize, Vec<SubTrace<'a>>,
         }
         // Gather the owned slots contiguously; the chunk cap bounds the
         // private batch exactly as it bounds the serial loop's.
+        let te = Instant::now();
         for (k, &local) in owned.iter().enumerate() {
             let sub = &cx.subs[local];
             let rec = &sub.records[sub.pos];
-            sub.tracker.encode_input(
+            soa.encode_into(
+                &sub.tracker,
                 &rec.inst,
                 &rec.hist,
-                cx.seq,
+                k,
                 &mut batch[k * cx.width..(k + 1) * cx.width],
             );
         }
+        encode_seconds += te.elapsed().as_secs_f64();
         let t = Instant::now();
         let preds = cx.predictor.predict(&batch[..owned.len() * cx.width], owned.len())?;
         predict_seconds += t.elapsed().as_secs_f64();
@@ -879,7 +915,7 @@ fn forked_worker<'a>(mut cx: ForkedCtx<'a>) -> Result<(usize, Vec<SubTrace<'a>>,
     for sub in cx.subs.iter_mut() {
         finish_sub(sub);
     }
-    Ok((cx.w, cx.subs, cx.predictor.served(), predict_seconds))
+    Ok((cx.w, cx.subs, cx.predictor.served(), predict_seconds, encode_seconds))
 }
 
 /// The forked engine loop: shard sub-traces over `threads` workers, each
@@ -916,6 +952,8 @@ fn forked_loop<'a>(
         stats.slots += d.take as u64;
         if d.take < cap {
             stats.starved += 1;
+        } else {
+            stats.filled += 1;
         }
     }
 
@@ -948,18 +986,21 @@ fn forked_loop<'a>(
 
     // Reassemble global submission order (g = local * workers + w); fold
     // each handle's served count back into the parent and charge the
-    // slowest worker's predict time (the critical path).
+    // slowest worker's predict and encode times (the critical paths).
     let mut out: Vec<Option<SubTrace<'a>>> = (0..total).map(|_| None).collect();
     let mut crit_path = 0.0f64;
+    let mut encode_crit = 0.0f64;
     for res in joined {
-        let (w, mine, served, secs) = res?;
+        let (w, mine, served, secs, encode_secs) = res?;
         predictor.absorb_served(served);
         crit_path = crit_path.max(secs);
+        encode_crit = encode_crit.max(encode_secs);
         for (local, sub) in mine.into_iter().enumerate() {
             out[local * workers + w] = Some(sub);
         }
     }
     stats.predict_seconds += crit_path;
+    stats.encode_seconds += encode_crit;
     Ok(out.into_iter().map(|s| s.expect("sub-trace lost in forked run")).collect())
 }
 
@@ -1039,6 +1080,7 @@ mod tests {
         assert_eq!(report.stats.slots, inferences);
         assert_eq!(p.served(), 5_000);
         assert!(report.stats.batches > 0);
+        assert_eq!(report.stats.filled + report.stats.starved, report.stats.batches);
         assert!(report.stats.slots <= report.stats.batches * report.stats.target_batch as u64);
         assert!(report.stats.mean_occupancy() > 0.0);
         assert_eq!(report.stats.target_batch, 8);
@@ -1135,6 +1177,7 @@ mod tests {
                     assert_eq!(r1.stats.batches, r2.stats.batches, "f{fork} t{threads}");
                     assert_eq!(r1.stats.slots, r2.stats.slots, "f{fork} t{threads}");
                     assert_eq!(r1.stats.starved, r2.stats.starved, "f{fork} t{threads}");
+                    assert_eq!(r1.stats.filled, r2.stats.filled, "f{fork} t{threads}");
                     assert_eq!(r1.stats.target_batch, r2.stats.target_batch);
                     // Forked runs absorb every handle's served count back
                     // into the parent, so totals match the serial run.

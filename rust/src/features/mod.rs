@@ -17,6 +17,8 @@ use crate::des::config::SimConfig;
 use crate::history::HistoryInfo;
 use crate::isa::{Inst, MAX_DST_REGS, MAX_SRC_REGS, REG_NONE};
 
+pub mod soa;
+
 /// Features per instruction slot (paper: 50).
 pub const NUM_FEATURES: usize = 50;
 

@@ -1,0 +1,292 @@
+//! Structure-of-arrays encode panels.
+//!
+//! The batching engine's hot loop used to scatter each slot's 50 features
+//! straight into the interleaved (AoS) predictor batch. [`SoaBatch`] splits
+//! that work by feature group — one contiguous f32 plane each for the
+//! static+history block, the latency block, the dependency flags, and the
+//! config feature — so the fill loops are branch-free and vectorizable and
+//! the panels can be reused round after round with no per-slot allocation.
+//! [`SoaBatch::interleave_into`] then emits the exact slot layout
+//! [`ContextTracker::encode_input`] produces, bit for bit, which is what the
+//! equivalence suite pins.
+
+use crate::history::HistoryInfo;
+use crate::isa::{Inst, MAX_SRC_REGS};
+
+use super::{
+    ContextTracker, CFG_FEATURE, DATA_HIST_BASE, DEP_BASE, FETCH_HIST_BASE, LAT_BASE, LAT_SCALE,
+    NUM_FEATURES, OP_BASE, REG_BASE,
+};
+
+/// Features in the static + history group (`[0, LAT_BASE)`).
+pub const STATIC_LEN: usize = LAT_BASE;
+/// Features in the latency group (`[LAT_BASE, DEP_BASE)`).
+pub const LAT_LEN: usize = DEP_BASE - LAT_BASE;
+/// Features in the dependency group (`[DEP_BASE, CFG_FEATURE)`).
+pub const DEP_LEN: usize = CFG_FEATURE - DEP_BASE;
+
+/// Branch-free twin of the legacy `encode_static`.
+///
+/// `REG_NONE` is -1, so `(r + 1) / 64` is exactly the `0.0` the branchy
+/// legacy register scatter writes for unused slots — the values (and bits)
+/// are identical for every input, which `soa::tests` pins against the
+/// legacy encoder.
+fn fill_static_row(inst: &Inst, hist: &HistoryInfo, out: &mut [f32]) {
+    use crate::isa::OpClass;
+    let op = inst.op;
+    out[OP_BASE] = op.code() as f32 / 18.0;
+    out[OP_BASE + 1] = op.fu_class() as u8 as f32 / 8.0;
+    out[OP_BASE + 2] = op.exec_latency() as f32 / 20.0;
+    out[OP_BASE + 3] = op.is_load() as u8 as f32;
+    out[OP_BASE + 4] = op.is_store() as u8 as f32;
+    out[OP_BASE + 5] = op.is_cond_branch() as u8 as f32;
+    out[OP_BASE + 6] = matches!(op, OpClass::Jump | OpClass::Call) as u8 as f32;
+    out[OP_BASE + 7] = op.is_indirect() as u8 as f32;
+    out[OP_BASE + 8] = (op == OpClass::Call) as u8 as f32;
+    out[OP_BASE + 9] = (op == OpClass::Ret) as u8 as f32;
+    out[OP_BASE + 10] = op.is_barrier() as u8 as f32;
+    out[OP_BASE + 11] = op.is_serializing() as u8 as f32;
+    out[OP_BASE + 12] = inst.mem_size as f32 / 16.0;
+    for (k, &r) in inst.srcs.iter().enumerate() {
+        out[REG_BASE + k] = (r as i32 + 1) as f32 / 64.0;
+    }
+    for (k, &r) in inst.dsts.iter().enumerate() {
+        out[REG_BASE + MAX_SRC_REGS + k] = (r as i32 + 1) as f32 / 64.0;
+    }
+    out[FETCH_HIST_BASE] = hist.mispredict as u8 as f32;
+    out[FETCH_HIST_BASE + 1] = hist.fetch_level as f32 / 3.0;
+    out[FETCH_HIST_BASE + 2] = hist.fetch_walk[0] as u8 as f32;
+    out[FETCH_HIST_BASE + 3] = hist.fetch_walk[1] as u8 as f32;
+    out[FETCH_HIST_BASE + 4] = hist.fetch_walk[2] as u8 as f32;
+    out[FETCH_HIST_BASE + 5] = hist.fetch_wb[0] as u8 as f32;
+    out[FETCH_HIST_BASE + 6] = hist.fetch_wb[1] as u8 as f32;
+    out[DATA_HIST_BASE] = hist.data_level as f32 / 3.0;
+    out[DATA_HIST_BASE + 1] = hist.data_walk[0] as u8 as f32;
+    out[DATA_HIST_BASE + 2] = hist.data_walk[1] as u8 as f32;
+    out[DATA_HIST_BASE + 3] = hist.data_walk[2] as u8 as f32;
+    out[DATA_HIST_BASE + 4] = hist.data_wb[0] as u8 as f32;
+    out[DATA_HIST_BASE + 5] = hist.data_wb[1] as u8 as f32;
+    out[DATA_HIST_BASE + 6] = hist.data_wb[2] as u8 as f32;
+}
+
+/// Reusable structure-of-arrays encode panels for a batch of slots.
+///
+/// Geometry is `slots × seq` rows; row `slot * seq + t` holds sequence
+/// position `t` of batch slot `slot`. The four planes are allocated once
+/// and overwritten in place every round.
+pub struct SoaBatch {
+    slots: usize,
+    seq: usize,
+    statics: Vec<f32>,
+    lats: Vec<f32>,
+    deps: Vec<f32>,
+    cfgs: Vec<f32>,
+}
+
+impl SoaBatch {
+    /// Allocate zeroed panels for `slots` batch slots of `seq` positions.
+    pub fn new(slots: usize, seq: usize) -> SoaBatch {
+        assert!(seq > 0, "sequence length must be at least 1");
+        let rows = slots * seq;
+        SoaBatch {
+            slots,
+            seq,
+            statics: vec![0.0; rows * STATIC_LEN],
+            lats: vec![0.0; rows * LAT_LEN],
+            deps: vec![0.0; rows * DEP_LEN],
+            cfgs: vec![0.0; rows],
+        }
+    }
+
+    /// Batch slots per round.
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Sequence positions per slot.
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// The static + history plane (`slots * seq * STATIC_LEN` floats).
+    pub fn statics(&self) -> &[f32] {
+        &self.statics
+    }
+
+    /// The latency plane (`slots * seq * LAT_LEN` floats).
+    pub fn lats(&self) -> &[f32] {
+        &self.lats
+    }
+
+    /// The dependency plane (`slots * seq * DEP_LEN` floats).
+    pub fn deps(&self) -> &[f32] {
+        &self.deps
+    }
+
+    /// The config-feature plane (`slots * seq` floats).
+    pub fn cfgs(&self) -> &[f32] {
+        &self.cfgs
+    }
+
+    /// Encode the model input for `inst` against `tracker`'s context into
+    /// the panels of `slot`. Produces exactly the values of
+    /// [`ContextTracker::encode_input`], split by feature group.
+    pub fn encode_slot(
+        &mut self,
+        tracker: &ContextTracker,
+        inst: &Inst,
+        hist: &HistoryInfo,
+        slot: usize,
+    ) {
+        assert!(slot < self.slots, "slot {slot} out of bounds ({} slots)", self.slots);
+        let seq = self.seq;
+        let base = slot * seq;
+
+        // Row 0: the to-be-predicted instruction (no latency/dep features).
+        fill_static_row(inst, hist, &mut self.statics[base * STATIC_LEN..][..STATIC_LEN]);
+        self.lats[base * LAT_LEN..][..LAT_LEN].fill(0.0);
+        self.deps[base * DEP_LEN..][..DEP_LEN].fill(0.0);
+        self.cfgs[base] = tracker.cfg_feature;
+
+        let cur_line = inst.fetch_line();
+        let cur_is_mem = inst.op.is_mem() as u8;
+        let cur_addr = inst.mem_addr;
+        let cur_is_load = inst.is_load() as u8;
+
+        // Rows 1..: context instructions, youngest first. Dependency flags
+        // are computed mask-style (0/1 u8 arithmetic, no branches) — same
+        // values as the legacy branchy form.
+        let mut t = 1;
+        for c in tracker.processor_q.iter().rev().chain(tracker.memwrite_q.iter().rev()) {
+            if t >= seq {
+                break;
+            }
+            let row = base + t;
+            self.statics[row * STATIC_LEN..][..STATIC_LEN].copy_from_slice(&c.feats);
+            let l = &mut self.lats[row * LAT_LEN..][..LAT_LEN];
+            l[0] = c.residence as f32 / LAT_SCALE;
+            l[1] = c.exec_lat as f32 / LAT_SCALE;
+            l[2] = c.store_lat as f32 / LAT_SCALE;
+            let mem_mask = cur_is_mem & (c.mem_addr != u64::MAX) as u8;
+            let same_addr = ((c.mem_addr >> 3) == (cur_addr >> 3)) as u8 & mem_mask;
+            let d = &mut self.deps[row * DEP_LEN..][..DEP_LEN];
+            d[0] = (c.fetch_line == cur_line) as u8 as f32;
+            d[1] = same_addr as f32;
+            d[2] = (((c.mem_addr >> 6) == (cur_addr >> 6)) as u8 & mem_mask) as f32;
+            d[3] = (((c.mem_addr >> 12) == (cur_addr >> 12)) as u8 & mem_mask) as f32;
+            d[4] = (same_addr & c.is_store as u8 & cur_is_load) as f32;
+            self.cfgs[row] = tracker.cfg_feature;
+            t += 1;
+        }
+
+        // Zero the trailing rows — the panels are reused round to round.
+        self.statics[(base + t) * STATIC_LEN..(base + seq) * STATIC_LEN].fill(0.0);
+        self.lats[(base + t) * LAT_LEN..(base + seq) * LAT_LEN].fill(0.0);
+        self.deps[(base + t) * DEP_LEN..(base + seq) * DEP_LEN].fill(0.0);
+        self.cfgs[base + t..base + seq].fill(0.0);
+    }
+
+    /// Interleave `slot`'s panels into an AoS buffer of
+    /// `seq * NUM_FEATURES` floats — the exact layout
+    /// [`ContextTracker::encode_input`] writes.
+    pub fn interleave_into(&self, slot: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.seq * NUM_FEATURES);
+        let seq = self.seq;
+        let base = slot * seq;
+        for t in 0..seq {
+            let row = base + t;
+            let o = &mut out[t * NUM_FEATURES..(t + 1) * NUM_FEATURES];
+            o[..LAT_BASE].copy_from_slice(&self.statics[row * STATIC_LEN..][..STATIC_LEN]);
+            o[LAT_BASE..DEP_BASE].copy_from_slice(&self.lats[row * LAT_LEN..][..LAT_LEN]);
+            o[DEP_BASE..CFG_FEATURE].copy_from_slice(&self.deps[row * DEP_LEN..][..DEP_LEN]);
+            o[CFG_FEATURE] = self.cfgs[row];
+        }
+    }
+
+    /// Encode and interleave in one call (the engine's per-slot hot path).
+    pub fn encode_into(
+        &mut self,
+        tracker: &ContextTracker,
+        inst: &Inst,
+        hist: &HistoryInfo,
+        slot: usize,
+        out: &mut [f32],
+    ) {
+        self.encode_slot(tracker, inst, hist, slot);
+        self.interleave_into(slot, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::{simulate, SimConfig};
+    use crate::features::encode_static;
+    use crate::trace::TraceRecord;
+    use crate::workload::find;
+
+    fn stream(bench: &str, n: u64) -> Vec<TraceRecord> {
+        let cfg = SimConfig::default_o3();
+        let b = find(bench).unwrap();
+        let mut out = Vec::new();
+        simulate(&cfg, b.workload(0).stream(), n, |e| out.push(TraceRecord::from(e)));
+        out
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn static_row_twin_matches_encode_static() {
+        for rec in stream("gcc", 600) {
+            let mut legacy = [0.5f32; STATIC_LEN];
+            let mut soa = [0.25f32; STATIC_LEN];
+            encode_static(&rec.inst, &rec.hist, &mut legacy);
+            fill_static_row(&rec.inst, &rec.hist, &mut soa);
+            assert_eq!(bits(&legacy), bits(&soa), "pc {:#x}", rec.inst.pc);
+        }
+    }
+
+    #[test]
+    fn soa_matches_legacy_encode_bit_for_bit() {
+        let cfg = SimConfig::default_o3();
+        for (bench, cfg_feature) in [("gcc", 0.0f32), ("leela", 0.37f32)] {
+            let recs = stream(bench, 800);
+            let seq = 16;
+            let mut tracker = ContextTracker::new(&cfg);
+            tracker.cfg_feature = cfg_feature;
+            let mut soa = SoaBatch::new(3, seq);
+            let mut legacy = vec![0.0f32; seq * NUM_FEATURES];
+            let mut via_soa = vec![0.0f32; seq * NUM_FEATURES];
+            for (i, rec) in recs.iter().enumerate() {
+                tracker.encode_input(&rec.inst, &rec.hist, seq, &mut legacy);
+                // Rotate slots so stale panel contents must get overwritten.
+                soa.encode_into(&tracker, &rec.inst, &rec.hist, i % 3, &mut via_soa);
+                assert_eq!(bits(&legacy), bits(&via_soa), "{bench} inst {i}");
+                tracker.push(&rec.inst, &rec.hist, rec.f_lat, rec.e_lat.max(1), rec.s_lat);
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_rows_are_cleared_on_reuse() {
+        let cfg = SimConfig::default_o3();
+        let recs = stream("xz", 300);
+        let seq = 8;
+        let mut full = ContextTracker::new(&cfg);
+        for rec in &recs {
+            full.push(&rec.inst, &rec.hist, rec.f_lat, rec.e_lat.max(1), rec.s_lat);
+        }
+        let mut soa = SoaBatch::new(1, seq);
+        let mut out = vec![0.0f32; seq * NUM_FEATURES];
+        let rec = &recs[0];
+        soa.encode_into(&full, &rec.inst, &rec.hist, 0, &mut out);
+        assert!(out[NUM_FEATURES..].iter().any(|&x| x != 0.0), "context rows filled");
+        // Re-encode the same slot against an empty tracker: every context
+        // row must come back zero despite the dirty panels.
+        let empty = ContextTracker::new(&cfg);
+        soa.encode_into(&empty, &rec.inst, &rec.hist, 0, &mut out);
+        assert!(out[NUM_FEATURES..].iter().all(|&x| x == 0.0), "stale rows leaked");
+    }
+}

@@ -62,6 +62,7 @@ const RUN_FLAGS: &[&str] = &[
     "encode-threads",
     "pipeline-depth",
     "no-fork-predict",
+    "no-mmap",
 ];
 
 /// The accepted flag sets of every subcommand (report/sweep variants are
@@ -336,7 +337,8 @@ fn print_usage() {
          \x20              [--weights W.smw|init] [--seq S] [--subtraces S] [--workers W]\n\
          \x20              [--target-batch B] [--encode-threads T] [--pipeline-depth D]\n\
          \x20              [--no-fork-predict]\n\
-         \x20              [--trace file.smt] [--artifacts DIR] [--window W] [--json out.json]\n\
+         \x20              [--trace file.smt] [--no-mmap] [--artifacts DIR] [--window W]\n\
+         \x20              [--json out.json]\n\
          \x20 serve        [--addr 127.0.0.1:7878] [--queue-cap N] [--max-cobatch N] [--quiet]\n\
          \x20 submit       --bench NAME --n N [simulate-ml flags] [--addr A] [--priority normal|high]\n\
          \x20              [--follow] [--json out.json]\n\
@@ -487,15 +489,23 @@ fn print_report(report: &SimReport) {
         report.cpi_error().unwrap_or(0.0) * 100.0,
         report.mips()
     );
+    if report.input.bytes_mapped > 0 || report.input.bytes_copied > 0 {
+        println!(
+            "input: {} bytes mapped (zero-copy), {} bytes copied",
+            report.input.bytes_mapped, report.input.bytes_copied
+        );
+    }
     if let Some(stats) = &report.engine {
         let busy = 1.0 - stats.predictor_idle();
         println!(
-            "engine: batches={} mean_occupancy={:.1} target_batch={} starved={} subtraces={} \
-             encode_threads={} pipeline_depth={} predictor_busy={:.0}% predictor_idle={:.0}%",
+            "engine: batches={} mean_occupancy={:.1} target_batch={} starved={} filled={} \
+             subtraces={} encode_threads={} pipeline_depth={} predictor_busy={:.0}% \
+             predictor_idle={:.0}%",
             stats.batches,
             stats.mean_occupancy(),
             stats.target_batch,
             stats.starved,
+            stats.filled,
             stats.subtraces,
             stats.encode_threads,
             stats.pipeline_depth,
@@ -539,7 +549,10 @@ fn cmd_simulate_ml(args: &Args) -> Result<()> {
         .workers(workers)
         .window(window)
         .engine(engine)
-        .input_seed(args.num("input-seed", reports::REFERENCE_SEED)?);
+        .input_seed(args.num("input-seed", reports::REFERENCE_SEED)?)
+        // Presence flag: the zero-copy mmap read path is the default;
+        // --no-mmap forces the buffered reader for trace files.
+        .mmap(args.get("no-mmap").is_none());
     sim = if let Some(path) = args.get("trace") {
         // The trace file already fixes the workload; flags that would
         // silently lose to it are rejected, not ignored.
@@ -608,6 +621,7 @@ fn job_request_from(args: &Args) -> Result<JobRequest> {
     job.input_seed = args.num("input-seed", reports::REFERENCE_SEED)?;
     job.engine = engine_options_from(args)?;
     job.priority = Priority::parse(args.get("priority").unwrap_or("normal"))?;
+    job.mmap = args.get("no-mmap").is_none();
     Ok(job)
 }
 

@@ -47,7 +47,7 @@ use crate::api::{ExecMode, SimReport};
 use crate::coordinator::{BatchEngine, JobSpec};
 use crate::des::SimConfig;
 use crate::predictor::LatencyPredictor;
-use crate::trace::TraceRecord;
+use crate::trace::{InputStats, TraceRecord};
 
 use self::json::quote;
 use self::protocol::{err_line, read_request_line, LineRead, Request};
@@ -423,6 +423,7 @@ struct Prepared {
     records: Vec<TraceRecord>,
     des_cpi: Option<f64>,
     bench: Option<String>,
+    input: InputStats,
     progress: Arc<AtomicU64>,
 }
 
@@ -438,11 +439,11 @@ fn run_cobatch(
     let mut prepared: Vec<Prepared> = Vec::with_capacity(group.len());
     for (id, job, progress) in group {
         let built = job.config.build().and_then(|cfg| {
-            let (records, des_cpi, bench) = job.materialize(&cfg)?;
-            Ok((cfg, records, des_cpi, bench))
+            let (records, des_cpi, bench, input) = job.materialize(&cfg)?;
+            Ok((cfg, records, des_cpi, bench, input))
         });
         match built {
-            Ok((cfg, records, des_cpi, bench)) => {
+            Ok((cfg, records, des_cpi, bench, input)) => {
                 shared.table.set_total(*id, records.len() as u64);
                 prepared.push(Prepared {
                     id: *id,
@@ -451,6 +452,7 @@ fn run_cobatch(
                     records,
                     des_cpi,
                     bench,
+                    input,
                     progress: progress.clone(),
                 });
             }
@@ -484,6 +486,7 @@ fn run_cobatch(
                     outcome: report.jobs[k].clone(),
                     engine: Some(report.stats.clone()),
                     des_cpi: p.des_cpi,
+                    input: p.input,
                 };
                 shared.table.finish(p.id, sim.to_json_compact());
                 shared.log(&format!("job {} done (co-batched x{})", p.id, prepared.len()));

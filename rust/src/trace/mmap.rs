@@ -1,0 +1,215 @@
+//! Memory-mapped zero-copy `.smt` trace access.
+//!
+//! The hot read path maps the whole trace read-only with raw `mmap`/`munmap`
+//! syscalls (no libc dependency) and decodes records straight out of the
+//! mapping: no `BufReader` staging copies, no per-record `read_exact`. On
+//! targets without the syscall shim ([`MmapTrace::supported`] is false) the
+//! constructor fails with `ErrorKind::Unsupported` and every caller falls
+//! back to the buffered [`super::TraceReader`] path, which shares the same
+//! header/length validation and error text.
+
+use std::fs::File;
+use std::io;
+use std::path::Path;
+
+use super::{open_validated, TraceRecord, HEADER_SIZE, RECORD_SIZE};
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    /// Raw syscalls are wired up for this target.
+    pub const SUPPORTED: bool = true;
+
+    const PROT_READ: usize = 1;
+    const MAP_PRIVATE: usize = 2;
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn sys_mmap(len: usize, prot: usize, flags: usize, fd: isize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 9isize => ret, // SYS_mmap
+            in("rdi") 0usize,
+            in("rsi") len,
+            in("rdx") prot,
+            in("r10") flags,
+            in("r8") fd,
+            in("r9") 0usize,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn sys_munmap(addr: usize, len: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 11isize => ret, // SYS_munmap
+            in("rdi") addr,
+            in("rsi") len,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn sys_mmap(len: usize, prot: usize, flags: usize, fd: isize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") 222usize, // SYS_mmap
+            inlateout("x0") 0usize => ret,
+            in("x1") len,
+            in("x2") prot,
+            in("x3") flags,
+            in("x4") fd,
+            in("x5") 0usize,
+            options(nostack)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn sys_munmap(addr: usize, len: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") 215usize, // SYS_munmap
+            inlateout("x0") addr as isize => ret,
+            in("x1") len,
+            options(nostack)
+        );
+        ret
+    }
+
+    /// A read-only `MAP_PRIVATE` mapping of the first `len` bytes of a file.
+    pub struct Map {
+        ptr: *const u8,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is immutable (PROT_READ) and exclusively owned by
+    // this handle, so sharing references across threads is sound.
+    unsafe impl Send for Map {}
+    unsafe impl Sync for Map {}
+
+    impl Map {
+        pub fn new(file: &File, len: usize) -> io::Result<Map> {
+            // SAFETY: plain mmap of a file descriptor we hold open; the
+            // kernel validates every argument and reports errors as
+            // negative errno values in [-4095, -1].
+            let ret =
+                unsafe { sys_mmap(len, PROT_READ, MAP_PRIVATE, file.as_raw_fd() as isize) };
+            if (-4095..0).contains(&ret) {
+                return Err(io::Error::from_raw_os_error(-ret as i32));
+            }
+            Ok(Map { ptr: ret as *const u8, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            // SAFETY: `ptr` is a live PROT_READ mapping of exactly `len`
+            // bytes, unmapped only in Drop.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    impl Drop for Map {
+        fn drop(&mut self) {
+            // SAFETY: unmapping the exact range mmap returned.
+            unsafe { sys_munmap(self.ptr as usize, self.len) };
+        }
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod sys {
+    use std::fs::File;
+    use std::io;
+
+    /// No syscall shim on this target: callers take the buffered path.
+    pub const SUPPORTED: bool = false;
+
+    pub struct Map(());
+
+    impl Map {
+        pub fn new(_file: &File, _len: usize) -> io::Result<Map> {
+            Err(io::Error::new(io::ErrorKind::Unsupported, "mmap is not wired up on this target"))
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            &[]
+        }
+    }
+}
+
+/// A validated, memory-mapped `.smt` trace.
+///
+/// Records are exposed as bounds-checked views into the mapping and decoded
+/// on demand — the file's bytes are never staged through an intermediate
+/// read buffer.
+pub struct MmapTrace {
+    map: sys::Map,
+    count: u64,
+}
+
+impl MmapTrace {
+    /// Whether the zero-copy path exists on this target.
+    pub fn supported() -> bool {
+        sys::SUPPORTED
+    }
+
+    /// Map `path`, validating magic, record count, and file length with the
+    /// same checks (and error text) as the buffered [`super::TraceReader`].
+    pub fn open(path: &Path) -> io::Result<MmapTrace> {
+        let (file, count, len) = open_validated(path)?;
+        MmapTrace::from_file(&file, count, len)
+    }
+
+    /// Map an already-validated trace file of `file_len` bytes.
+    pub(crate) fn from_file(file: &File, count: u64, file_len: u64) -> io::Result<MmapTrace> {
+        let map = sys::Map::new(file, file_len as usize)?;
+        Ok(MmapTrace { map, count })
+    }
+
+    /// Records promised by the header.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Total bytes mapped (header + records).
+    pub fn mapped_len(&self) -> usize {
+        self.map.bytes().len()
+    }
+
+    /// Bounds-checked raw view of record `i`.
+    pub fn record_bytes(&self, i: u64) -> &[u8; RECORD_SIZE] {
+        assert!(i < self.count, "record {i} out of bounds ({} records)", self.count);
+        let start = HEADER_SIZE + i as usize * RECORD_SIZE;
+        self.map.bytes()[start..start + RECORD_SIZE].try_into().unwrap()
+    }
+
+    /// Decode record `i` straight out of the mapping.
+    pub fn get(&self, i: u64) -> TraceRecord {
+        TraceRecord::decode(self.record_bytes(i))
+    }
+
+    /// Stream every record, decoding out of the mapping with no staging.
+    pub fn iter(&self) -> impl Iterator<Item = TraceRecord> + '_ {
+        (0..self.count).map(|i| self.get(i))
+    }
+
+    /// Decode the whole trace in one pass.
+    pub fn decode_all(&self) -> Vec<TraceRecord> {
+        let mut out = Vec::with_capacity(self.count as usize);
+        out.extend(self.iter());
+        out
+    }
+}

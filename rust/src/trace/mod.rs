@@ -12,15 +12,20 @@
 
 use std::fs::File;
 use std::io::{self, BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::des::ExecutedInst;
 use crate::features::{ContextMode, ContextTracker, NUM_FEATURES};
 use crate::history::HistoryInfo;
 use crate::isa::{Inst, OpClass, MAX_DST_REGS, MAX_SRC_REGS};
 
+pub mod mmap;
+
 /// Size in bytes of one on-disk trace record.
 pub const RECORD_SIZE: usize = 64;
+
+/// Size in bytes of the `.smt` header (magic + u64 record count).
+pub const HEADER_SIZE: usize = 12;
 
 const SMT_MAGIC: &[u8; 4] = b"SMT1";
 const SMD_MAGIC: &[u8; 4] = b"SMD1";
@@ -150,7 +155,54 @@ impl TraceWriter {
     }
 }
 
-/// Streaming `.smt` reader.
+/// Validate an `.smt` payload length against the header's record count.
+///
+/// Both the mmap and buffered paths reject mid-record truncation here, with
+/// identical error text naming the byte offset of the damage. Extra
+/// *complete* records beyond `count` are tolerated (a crashed writer leaves
+/// count 0 and the trailing records are simply ignored).
+fn check_payload(count: u64, file_len: u64) -> io::Result<()> {
+    let payload = file_len - HEADER_SIZE as u64;
+    let whole = payload / RECORD_SIZE as u64;
+    if payload % RECORD_SIZE as u64 != 0 {
+        let off = HEADER_SIZE as u64 + whole * RECORD_SIZE as u64;
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("trace truncated: partial record at byte offset {off} ({file_len}-byte file)"),
+        ));
+    }
+    if whole < count {
+        let off = HEADER_SIZE as u64 + whole * RECORD_SIZE as u64;
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!(
+                "trace truncated: header promises {count} records but the file ends at byte \
+                 offset {off} after {whole} complete records"
+            ),
+        ));
+    }
+    Ok(())
+}
+
+/// Open an `.smt` file and validate magic, header, and payload length.
+///
+/// Returns the file (positioned just past the header), the record count,
+/// and the file's byte length. Every read path — buffered and mmap — goes
+/// through here, so truncation errors are identical everywhere.
+pub(crate) fn open_validated(path: &Path) -> io::Result<(File, u64, u64)> {
+    let mut f = File::open(path)?;
+    let mut header = [0u8; HEADER_SIZE];
+    f.read_exact(&mut header)?;
+    if header[0..4] != SMT_MAGIC[..] {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "not an .smt trace"));
+    }
+    let count = u64::from_le_bytes(header[4..12].try_into().unwrap());
+    let len = f.metadata()?.len();
+    check_payload(count, len)?;
+    Ok((f, count, len))
+}
+
+/// Streaming `.smt` reader (buffered fallback path).
 pub struct TraceReader {
     r: BufReader<File>,
     remaining: u64,
@@ -159,17 +211,11 @@ pub struct TraceReader {
 }
 
 impl TraceReader {
+    /// Open and validate. Rejects bad magic, a short header, and any
+    /// mid-record truncation (naming the byte offset) before the first read.
     pub fn open(path: &Path) -> io::Result<Self> {
-        let mut r = BufReader::new(File::open(path)?);
-        let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
-        if &magic != SMT_MAGIC {
-            return Err(io::Error::new(io::ErrorKind::InvalidData, "not an .smt trace"));
-        }
-        let mut cnt = [0u8; 8];
-        r.read_exact(&mut cnt)?;
-        let count = u64::from_le_bytes(cnt);
-        Ok(TraceReader { r, remaining: count, count })
+        let (f, count, _len) = open_validated(path)?;
+        Ok(TraceReader { r: BufReader::new(f), remaining: count, count })
     }
 }
 
@@ -192,9 +238,100 @@ impl Iterator for TraceReader {
     }
 }
 
+/// How a simulation's input bytes reached memory.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InputStats {
+    /// Bytes served through the zero-copy mmap path.
+    pub bytes_mapped: u64,
+    /// Bytes staged through buffered `read` copies.
+    pub bytes_copied: u64,
+}
+
+/// Read a whole trace into memory, preferring the zero-copy mmap path.
+///
+/// `use_mmap: false` — or a target without the syscall shim — takes the
+/// buffered [`TraceReader`] path instead. Both paths share
+/// `open_validated`'s checks (magic, header, mid-record truncation with
+/// byte offsets) and produce identical records; the returned [`InputStats`]
+/// says which path served the bytes.
+pub fn load_trace(path: &Path, use_mmap: bool) -> io::Result<(Vec<TraceRecord>, InputStats)> {
+    let (file, count, len) = open_validated(path)?;
+    if use_mmap {
+        // Map failures (unsupported target, exotic filesystem) fall back to
+        // the buffered path below; validation already happened above.
+        if let Ok(m) = mmap::MmapTrace::from_file(&file, count, len) {
+            let stats = InputStats { bytes_mapped: m.mapped_len() as u64, bytes_copied: 0 };
+            return Ok((m.decode_all(), stats));
+        }
+    }
+    let mut r = BufReader::new(file);
+    let mut recs = Vec::with_capacity(count as usize);
+    let mut buf = [0u8; RECORD_SIZE];
+    for _ in 0..count {
+        r.read_exact(&mut buf)?;
+        recs.push(TraceRecord::decode(&buf));
+    }
+    let copied = HEADER_SIZE as u64 + count * RECORD_SIZE as u64;
+    Ok((recs, InputStats { bytes_mapped: 0, bytes_copied: copied }))
+}
+
 /// Read a whole trace into memory.
 pub fn read_trace(path: &Path) -> io::Result<Vec<TraceRecord>> {
-    TraceReader::open(path)?.collect()
+    Ok(load_trace(path, true)?.0)
+}
+
+/// A simulation input: in-memory records, a synthetic benchmark, or an
+/// on-disk `.smt` trace file.
+///
+/// This is the one input shape every front end — the [`crate::api::Simulation`]
+/// builder, the CLI, and the job server — resolves through a single code
+/// path (and a single set of error messages). `Bench` names are looked up
+/// and generated by the API layer; `File` sources are read via
+/// [`load_trace`], so the mmap/buffered choice and the truncation checks
+/// are identical everywhere.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceSource<'a> {
+    /// Borrowed, already-decoded records.
+    Records(&'a [TraceRecord]),
+    /// A named synthetic benchmark run for `n` instructions.
+    Bench {
+        /// Benchmark name (see `workload::find`).
+        name: String,
+        /// Instructions to generate.
+        n: u64,
+    },
+    /// An on-disk `.smt` trace.
+    File {
+        /// Path to the trace file.
+        path: PathBuf,
+        /// Prefer the zero-copy mmap path (silently falls back to buffered
+        /// reads on targets without mmap).
+        mmap: bool,
+    },
+}
+
+impl<'a> TraceSource<'a> {
+    /// Borrow already-decoded records.
+    pub fn records(records: &'a [TraceRecord]) -> TraceSource<'a> {
+        TraceSource::Records(records)
+    }
+}
+
+impl TraceSource<'static> {
+    /// A named synthetic benchmark run for `n` instructions.
+    pub fn bench(name: impl Into<String>, n: u64) -> TraceSource<'static> {
+        TraceSource::Bench { name: name.into(), n }
+    }
+
+    /// An on-disk `.smt` trace, read via mmap where available.
+    pub fn file(path: impl Into<PathBuf>) -> TraceSource<'static> {
+        TraceSource::File { path: path.into(), mmap: true }
+    }
+
+    /// An on-disk `.smt` trace, forced onto the buffered read path.
+    pub fn file_buffered(path: impl Into<PathBuf>) -> TraceSource<'static> {
+        TraceSource::File { path: path.into(), mmap: false }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -425,9 +562,11 @@ mod tests {
     }
 
     #[test]
-    fn reader_surfaces_short_final_record() {
-        // Header promises 2 records but the last one is truncated: the
-        // reader must yield the intact record, then an error, then stop.
+    fn truncated_final_record_is_rejected_at_open() {
+        // Header promises 2 records but the last one is cut short: every
+        // open path (buffered reader, mmap, load_trace) must refuse up
+        // front, naming the byte offset where the partial record starts
+        // (header 12 + one intact record 64 = 76).
         let p = tmp("short_tail.smt");
         let cfg = SimConfig::default_o3();
         let b = find("xz").unwrap();
@@ -440,11 +579,66 @@ mod tests {
         let f = std::fs::OpenOptions::new().write(true).open(&p).unwrap();
         f.set_len(full - 10).unwrap();
         drop(f);
-        let mut r = TraceReader::open(&p).unwrap();
-        assert_eq!(r.count, 2);
-        assert!(r.next().unwrap().is_ok(), "first record is intact");
-        assert!(r.next().unwrap().is_err(), "short final record must error");
-        assert!(r.next().is_none(), "reader stops after the error");
+        let err = TraceReader::open(&p).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("byte offset 76"), "{err}");
+        let merr = mmap::MmapTrace::open(&p).unwrap_err();
+        assert_eq!(merr.to_string(), err.to_string());
+        for use_mmap in [true, false] {
+            let lerr = load_trace(&p, use_mmap).unwrap_err();
+            assert_eq!(lerr.to_string(), err.to_string());
+        }
+    }
+
+    #[test]
+    fn header_count_beyond_file_is_rejected_at_open() {
+        // One complete record on disk but a header promising three: the
+        // error names the promised count and where the file actually ends.
+        let p = tmp("overcount.smt");
+        let cfg = SimConfig::default_o3();
+        let b = find("xz").unwrap();
+        let mut w = TraceWriter::create(&p).unwrap();
+        simulate(&cfg, b.workload(0).stream(), 1, |e| {
+            w.write(&TraceRecord::from(e)).unwrap();
+        });
+        assert_eq!(w.finish().unwrap(), 1);
+        {
+            use std::io::Seek;
+            let mut f = std::fs::OpenOptions::new().write(true).open(&p).unwrap();
+            f.seek(io::SeekFrom::Start(4)).unwrap();
+            f.write_all(&3u64.to_le_bytes()).unwrap();
+        }
+        let err = TraceReader::open(&p).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        let msg = err.to_string();
+        assert!(msg.contains("promises 3 records"), "{msg}");
+        assert!(msg.contains("byte offset 76"), "{msg}");
+        assert_eq!(load_trace(&p, true).unwrap_err().to_string(), msg);
+    }
+
+    #[test]
+    fn mmap_and_buffered_reads_are_identical() {
+        let p = tmp("mmap_eq.smt");
+        let cfg = SimConfig::default_o3();
+        let b = find("namd").unwrap();
+        let mut w = TraceWriter::create(&p).unwrap();
+        simulate(&cfg, b.workload(0).stream(), 500, |e| {
+            w.write(&TraceRecord::from(e)).unwrap();
+        });
+        assert_eq!(w.finish().unwrap(), 500);
+        let (mapped, mstats) = load_trace(&p, true).unwrap();
+        let (buffered, bstats) = load_trace(&p, false).unwrap();
+        assert_eq!(mapped, buffered);
+        assert_eq!(bstats, InputStats { bytes_mapped: 0, bytes_copied: 12 + 500 * 64 });
+        if mmap::MmapTrace::supported() {
+            assert_eq!(mstats, InputStats { bytes_mapped: 12 + 500 * 64, bytes_copied: 0 });
+            let m = mmap::MmapTrace::open(&p).unwrap();
+            assert_eq!(m.count(), 500);
+            assert_eq!(m.get(499), buffered[499]);
+            assert_eq!(m.iter().count(), 500);
+        } else {
+            assert_eq!(mstats, bstats);
+        }
     }
 
     #[test]

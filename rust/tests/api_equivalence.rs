@@ -12,7 +12,7 @@ use simnet::coordinator::{
 };
 use simnet::des::{simulate, SimConfig};
 use simnet::predictor::TablePredictor;
-use simnet::trace::TraceRecord;
+use simnet::trace::{InputStats, TraceRecord};
 use simnet::workload::find;
 
 fn records(bench: &str, n: u64) -> (Vec<TraceRecord>, SimConfig) {
@@ -166,13 +166,16 @@ fn sim_report_to_json_golden() {
             slots: 1000,
             target_batch: 4,
             starved: 2,
+            filled: 248,
             subtraces: 4,
             encode_threads: 1,
             pipeline_depth: 1,
+            encode_seconds: 0.0625,
             predict_seconds: 0.125,
             engine_seconds: 0.25,
         }),
         des_cpi: Some(1.25),
+        input: InputStats { bytes_mapped: 640, bytes_copied: 0 },
     };
     let expected = concat!(
         "{\n",
@@ -189,12 +192,14 @@ fn sim_report_to_json_golden() {
         "  \"cpi_err_pct\": 20.000000,\n",
         "  \"mips\": 0.004000,\n",
         "  \"wall_seconds\": 0.250000,\n",
+        "  \"bytes_mapped\": 640,\n",
+        "  \"bytes_copied\": 0,\n",
         "  \"windows\": [[500, 700], [500, 800]],\n",
         "  \"engine\": {\"batches\": 250, \"slots\": 1000, \"target_batch\": 4, ",
-        "\"starved\": 2, \"subtraces\": 4, \"encode_threads\": 1, ",
+        "\"starved\": 2, \"filled\": 248, \"subtraces\": 4, \"encode_threads\": 1, ",
         "\"pipeline_depth\": 1, \"mean_occupancy\": 4.000000, \"fill\": 1.000000, ",
-        "\"predictor_idle\": 0.500000, \"predict_seconds\": 0.125000, ",
-        "\"engine_seconds\": 0.250000}\n",
+        "\"predictor_idle\": 0.500000, \"encode_seconds\": 0.062500, ",
+        "\"predict_seconds\": 0.125000, \"engine_seconds\": 0.250000}\n",
         "}\n",
     );
     assert_eq!(report.to_json(), expected);

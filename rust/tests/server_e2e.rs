@@ -69,7 +69,7 @@ fn scrubbed(report: &Value) -> String {
     }
     if let Some(engine) = v.get_mut("engine") {
         if !engine.is_null() {
-            for key in ["predict_seconds", "engine_seconds", "predictor_idle"] {
+            for key in ["encode_seconds", "predict_seconds", "engine_seconds", "predictor_idle"] {
                 if engine.get(key).is_some() {
                     engine.set(key, Value::Num(0.0));
                 }
@@ -83,18 +83,15 @@ fn scrubbed(report: &Value) -> String {
 /// `Simulation` builder — the reference the daemon must match.
 fn direct_report(job: &JobRequest) -> Value {
     let cfg = job.config.build().expect("config");
-    let mut sim = Simulation::new()
+    let sim = Simulation::new()
         .config(&cfg)
         .predictor(job.predictor.clone())
         .subtraces(job.subtraces)
         .workers(job.workers)
         .window(job.window)
         .engine(job.engine)
-        .input_seed(job.input_seed);
-    sim = match &job.source {
-        JobSource::Bench { name, n } => sim.bench(name.clone(), *n),
-        JobSource::TraceFile(path) => sim.trace_file(path.clone()),
-    };
+        .input_seed(job.input_seed)
+        .source(job.source.to_trace_source(job.mmap));
     Value::parse(&sim.run().expect("direct run").to_json_compact()).expect("direct json")
 }
 

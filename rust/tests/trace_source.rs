@@ -1,0 +1,213 @@
+//! End-to-end tests for the unified `TraceSource` input column: the
+//! zero-copy mmap path and the buffered reader must produce
+//! byte-identical simulations through every execution mode and
+//! predictor backend, the per-source and per-session mmap switches must
+//! compose, and edge-shaped traces (empty, single-record, non-aligned
+//! lengths) must load identically down both paths.
+
+use std::path::PathBuf;
+
+use simnet::api::{ExecMode, PredictorSpec, Simulation, WeightsSource};
+use simnet::des::{simulate, SimConfig};
+use simnet::trace::mmap::MmapTrace;
+use simnet::trace::{
+    load_trace, InputStats, TraceRecord, TraceSource, TraceWriter, HEADER_SIZE, RECORD_SIZE,
+};
+use simnet::workload::find;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("simnet_trace_source");
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir.join(name)
+}
+
+/// Write an `n`-instruction DES trace for `bench` and return its path.
+fn write_trace(name: &str, bench: &str, n: u64) -> PathBuf {
+    let path = tmp(name);
+    let cfg = SimConfig::default_o3();
+    let b = find(bench).unwrap();
+    let mut w = TraceWriter::create(&path).unwrap();
+    simulate(&cfg, b.workload(0).stream(), n, |e| {
+        w.write(&TraceRecord::from(e)).unwrap();
+    });
+    assert_eq!(w.finish().unwrap(), n);
+    path
+}
+
+fn native_fc2() -> PredictorSpec {
+    PredictorSpec::native("artifacts", "fc2", 8).with_weights_source(WeightsSource::Init)
+}
+
+fn file_bytes(n: u64) -> u64 {
+    (HEADER_SIZE + n as usize * RECORD_SIZE) as u64
+}
+
+#[test]
+fn mmap_and_buffered_runs_are_byte_identical_across_modes() {
+    for (bench, n) in [("gcc", 6_000u64), ("leela", 4_000)] {
+        let path = write_trace(&format!("{bench}_modes.smt"), bench, n);
+        for spec in [PredictorSpec::table(16), native_fc2()] {
+            // The pool row is table-only to keep the native runs cheap;
+            // the mmap/buffered split happens before any predictor work.
+            let modes: &[(usize, usize, ExecMode)] =
+                if matches!(spec, PredictorSpec::Table { .. }) {
+                    &[(1, 1, ExecMode::Sequential), (4, 1, ExecMode::Engine), (8, 2, ExecMode::Pool)]
+                } else {
+                    &[(1, 1, ExecMode::Sequential), (4, 1, ExecMode::Engine)]
+                };
+            for &(subtraces, workers, mode) in modes {
+                let run = |mmap: bool| {
+                    Simulation::new()
+                        .trace_file(&path)
+                        .predictor(spec.clone())
+                        .subtraces(subtraces)
+                        .workers(workers)
+                        .window(1_000)
+                        .mmap(mmap)
+                        .run()
+                        .unwrap()
+                };
+                let m = run(true);
+                let b = run(false);
+                let tag = format!("{bench} {} s{subtraces} w{workers}", spec.label());
+                assert_eq!(m.mode, mode, "{tag}");
+                assert_eq!(b.mode, mode, "{tag}");
+                assert_eq!(m.outcome.instructions, b.outcome.instructions, "{tag}");
+                assert_eq!(m.outcome.cycles, b.outcome.cycles, "{tag}");
+                assert_eq!(m.outcome.windows, b.outcome.windows, "{tag}");
+                assert_eq!(m.outcome.inferences, b.outcome.inferences, "{tag}");
+                assert_eq!(m.des_cpi, b.des_cpi, "{tag}");
+                // Each path reports its bytes in its own column.
+                let total = file_bytes(n);
+                assert_eq!(
+                    b.input,
+                    InputStats { bytes_mapped: 0, bytes_copied: total },
+                    "{tag}"
+                );
+                if MmapTrace::supported() {
+                    assert_eq!(
+                        m.input,
+                        InputStats { bytes_mapped: total, bytes_copied: 0 },
+                        "{tag}"
+                    );
+                } else {
+                    assert_eq!(m.input, b.input, "{tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn per_source_and_per_session_mmap_switches_compose() {
+    let path = write_trace("compose.smt", "xz", 300);
+    let total = file_bytes(300);
+    let buffered = InputStats { bytes_mapped: 0, bytes_copied: total };
+    let run = |source: TraceSource<'static>, session_mmap: bool| {
+        Simulation::new()
+            .source(source)
+            .predictor(PredictorSpec::table(8))
+            .mmap(session_mmap)
+            .run()
+            .unwrap()
+    };
+    // Either switch alone forces the buffered path.
+    assert_eq!(run(TraceSource::file_buffered(&path), true).input, buffered);
+    assert_eq!(run(TraceSource::file(&path), false).input, buffered);
+    // Both allowing: the zero-copy path, where the target supports it.
+    let both = run(TraceSource::file(&path), true);
+    if MmapTrace::supported() {
+        assert_eq!(both.input, InputStats { bytes_mapped: total, bytes_copied: 0 });
+    } else {
+        assert_eq!(both.input, buffered);
+    }
+    // In-memory and bench sources read no file bytes at all.
+    let r = Simulation::new()
+        .bench("xz", 300)
+        .predictor(PredictorSpec::table(8))
+        .run()
+        .unwrap();
+    assert_eq!(r.input, InputStats::default());
+}
+
+#[test]
+fn records_source_is_zero_copy_and_matches_trace_file() {
+    let path = write_trace("records_eq.smt", "xz", 800);
+    let (recs, _) = load_trace(&path, true).unwrap();
+    let from_records = Simulation::new()
+        .records(&recs)
+        .predictor(PredictorSpec::table(8))
+        .window(200)
+        .run()
+        .unwrap();
+    let from_file = Simulation::new()
+        .trace_file(&path)
+        .predictor(PredictorSpec::table(8))
+        .window(200)
+        .run()
+        .unwrap();
+    assert_eq!(from_records.input, InputStats::default());
+    assert_eq!(from_records.outcome.cycles, from_file.outcome.cycles);
+    assert_eq!(from_records.outcome.windows, from_file.outcome.windows);
+    assert_eq!(from_records.des_cpi, from_file.des_cpi);
+}
+
+#[test]
+fn edge_shaped_traces_load_identically_on_both_paths() {
+    // Empty: a header-only 12-byte file (far below one page).
+    let empty = tmp("empty.smt");
+    let w = TraceWriter::create(&empty).unwrap();
+    assert_eq!(w.finish().unwrap(), 0);
+    // Single record, and a 17-record (1100-byte) file that is aligned to
+    // nothing: record size, page size, or read-buffer size.
+    let one = write_trace("one.smt", "xz", 1);
+    let odd = write_trace("odd.smt", "xz", 17);
+    for (path, n) in [(&empty, 0u64), (&one, 1), (&odd, 17)] {
+        let (m, mstats) = load_trace(path, true).unwrap();
+        let (b, bstats) = load_trace(path, false).unwrap();
+        assert_eq!(m.len() as u64, n, "{}", path.display());
+        assert_eq!(m, b, "{}", path.display());
+        assert_eq!(bstats, InputStats { bytes_mapped: 0, bytes_copied: file_bytes(n) });
+        if MmapTrace::supported() {
+            assert_eq!(mstats, InputStats { bytes_mapped: file_bytes(n), bytes_copied: 0 });
+        } else {
+            assert_eq!(mstats, bstats);
+        }
+    }
+}
+
+#[test]
+fn api_errors_name_the_trace_path_and_byte_offset() {
+    // A missing file fails with the path in the error, whichever read
+    // path was requested.
+    for mmap in [true, false] {
+        let err = Simulation::new()
+            .trace_file("/nonexistent/zz.smt")
+            .predictor(PredictorSpec::table(8))
+            .mmap(mmap)
+            .run()
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("zz.smt"), "mmap={mmap}: {msg}");
+    }
+    // Mid-record truncation is rejected at open with the byte offset,
+    // identically down both paths (validation happens before mapping).
+    let path = write_trace("api_truncated.smt", "xz", 2);
+    let full = std::fs::metadata(&path).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+    f.set_len(full - 10).unwrap();
+    drop(f);
+    let mut msgs = Vec::new();
+    for mmap in [true, false] {
+        let err = Simulation::new()
+            .trace_file(&path)
+            .predictor(PredictorSpec::table(8))
+            .mmap(mmap)
+            .run()
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("byte offset 76"), "mmap={mmap}: {msg}");
+        msgs.push(msg);
+    }
+    assert_eq!(msgs[0], msgs[1], "one error-message set across both read paths");
+}

@@ -18,7 +18,7 @@ import json
 import sys
 
 TIMING_KEYS = ("wall_seconds", "mips")
-ENGINE_TIMING_KEYS = ("predict_seconds", "engine_seconds", "predictor_idle")
+ENGINE_TIMING_KEYS = ("encode_seconds", "predict_seconds", "engine_seconds", "predictor_idle")
 
 
 def scrubbed(report):
