@@ -30,7 +30,7 @@ use simnet::des::{simulate, SimConfig};
 use simnet::features::soa::SoaBatch;
 use simnet::features::{ContextTracker, NUM_FEATURES};
 use simnet::stats::Table;
-use simnet::trace::TraceRecord;
+use simnet::trace::{open_store, TraceRecord, TraceWriter};
 use simnet::workload::find;
 
 /// Batch slots cycled through while replaying — matches the engine's
@@ -105,12 +105,61 @@ fn run_seq(recs: &[TraceRecord], cfg: &SimConfig, seq: usize, reps: usize) -> (R
     )
 }
 
+/// Streamed decode throughput: write the trace to a temp `.smt`, then
+/// pull every record through a windowed mapped cursor — the engine's
+/// streaming read path — counting millions of records decoded per
+/// second. The summed fetch latencies double as an anti-DCE checksum
+/// and a correctness pin against the in-memory records.
+fn run_stream_decode(recs: &[TraceRecord], reps: usize) -> Row {
+    let dir = std::env::temp_dir().join("simnet_bench_encode");
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    let path = dir.join("stream.smt");
+    let mut w = TraceWriter::create(&path).expect("trace writer");
+    for r in recs {
+        w.write(r).expect("trace write");
+    }
+    assert_eq!(w.finish().expect("trace finish") as usize, recs.len());
+
+    let mut best = 0.0f64;
+    let mut sum = 0u64;
+    for _ in 0..reps {
+        let (store, _) = open_store(&path, true, true, 0).expect("open store");
+        let view = store.view();
+        let mut cur = view.cursor();
+        let t0 = Instant::now();
+        let mut s = 0u64;
+        for i in 0..cur.len() {
+            s += u64::from(cur.get(i).f_lat);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        best = best.max(recs.len() as f64 / secs.max(1e-12) / 1e6);
+        sum = s;
+    }
+    let direct: u64 = recs.iter().map(|r| u64::from(r.f_lat)).sum();
+    assert_eq!(sum, direct, "streamed decode must reproduce the records");
+    let _ = std::fs::remove_file(&path);
+    Row { name: "stream_decode".into(), seq: 0, mips: best }
+}
+
+/// Peak resident set size (VmHWM) in kB from `/proc/self/status`, or 0
+/// where that file does not exist (non-Linux).
+fn vm_hwm_kb() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else { return 0 };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.split_whitespace().next().and_then(|v| v.parse().ok()).unwrap_or(0);
+        }
+    }
+    0
+}
+
 fn write_json(path: &str, n: u64, quick: bool, rows: &[Row]) {
     let mut s = String::from("{\n");
     let _ = writeln!(s, "  \"bench\": \"encode\",");
     let _ = writeln!(s, "  \"n\": {n},");
     let _ = writeln!(s, "  \"quick\": {quick},");
     let _ = writeln!(s, "  \"slots\": {SLOTS},");
+    let _ = writeln!(s, "  \"vm_hwm_kb\": {},", vm_hwm_kb());
     let _ = writeln!(s, "  \"configs\": [");
     for (i, r) in rows.iter().enumerate() {
         let comma = if i + 1 < rows.len() { "," } else { "" };
@@ -163,6 +212,14 @@ fn main() {
         rows.push(soa);
     }
     print!("{}", table.render());
+
+    let stream = run_stream_decode(&recs, reps);
+    println!(
+        "streamed decode: {:.2} M-rec/s (windowed mapped cursor); peak RSS {} kB",
+        stream.mips,
+        vm_hwm_kb()
+    );
+    rows.push(stream);
 
     if let Some(path) = json_path {
         write_json(&path, n, quick, &rows);

@@ -15,7 +15,7 @@
 
 use std::path::Path;
 
-use simnet::coordinator::{simulate_parallel, simulate_sequential};
+use simnet::coordinator::{simulate_parallel_with, simulate_sequential, ParallelOptions};
 use simnet::des::{simulate, SimConfig};
 use simnet::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
 use simnet::stats::cpi_error;
@@ -70,7 +70,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     for subs in [16usize, 64, 256] {
-        let par = simulate_parallel(&records, &cfg, predictor.as_mut(), subs, 0)?;
+        let opts = ParallelOptions { subtraces: subs, ..ParallelOptions::default() };
+        let par = simulate_parallel_with((&records[..]).into(), &cfg, predictor.as_mut(), &opts)?;
         println!(
             "[ml]   parallel x{subs:<4}: cpi={:.3}  err={:.2}%  ({:.3} MIPS, {:.1}x vs sequential)",
             par.cpi(),

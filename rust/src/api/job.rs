@@ -26,7 +26,7 @@ use crate::des::{BpChoice, SimConfig};
 use crate::predictor::LatencyPredictor;
 use crate::reports::REFERENCE_SEED;
 use crate::server::json::{check_keys, Value};
-use crate::trace::{InputStats, TraceRecord, TraceSource};
+use crate::trace::{InputStats, RecordStore, TraceSource};
 use crate::workload::find;
 
 use super::{ExecMode, PredictorSpec, SimReport, Simulation, WeightsSource};
@@ -185,6 +185,11 @@ pub struct JobRequest {
     /// (default: true; targets without the syscall shim fall back to the
     /// buffered reader regardless).
     pub mmap: bool,
+    /// Whether mmap-able trace files stream through bounded decode
+    /// windows instead of a full up-front decode (default: true; see
+    /// [`super::Simulation::streaming`]). Results are bit-identical
+    /// either way.
+    pub streaming: bool,
 }
 
 /// Accepted top-level keys of the job JSON object, in canonical order.
@@ -200,6 +205,7 @@ const JOB_KEYS: &[&str] = &[
     "engine",
     "priority",
     "mmap",
+    "streaming",
 ];
 
 impl JobRequest {
@@ -219,6 +225,7 @@ impl JobRequest {
             engine: EngineOptions::default(),
             priority: Priority::Normal,
             mmap: true,
+            streaming: true,
         }
     }
 
@@ -306,6 +313,7 @@ impl JobRequest {
             .cfg_feature(self.cfg_feature)
             .input_seed(self.input_seed)
             .engine(self.engine)
+            .streaming(self.streaming)
             .source(self.source.to_trace_source(self.mmap));
         if let Some(c) = counter {
             sim = sim.progress(c);
@@ -313,19 +321,21 @@ impl JobRequest {
         sim.run()
     }
 
-    /// Materialize the trace records this job simulates, plus the
+    /// Materialize the record store this job simulates, plus the
     /// reference CPI, bench name, and input byte accounting for its
     /// report — the pieces the server's co-batching path feeds into one
-    /// shared engine. Resolved through the same
-    /// [`TraceSource`] code path as [`super::Simulation::run`].
-    pub(crate) fn materialize(
+    /// shared engine. Resolved through the same [`TraceSource`] code
+    /// path as [`super::Simulation::run`]; streaming jobs come back as a
+    /// bounded-window mapped store, so concurrent tenants stop holding
+    /// whole decoded traces.
+    pub(crate) fn materialize_store(
         &self,
         cfg: &SimConfig,
-    ) -> Result<(Vec<TraceRecord>, Option<f64>, Option<String>, InputStats)> {
+    ) -> Result<(RecordStore<'static>, Option<f64>, Option<String>, InputStats)> {
         let source = self.source.to_trace_source(self.mmap);
-        let (recs, cpi, bench, input) =
-            super::resolve_source(&source, cfg, self.input_seed, true)?;
-        Ok((recs.into_owned(), cpi, bench, input))
+        let (store, cpi, bench, input) =
+            super::resolve_source(&source, cfg, self.input_seed, true, self.streaming, 0)?;
+        Ok((store.into_static(), cpi, bench, input))
     }
 
     /// Render the request as one single-line JSON object (the wire form;
@@ -399,6 +409,7 @@ impl JobRequest {
             ("engine".into(), engine),
             ("priority".into(), Value::Str(self.priority.as_str().into())),
             ("mmap".into(), Value::Bool(self.mmap)),
+            ("streaming".into(), Value::Bool(self.streaming)),
         ])
     }
 
@@ -447,6 +458,10 @@ impl JobRequest {
         }
         if let Some(m) = v.get("mmap") {
             job.mmap = m.as_bool().ok_or_else(|| anyhow!("job: \"mmap\" must be a bool"))?;
+        }
+        if let Some(s) = v.get("streaming") {
+            job.streaming =
+                s.as_bool().ok_or_else(|| anyhow!("job: \"streaming\" must be a bool"))?;
         }
         Ok(job)
     }
@@ -643,6 +658,7 @@ mod tests {
         job.engine.target_batch = 8;
         job.priority = Priority::High;
         job.mmap = false;
+        job.streaming = false;
         job
     }
 
@@ -657,6 +673,7 @@ mod tests {
         assert_eq!(back.config, job.config);
         assert_eq!(back.predictor_key(), job.predictor_key());
         assert!(!back.mmap, "mmap switch must survive the wire");
+        assert!(!back.streaming, "streaming switch must survive the wire");
 
         // Minimal form: only source + predictor, everything else default.
         let small = JobRequest::new(

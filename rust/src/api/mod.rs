@@ -56,7 +56,6 @@ pub mod job;
 pub mod report;
 pub mod spec;
 
-use std::borrow::Cow;
 use std::path::PathBuf;
 use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
@@ -67,13 +66,13 @@ pub use report::{ExecMode, SimReport};
 pub use spec::{export_name, Backend, PredictorSpec, WeightsSource};
 
 use crate::coordinator::{
-    simulate_pool_report, simulate_sequential_progress, BatchEngine, EngineOptions, JobSpec,
-    PoolOptions,
+    simulate_pool_view, simulate_sequential_view, BatchEngine, EngineOptions, JobSpec, PoolOptions,
 };
 use crate::des::SimConfig;
 use crate::predictor::LatencyPredictor;
 use crate::reports::{des_trace, REFERENCE_SEED};
-use crate::trace::{load_trace, InputStats, TraceRecord, TraceSource};
+use crate::trace::mmap::MmapTrace;
+use crate::trace::{open_store, InputStats, RecordStore, TraceRecord, TraceSource};
 use crate::workload::find;
 
 /// Where a run's predictor comes from.
@@ -116,6 +115,8 @@ pub struct Simulation<'a> {
     cfg_feature: f32,
     seed: u64,
     mmap: bool,
+    streaming: bool,
+    stream_window: usize,
     progress: Option<Arc<AtomicU64>>,
 }
 
@@ -141,6 +142,8 @@ impl<'a> Simulation<'a> {
             cfg_feature: 0.0,
             seed: REFERENCE_SEED,
             mmap: true,
+            streaming: true,
+            stream_window: 0,
             progress: None,
         }
     }
@@ -178,6 +181,25 @@ impl<'a> Simulation<'a> {
     /// syscall shim fall back regardless.
     pub fn mmap(mut self, on: bool) -> Self {
         self.mmap = on;
+        self
+    }
+
+    /// Whether mmap-able trace files stream through bounded per-sub-trace
+    /// decode windows instead of a full up-front decode (default: true).
+    /// Resident memory then stays O(subtraces × window × 64 B) however
+    /// large the trace, and results are bit-identical. Only affects
+    /// [`TraceSource::File`] inputs on the mmap path; buffered reads fall
+    /// back to full decode regardless.
+    pub fn streaming(mut self, on: bool) -> Self {
+        self.streaming = on;
+        self
+    }
+
+    /// Streaming decode-window size in records per sub-trace cursor
+    /// (0 = [`crate::trace::DEFAULT_STREAM_WINDOW`]). Only consulted when
+    /// [`streaming`](Self::streaming) applies.
+    pub fn stream_window(mut self, records: usize) -> Self {
+        self.stream_window = records;
         self
     }
 
@@ -274,6 +296,8 @@ impl<'a> Simulation<'a> {
             cfg_feature,
             seed,
             mmap,
+            streaming,
+            stream_window,
             progress,
         } = self;
 
@@ -291,9 +315,11 @@ impl<'a> Simulation<'a> {
             anyhow!("no input: call .records(..), .bench(..), .trace_file(..), or .source(..)")
         })?;
         // resolve_source borrows the caller's records straight through
-        // (Cow::Borrowed), so the caller-records path never allocates.
-        let (records, des_cpi, bench, input) = resolve_source(&source, cfg, seed, mmap)?;
-        let records: &[TraceRecord] = &records;
+        // (a Memory store over the slice), so the caller-records path
+        // never allocates; streaming file sources come back as a Mapped
+        // store whose cursors decode on demand.
+        let (store, des_cpi, bench, mut input) =
+            resolve_source(&source, cfg, seed, mmap, streaming, stream_window)?;
 
         let mut built: Option<Box<dyn LatencyPredictor>> = None;
         let (predictor, spec_label): (&mut dyn LatencyPredictor, String) = match predictor {
@@ -317,24 +343,33 @@ impl<'a> Simulation<'a> {
             ExecMode::Sequential
         };
 
+        let view = store.view();
         let (outcome, stats) = match mode {
             ExecMode::Sequential => (
-                simulate_sequential_progress(records, cfg, predictor, window, progress.as_deref())?,
+                simulate_sequential_view(view, cfg, predictor, window, progress.as_deref())?,
                 None,
             ),
             ExecMode::Engine => {
                 let mut eng = BatchEngine::with_options(predictor, engine);
-                eng.submit(JobSpec { records, cfg, subtraces, window, cfg_feature, progress });
+                let spec = JobSpec { records: view, cfg, subtraces, window, cfg_feature, progress };
+                eng.submit(spec);
                 let report = eng.run()?;
                 let stats = report.stats.clone();
                 (report.merged(), Some(stats))
             }
             ExecMode::Pool => {
                 let opts = PoolOptions { workers, subtraces, window, cfg_feature, engine, progress };
-                let (out, stats) = simulate_pool_report(records, cfg, predictor, &opts)?;
+                let (out, stats) = simulate_pool_view(view, cfg, predictor, &opts)?;
                 (out, Some(stats))
             }
         };
+
+        // Streaming runs report the observed residency bound (the sum of
+        // every cursor's largest decode buffer) now that all cursors are
+        // done; full-decode runs recorded theirs at open time.
+        if input.window_records > 0 {
+            input.peak_resident_records = store.peak_resident_records();
+        }
 
         Ok(SimReport {
             predictor: label.unwrap_or(spec_label),
@@ -349,32 +384,43 @@ impl<'a> Simulation<'a> {
     }
 }
 
-/// Resolve a [`TraceSource`] into the records to simulate, the reference
-/// CPI, the bench name (when the source was a benchmark), and the input
-/// byte accounting — the one code path behind the builder, the CLI, and
-/// the job server. `mmap` is the session-level switch; a
+/// Resolve a [`TraceSource`] into the record store to simulate, the
+/// reference CPI, the bench name (when the source was a benchmark), and
+/// the input byte accounting — the one code path behind the builder, the
+/// CLI, and the job server. `mmap` is the session-level switch; a
 /// [`TraceSource::File`] takes the zero-copy path only when both its own
-/// flag and the session flag allow it.
+/// flag and the session flag allow it, and additionally comes back as a
+/// streaming [`RecordStore::Mapped`] (bounded decode windows of
+/// `stream_window` records) when `streaming` is on.
 pub(crate) fn resolve_source<'a>(
     source: &'a TraceSource<'a>,
     cfg: &SimConfig,
     seed: u64,
     mmap: bool,
-) -> Result<(Cow<'a, [TraceRecord]>, Option<f64>, Option<String>, InputStats)> {
+    streaming: bool,
+    stream_window: usize,
+) -> Result<(RecordStore<'a>, Option<f64>, Option<String>, InputStats)> {
     match source {
-        TraceSource::Records(r) => {
-            Ok((Cow::Borrowed(*r), Some(trace_reference_cpi(r)), None, InputStats::default()))
-        }
+        TraceSource::Records(r) => Ok((
+            RecordStore::from_records(r),
+            Some(trace_reference_cpi(r)),
+            None,
+            InputStats::default(),
+        )),
         TraceSource::Bench { name, n } => {
             let b = find(name).ok_or_else(|| anyhow!("unknown benchmark {name}"))?;
             let (recs, stats) = des_trace(cfg, &b, *n, seed);
-            Ok((Cow::Owned(recs), Some(stats.cpi()), Some(name.clone()), InputStats::default()))
+            let cpi = stats.cpi();
+            Ok((RecordStore::from_vec(recs), Some(cpi), Some(name.clone()), InputStats::default()))
         }
         TraceSource::File { path, mmap: file_mmap } => {
-            let (recs, input) = load_trace(path, mmap && *file_mmap)
+            let (store, input) = open_store(path, mmap && *file_mmap, streaming, stream_window)
                 .with_context(|| format!("open {}", path.display()))?;
-            let cpi = trace_reference_cpi(&recs);
-            Ok((Cow::Owned(recs), Some(cpi), None, input))
+            let cpi = match &store {
+                RecordStore::Memory(recs) => trace_reference_cpi(recs),
+                RecordStore::Mapped { map, .. } => mapped_reference_cpi(map),
+            };
+            Ok((store, Some(cpi), None, input))
         }
     }
 }
@@ -384,6 +430,19 @@ pub(crate) fn resolve_source<'a>(
 fn trace_reference_cpi(records: &[TraceRecord]) -> f64 {
     let cycles: u64 = records.iter().map(|r| r.f_lat as u64).sum();
     cycles as f64 / records.len().max(1) as f64
+}
+
+/// [`trace_reference_cpi`] for a mapped trace: reads each record's
+/// fetch-latency field (bytes 48..52) straight out of the mapping, so
+/// the reference CPI costs one sequential page scan instead of a full
+/// decode. Bit-identical to the in-memory formula.
+fn mapped_reference_cpi(map: &MmapTrace) -> f64 {
+    let mut cycles = 0u64;
+    for i in 0..map.count() {
+        let b = map.record_bytes(i);
+        cycles += u64::from(u32::from_le_bytes([b[48], b[49], b[50], b[51]]));
+    }
+    cycles as f64 / (map.count() as usize).max(1) as f64
 }
 
 #[cfg(test)]

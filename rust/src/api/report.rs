@@ -73,7 +73,8 @@ pub struct SimReport {
     pub des_cpi: Option<f64>,
     /// Input byte accounting: bytes served zero-copy through the mmap
     /// path vs staged through buffered `read` copies (both zero for
-    /// in-memory and bench sources).
+    /// in-memory and bench sources), plus the streaming residency bound
+    /// (`peak_resident_records` / `window_records`).
     pub input: InputStats,
 }
 
@@ -116,6 +117,8 @@ impl SimReport {
             ("wall_seconds", json_f(self.outcome.wall_seconds)),
             ("bytes_mapped", self.input.bytes_mapped.to_string()),
             ("bytes_copied", self.input.bytes_copied.to_string()),
+            ("peak_resident_records", self.input.peak_resident_records.to_string()),
+            ("window_records", self.input.window_records.to_string()),
         ];
         let windows: Vec<String> =
             self.outcome.windows.iter().map(|(n, c)| format!("[{n}, {c}]")).collect();

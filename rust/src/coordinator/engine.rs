@@ -11,7 +11,7 @@
 //! boundaries and predictor occupancy collapsed as workers grew.
 //!
 //! [`BatchEngine`] inverts that: a job-queue front end accepts many
-//! concurrent simulation jobs ([`JobSpec`]: trace slice + `SimConfig` +
+//! concurrent simulation jobs ([`JobSpec`]: record view + `SimConfig` +
 //! config feature), and the scheduler multiplexes the next-instruction
 //! slots of *all* active sub-traces across *all* jobs into shared
 //! [`LatencyPredictor`] batches with a configurable target batch size.
@@ -80,14 +80,15 @@ use crate::des::SimConfig;
 use crate::features::soa::SoaBatch;
 use crate::features::{ContextTracker, NUM_FEATURES};
 use crate::predictor::LatencyPredictor;
-use crate::trace::TraceRecord;
+use crate::trace::{RecordCursor, RecordsView};
 
 use super::SimOutcome;
 
 /// One simulation job submitted to the engine.
 pub struct JobSpec<'a> {
-    /// Trace slice to simulate (contiguous instruction records).
-    pub records: &'a [TraceRecord],
+    /// Records to simulate: a decoded slice (`(&recs[..]).into()`) or a
+    /// streaming view over a mapped trace ([`crate::trace::RecordStore`]).
+    pub records: RecordsView<'a>,
     /// Machine configuration for the job's context trackers.
     pub cfg: &'a SimConfig,
     /// Sub-trace parallelism within the job (clamped to the trace size).
@@ -242,7 +243,11 @@ impl EngineReport {
 }
 
 struct SubTrace<'a> {
-    records: &'a [TraceRecord],
+    /// Windowed reader over this sub-trace's records (zero-cost over
+    /// decoded slices; a bounded decode buffer over mapped traces).
+    cur: RecordCursor<'a>,
+    /// Records in the sub-trace (cached; `cur.len()` behind one match).
+    len: usize,
     pos: usize,
     tracker: ContextTracker,
     windows: Vec<(u64, u64)>,
@@ -290,11 +295,16 @@ impl<'a, 'p> BatchEngine<'a, 'p> {
             let mode = self.predictor.context_mode();
             let s = spec.subtraces.clamp(1, n);
             let chunk = n.div_ceil(s);
-            for c in spec.records.chunks(chunk) {
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + chunk).min(n);
+                let sub = spec.records.slice(lo, hi);
+                lo = hi;
                 let mut tracker = ContextTracker::with_mode(spec.cfg, mode);
                 tracker.cfg_feature = spec.cfg_feature;
                 self.subs.push(SubTrace {
-                    records: c,
+                    len: sub.len(),
+                    cur: sub.cursor(),
                     pos: 0,
                     tracker,
                     windows: Vec::new(),
@@ -372,7 +382,9 @@ impl<'a, 'p> BatchEngine<'a, 'p> {
 /// advance the cursor, and roll the CPI window. Identical on the serial
 /// and pipelined paths — this is the only place latencies enter a job.
 fn scatter_one(sub: &mut SubTrace<'_>, pred: (u32, u32, u32)) {
-    let rec = &sub.records[sub.pos];
+    // Same position the encode just read, so this hits the cursor's
+    // window — no second decode on the mapped path.
+    let rec = sub.cur.get(sub.pos);
     let (f, e, s_lat) = pred;
     let s_lat = if rec.inst.is_store() { s_lat.max(e + 1) } else { 0 };
     sub.tracker.push(&rec.inst, &rec.hist, f, e.max(1), s_lat);
@@ -409,7 +421,7 @@ fn serial_loop(
     width: usize,
     stats: &mut EngineStats,
 ) -> Result<()> {
-    let mut active: Vec<usize> = (0..subs.len()).filter(|&i| !subs[i].records.is_empty()).collect();
+    let mut active: Vec<usize> = (0..subs.len()).filter(|&i| subs[i].len > 0).collect();
     let mut batch = vec![0.0f32; cap * width];
     let mut soa = SoaBatch::new(cap, seq);
     while !active.is_empty() {
@@ -421,8 +433,8 @@ fn serial_loop(
             // Gather: encode the next instruction of each slot.
             let te = Instant::now();
             for k in 0..take {
-                let sub = &subs[active[base + k]];
-                let rec = &sub.records[sub.pos];
+                let sub = &mut subs[active[base + k]];
+                let rec = sub.cur.get(sub.pos);
                 soa.encode_into(
                     &sub.tracker,
                     &rec.inst,
@@ -449,7 +461,7 @@ fn serial_loop(
             }
             base += take;
         }
-        active.retain(|&i| subs[i].pos < subs[i].records.len());
+        active.retain(|&i| subs[i].pos < subs[i].len);
     }
     for sub in subs.iter_mut() {
         finish_sub(sub);
@@ -632,16 +644,14 @@ fn encode_worker<'a>(mut cx: WorkerCtx<'a>) -> (usize, Vec<SubTrace<'a>>, f64) {
                 for s in d.base..d.base + d.take {
                     let g = active[s];
                     if g % cx.workers == cx.w {
-                        let sub = &cx.subs[g / cx.workers];
-                        let rec = &sub.records[sub.pos];
+                        let width = cx.width;
+                        let sub = &mut cx.subs[g / cx.workers];
+                        let rec = sub.cur.get(sub.pos);
                         // SAFETY: see [`BufPtr`] — this worker exclusively
                         // owns slot `s` of this chunk, and the protocol
                         // serializes buffer reuse and the coordinator read.
                         let out = unsafe {
-                            std::slice::from_raw_parts_mut(
-                                buf.0.add((s - d.base) * cx.width),
-                                cx.width,
-                            )
+                            std::slice::from_raw_parts_mut(buf.0.add((s - d.base) * width), width)
                         };
                         soa.encode_into(&sub.tracker, &rec.inst, &rec.hist, s - d.base, out);
                     }
@@ -688,7 +698,7 @@ fn pipelined_loop<'a>(
     let (cap, workers) = (pcfg.cap, pcfg.threads);
     let (seq, width) = (pcfg.seq, pcfg.width);
     let total = subs.len();
-    let lens: Arc<Vec<usize>> = Arc::new(subs.iter().map(|s| s.records.len()).collect());
+    let lens: Arc<Vec<usize>> = Arc::new(subs.iter().map(|s| s.len).collect());
     let sched = Arc::new(Schedule::plan(&lens, cap));
     let n_chunks = sched.total_chunks;
     if n_chunks == 0 {
@@ -894,8 +904,8 @@ fn forked_worker<'a>(mut cx: ForkedCtx<'a>) -> Result<(usize, Vec<SubTrace<'a>>,
         // private batch exactly as it bounds the serial loop's.
         let te = Instant::now();
         for (k, &local) in owned.iter().enumerate() {
-            let sub = &cx.subs[local];
-            let rec = &sub.records[sub.pos];
+            let sub = &mut cx.subs[local];
+            let rec = sub.cur.get(sub.pos);
             soa.encode_into(
                 &sub.tracker,
                 &rec.inst,
@@ -934,7 +944,7 @@ fn forked_loop<'a>(
 ) -> Result<Vec<SubTrace<'a>>> {
     let (cap, workers) = (pcfg.cap, pcfg.threads);
     let total = subs.len();
-    let lens: Arc<Vec<usize>> = Arc::new(subs.iter().map(|s| s.records.len()).collect());
+    let lens: Arc<Vec<usize>> = Arc::new(subs.iter().map(|s| s.len).collect());
     let sched = Arc::new(Schedule::plan(&lens, cap));
     let n_chunks = sched.total_chunks;
     if n_chunks == 0 {
@@ -1007,9 +1017,10 @@ fn forked_loop<'a>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::simulate_parallel;
+    use crate::coordinator::{simulate_parallel_with, ParallelOptions};
     use crate::des::simulate;
     use crate::predictor::TablePredictor;
+    use crate::trace::TraceRecord;
     use crate::workload::find;
 
     fn make_records(bench: &str, n: u64) -> Vec<TraceRecord> {
@@ -1021,7 +1032,14 @@ mod tests {
     }
 
     fn job<'a>(records: &'a [TraceRecord], cfg: &'a SimConfig, subtraces: usize) -> JobSpec<'a> {
-        JobSpec { records, cfg, subtraces, window: 1_000, cfg_feature: 0.0, progress: None }
+        JobSpec {
+            records: records.into(),
+            cfg,
+            subtraces,
+            window: 1_000,
+            cfg_feature: 0.0,
+            progress: None,
+        }
     }
 
     #[test]
@@ -1029,7 +1047,8 @@ mod tests {
         let cfg = SimConfig::default_o3();
         let recs = make_records("gcc", 6_000);
         let mut p1 = TablePredictor::new(16);
-        let par = simulate_parallel(&recs, &cfg, &mut p1, 4, 1_000).unwrap();
+        let opts = ParallelOptions { subtraces: 4, window: 1_000, ..ParallelOptions::default() };
+        let par = simulate_parallel_with((&recs[..]).into(), &cfg, &mut p1, &opts).unwrap();
         let mut p2 = TablePredictor::new(16);
         let mut engine = BatchEngine::new(&mut p2, 0);
         engine.submit(job(&recs, &cfg, 4));
@@ -1229,7 +1248,7 @@ mod tests {
             let opts = EngineOptions { encode_threads: threads, ..EngineOptions::default() };
             let mut engine = BatchEngine::with_options(&mut p, opts);
             engine.submit(JobSpec {
-                records: &recs,
+                records: recs.as_slice().into(),
                 cfg: &cfg,
                 subtraces: 3,
                 window: 0,

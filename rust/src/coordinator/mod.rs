@@ -22,9 +22,11 @@ pub mod pool;
 pub mod sequential;
 
 pub use engine::{BatchEngine, EngineOptions, EngineReport, EngineStats, JobSpec};
+#[allow(deprecated)]
 pub use parallel::{simulate_parallel, simulate_parallel_cfg};
-pub use pool::{simulate_pool, simulate_pool_report, PoolOptions};
-pub use sequential::{simulate_sequential, simulate_sequential_progress};
+pub use parallel::{simulate_parallel_with, ParallelOptions};
+pub use pool::{simulate_pool, simulate_pool_report, simulate_pool_view, PoolOptions};
+pub use sequential::{simulate_sequential, simulate_sequential_progress, simulate_sequential_view};
 
 /// Result of an ML-simulated run.
 #[derive(Debug, Clone, Default)]
@@ -121,12 +123,14 @@ mod tests {
         let mut p1 = TablePredictor::new(16);
         let seq = simulate_sequential(&recs, &cfg, &mut p1, 0).unwrap();
         let mut p2 = TablePredictor::new(16);
-        let par1 = simulate_parallel(&recs, &cfg, &mut p2, 1, 0).unwrap();
+        let one = ParallelOptions::default();
+        let par1 = simulate_parallel_with((&recs[..]).into(), &cfg, &mut p2, &one).unwrap();
         assert_eq!(seq.cycles, par1.cycles);
         // With several sub-traces the totals differ only by boundary
         // effects (cold context at each sub-trace start).
         let mut p4 = TablePredictor::new(16);
-        let par4 = simulate_parallel(&recs, &cfg, &mut p4, 4, 0).unwrap();
+        let four = ParallelOptions { subtraces: 4, ..ParallelOptions::default() };
+        let par4 = simulate_parallel_with((&recs[..]).into(), &cfg, &mut p4, &four).unwrap();
         assert_eq!(par4.instructions, 4_000);
         let ratio = par4.cycles as f64 / seq.cycles as f64;
         assert!((0.8..=1.25).contains(&ratio), "ratio={ratio}");
@@ -137,7 +141,8 @@ mod tests {
         let cfg = SimConfig::default_o3();
         let (recs, _) = make_records("xz", 100);
         let mut p = TablePredictor::new(16);
-        let out = simulate_parallel(&recs, &cfg, &mut p, 1000, 0).unwrap();
+        let opts = ParallelOptions { subtraces: 1000, ..ParallelOptions::default() };
+        let out = simulate_parallel_with((&recs[..]).into(), &cfg, &mut p, &opts).unwrap();
         assert_eq!(out.instructions, 100);
     }
 

@@ -1,6 +1,6 @@
 //! Sub-trace parallel ML simulation (paper §3.3, Figure 4).
 //!
-//! The input trace is partitioned into `num_subtraces` equally sized
+//! The input trace is partitioned into `subtraces` equally sized
 //! *contiguous* sub-traces. Each sub-trace is simulated sequentially
 //! against its own context queues and clock, but every simulation step
 //! gathers the next instruction of all still-active sub-traces into ONE
@@ -11,21 +11,80 @@
 //!
 //! Since the [`super::engine`] refactor this module is a thin single-job
 //! wrapper over [`BatchEngine`] (unbounded target batch = the original
-//! one-batch-per-round behavior, serial encode path), kept for backward
-//! compatibility; use [`BatchEngine::with_options`] directly for the
+//! one-batch-per-round behavior, serial encode path). The entry point is
+//! [`simulate_parallel_with`], which takes a [`ParallelOptions`] struct
+//! and a streaming-capable [`RecordsView`]; the historical positional
+//! signatures (`simulate_parallel`, `simulate_parallel_cfg`) remain as
+//! deprecated shims. Use [`BatchEngine::with_options`] directly for the
 //! pipelined multi-threaded configuration.
 
 use anyhow::Result;
 
 use crate::des::SimConfig;
 use crate::predictor::LatencyPredictor;
-use crate::trace::TraceRecord;
+use crate::trace::{RecordsView, TraceRecord};
 
 use super::engine::{BatchEngine, JobSpec};
 use super::SimOutcome;
 
+/// Knobs for [`simulate_parallel_with`] — the collapsed form of the old
+/// `simulate_parallel` / `simulate_parallel_cfg` positional signatures.
+///
+/// # Examples
+///
+/// ```
+/// use simnet::coordinator::ParallelOptions;
+///
+/// let opts = ParallelOptions { subtraces: 16, ..ParallelOptions::default() };
+/// assert_eq!(opts.window, 0); // no CPI series by default
+/// assert_eq!(opts.cfg_feature, 0.0); // §5 ROB study feature off
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParallelOptions {
+    /// Sub-trace parallelism (clamped to the trace size; 1 = sequential
+    /// batching semantics through the engine).
+    pub subtraces: usize,
+    /// CPI window in instructions (0 = no windows), Figure 6.
+    pub window: u64,
+    /// Configuration input feature on every context tracker (the §5 ROB
+    /// study feeds the ROB size here), 0.0 when unused.
+    pub cfg_feature: f32,
+}
+
+impl Default for ParallelOptions {
+    fn default() -> Self {
+        ParallelOptions { subtraces: 1, window: 0, cfg_feature: 0.0 }
+    }
+}
+
+/// Simulate one record view with sub-trace parallelism per `opts`.
+///
+/// Accepts any [`RecordsView`] — a decoded slice (`(&recs[..]).into()`)
+/// or a streaming view of a mapped trace (`store.view()`), in which case
+/// each sub-trace decodes through a bounded window instead of a full
+/// in-memory copy. Results are bit-identical either way.
+pub fn simulate_parallel_with(
+    records: RecordsView<'_>,
+    cfg: &SimConfig,
+    predictor: &mut dyn LatencyPredictor,
+    opts: &ParallelOptions,
+) -> Result<SimOutcome> {
+    let mut engine = BatchEngine::new(predictor, 0);
+    engine.submit(JobSpec {
+        records,
+        cfg,
+        subtraces: opts.subtraces,
+        window: opts.window,
+        cfg_feature: opts.cfg_feature,
+        progress: None,
+    });
+    let report = engine.run()?;
+    Ok(report.merged())
+}
+
 /// Simulate with `num_subtraces`-way sub-trace parallelism. `window` > 0
 /// emits CPI-series windows (in original trace order).
+#[deprecated(note = "use `simulate_parallel_with` and `ParallelOptions`")]
 pub fn simulate_parallel(
     records: &[TraceRecord],
     cfg: &SimConfig,
@@ -33,11 +92,13 @@ pub fn simulate_parallel(
     num_subtraces: usize,
     window: u64,
 ) -> Result<SimOutcome> {
-    simulate_parallel_cfg(records, cfg, predictor, num_subtraces, window, 0.0)
+    let opts = ParallelOptions { subtraces: num_subtraces, window, cfg_feature: 0.0 };
+    simulate_parallel_with(records.into(), cfg, predictor, &opts)
 }
 
-/// [`simulate_parallel`] with the configuration feature set on every
+/// `simulate_parallel` with the configuration feature set on every
 /// context tracker (the §5 ROB study feeds the ROB size here).
+#[deprecated(note = "use `simulate_parallel_with` and `ParallelOptions`")]
 pub fn simulate_parallel_cfg(
     records: &[TraceRecord],
     cfg: &SimConfig,
@@ -46,15 +107,43 @@ pub fn simulate_parallel_cfg(
     window: u64,
     cfg_feature: f32,
 ) -> Result<SimOutcome> {
-    let mut engine = BatchEngine::new(predictor, 0);
-    engine.submit(JobSpec {
-        records,
-        cfg,
-        subtraces: num_subtraces,
-        window,
-        cfg_feature,
-        progress: None,
-    });
-    let report = engine.run()?;
-    Ok(report.merged())
+    let opts = ParallelOptions { subtraces: num_subtraces, window, cfg_feature };
+    simulate_parallel_with(records.into(), cfg, predictor, &opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::simulate;
+    use crate::predictor::TablePredictor;
+    use crate::workload::find;
+
+    /// The deprecated positional shims must stay exact aliases of the
+    /// options-struct entry point.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_the_options_entry_point() {
+        let cfg = SimConfig::default_o3();
+        let b = find("xz").unwrap();
+        let mut recs = Vec::new();
+        simulate(&cfg, b.workload(0).stream(), 2_000, |e| recs.push(TraceRecord::from(e)));
+
+        let mut p1 = TablePredictor::new(16);
+        let opts = ParallelOptions { subtraces: 4, window: 500, cfg_feature: 2.5 };
+        let new = simulate_parallel_with((&recs[..]).into(), &cfg, &mut p1, &opts).unwrap();
+
+        let mut p2 = TablePredictor::new(16);
+        let old = simulate_parallel_cfg(&recs, &cfg, &mut p2, 4, 500, 2.5).unwrap();
+        assert_eq!(new.cycles, old.cycles);
+        assert_eq!(new.instructions, old.instructions);
+        assert_eq!(new.windows, old.windows);
+
+        let mut p3 = TablePredictor::new(16);
+        let plain_opts = ParallelOptions { subtraces: 4, window: 500, ..Default::default() };
+        let plain = simulate_parallel_with((&recs[..]).into(), &cfg, &mut p3, &plain_opts).unwrap();
+        let mut p4 = TablePredictor::new(16);
+        let old_plain = simulate_parallel(&recs, &cfg, &mut p4, 4, 500).unwrap();
+        assert_eq!(plain.cycles, old_plain.cycles);
+        assert_eq!(plain.windows, old_plain.windows);
+    }
 }

@@ -30,7 +30,7 @@ use anyhow::Result;
 
 use crate::des::SimConfig;
 use crate::predictor::LatencyPredictor;
-use crate::trace::TraceRecord;
+use crate::trace::{RecordsView, TraceRecord};
 
 use super::engine::{BatchEngine, EngineOptions, EngineStats, JobSpec};
 use super::SimOutcome;
@@ -89,6 +89,19 @@ pub fn simulate_pool_report(
     predictor: &mut dyn LatencyPredictor,
     opts: &PoolOptions,
 ) -> Result<(SimOutcome, EngineStats)> {
+    simulate_pool_view(records.into(), cfg, predictor, opts)
+}
+
+/// The streaming-capable core behind [`simulate_pool_report`]: shards a
+/// [`RecordsView`] (decoded slice or mapped streaming view) over the
+/// engine's jobs. Each shard's sub-traces read through their own bounded
+/// cursors, so a mapped trace never materializes in full.
+pub fn simulate_pool_view(
+    records: RecordsView<'_>,
+    cfg: &SimConfig,
+    predictor: &mut dyn LatencyPredictor,
+    opts: &PoolOptions,
+) -> Result<(SimOutcome, EngineStats)> {
     let workers = opts.workers.max(1);
     let n = records.len();
     let shard = n.div_ceil(workers).max(1);
@@ -113,7 +126,7 @@ pub fn simulate_pool_report(
         }
         let subtraces = (base + usize::from(w < rem)).max(1);
         engine.submit(JobSpec {
-            records: &records[lo..hi],
+            records: records.slice(lo, hi),
             cfg,
             subtraces,
             window: opts.window,

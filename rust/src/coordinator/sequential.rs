@@ -12,7 +12,7 @@ use anyhow::Result;
 use crate::des::SimConfig;
 use crate::features::{ContextTracker, NUM_FEATURES};
 use crate::predictor::LatencyPredictor;
-use crate::trace::TraceRecord;
+use crate::trace::{RecordsView, TraceRecord};
 
 use super::SimOutcome;
 
@@ -24,7 +24,7 @@ pub fn simulate_sequential(
     predictor: &mut dyn LatencyPredictor,
     window: u64,
 ) -> Result<SimOutcome> {
-    simulate_sequential_progress(records, cfg, predictor, window, None)
+    simulate_sequential_view(records.into(), cfg, predictor, window, None)
 }
 
 /// [`simulate_sequential`] that additionally bumps `progress` once per
@@ -32,6 +32,21 @@ pub fn simulate_sequential(
 /// progress hook. Results are identical to the plain entry point.
 pub fn simulate_sequential_progress(
     records: &[TraceRecord],
+    cfg: &SimConfig,
+    predictor: &mut dyn LatencyPredictor,
+    window: u64,
+    progress: Option<&AtomicU64>,
+) -> Result<SimOutcome> {
+    simulate_sequential_view(records.into(), cfg, predictor, window, progress)
+}
+
+/// The streaming-capable core behind both entry points: drives a
+/// [`RecordsView`] through a single forward [`crate::trace::RecordCursor`],
+/// so a mapped trace is simulated with a bounded decode window instead of
+/// a full in-memory copy. Over a plain slice the cursor is a zero-cost
+/// passthrough and the loop is byte-identical to the historical one.
+pub fn simulate_sequential_view(
+    records: RecordsView<'_>,
     cfg: &SimConfig,
     predictor: &mut dyn LatencyPredictor,
     window: u64,
@@ -45,7 +60,9 @@ pub fn simulate_sequential_progress(
     let mut window_start_tick = 0u64;
     let t0 = Instant::now();
 
-    for rec in records {
+    let mut cur = records.cursor();
+    for i in 0..cur.len() {
+        let rec = cur.get(i);
         tracker.encode_input(&rec.inst, &rec.hist, seq, &mut buf);
         let (f, e, s) = predictor.predict(&buf, 1)?[0];
         // Stores must have a store latency at least covering execution;

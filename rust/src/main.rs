@@ -63,6 +63,7 @@ const RUN_FLAGS: &[&str] = &[
     "pipeline-depth",
     "no-fork-predict",
     "no-mmap",
+    "streaming",
 ];
 
 /// The accepted flag sets of every subcommand (report/sweep variants are
@@ -155,6 +156,18 @@ impl Args {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad value {v}")),
+        }
+    }
+
+    /// Boolean flag: absent uses `default`; bare `--key` (the parser
+    /// gives it the value "true") or `--key true` is true; `--key false`
+    /// is false; anything else is a named error.
+    fn bool_flag(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => Err(anyhow!("--{key}: bad value {v} (true|false)")),
         }
     }
 
@@ -337,8 +350,8 @@ fn print_usage() {
          \x20              [--weights W.smw|init] [--seq S] [--subtraces S] [--workers W]\n\
          \x20              [--target-batch B] [--encode-threads T] [--pipeline-depth D]\n\
          \x20              [--no-fork-predict]\n\
-         \x20              [--trace file.smt] [--no-mmap] [--artifacts DIR] [--window W]\n\
-         \x20              [--json out.json]\n\
+         \x20              [--trace file.smt] [--no-mmap] [--streaming true|false]\n\
+         \x20              [--artifacts DIR] [--window W] [--json out.json]\n\
          \x20 serve        [--addr 127.0.0.1:7878] [--queue-cap N] [--max-cobatch N] [--quiet]\n\
          \x20 submit       --bench NAME --n N [simulate-ml flags] [--addr A] [--priority normal|high]\n\
          \x20              [--follow] [--json out.json]\n\
@@ -495,6 +508,12 @@ fn print_report(report: &SimReport) {
             report.input.bytes_mapped, report.input.bytes_copied
         );
     }
+    if report.input.window_records > 0 {
+        println!(
+            "streaming: window={} records/sub-trace, peak resident {} records",
+            report.input.window_records, report.input.peak_resident_records
+        );
+    }
     if let Some(stats) = &report.engine {
         let busy = 1.0 - stats.predictor_idle();
         println!(
@@ -552,7 +571,10 @@ fn cmd_simulate_ml(args: &Args) -> Result<()> {
         .input_seed(args.num("input-seed", reports::REFERENCE_SEED)?)
         // Presence flag: the zero-copy mmap read path is the default;
         // --no-mmap forces the buffered reader for trace files.
-        .mmap(args.get("no-mmap").is_none());
+        .mmap(args.get("no-mmap").is_none())
+        // Windowed streaming decode is the default for mmapped trace
+        // files; --streaming false forces the full up-front decode.
+        .streaming(args.bool_flag("streaming", true)?);
     sim = if let Some(path) = args.get("trace") {
         // The trace file already fixes the workload; flags that would
         // silently lose to it are rejected, not ignored.
@@ -622,6 +644,7 @@ fn job_request_from(args: &Args) -> Result<JobRequest> {
     job.engine = engine_options_from(args)?;
     job.priority = Priority::parse(args.get("priority").unwrap_or("normal"))?;
     job.mmap = args.get("no-mmap").is_none();
+    job.streaming = args.bool_flag("streaming", true)?;
     Ok(job)
 }
 

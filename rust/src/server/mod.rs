@@ -47,7 +47,7 @@ use crate::api::{ExecMode, SimReport};
 use crate::coordinator::{BatchEngine, JobSpec};
 use crate::des::SimConfig;
 use crate::predictor::LatencyPredictor;
-use crate::trace::{InputStats, TraceRecord};
+use crate::trace::{InputStats, RecordStore};
 
 use self::json::quote;
 use self::protocol::{err_line, read_request_line, LineRead, Request};
@@ -416,11 +416,14 @@ fn run_group(shared: &Shared, group: &[(u64, JobRequest, Arc<AtomicU64>)]) {
 }
 
 /// A materialized group member, owning everything its `JobSpec` borrows.
+/// The job's input stays behind its [`RecordStore`]: an in-memory store
+/// for bench/decoded sources, a windowed mapped store for streaming
+/// trace files — so co-resident tenants stop duplicating decoded traces.
 struct Prepared {
     id: u64,
     job: JobRequest,
     cfg: SimConfig,
-    records: Vec<TraceRecord>,
+    store: RecordStore<'static>,
     des_cpi: Option<f64>,
     bench: Option<String>,
     input: InputStats,
@@ -439,17 +442,17 @@ fn run_cobatch(
     let mut prepared: Vec<Prepared> = Vec::with_capacity(group.len());
     for (id, job, progress) in group {
         let built = job.config.build().and_then(|cfg| {
-            let (records, des_cpi, bench, input) = job.materialize(&cfg)?;
-            Ok((cfg, records, des_cpi, bench, input))
+            let (store, des_cpi, bench, input) = job.materialize_store(&cfg)?;
+            Ok((cfg, store, des_cpi, bench, input))
         });
         match built {
-            Ok((cfg, records, des_cpi, bench, input)) => {
-                shared.table.set_total(*id, records.len() as u64);
+            Ok((cfg, store, des_cpi, bench, input)) => {
+                shared.table.set_total(*id, store.len() as u64);
                 prepared.push(Prepared {
                     id: *id,
                     job: job.clone(),
                     cfg,
-                    records,
+                    store,
                     des_cpi,
                     bench,
                     input,
@@ -467,7 +470,7 @@ fn run_cobatch(
     let mut engine = BatchEngine::with_options(predictor, prepared[0].job.engine);
     for p in &prepared {
         engine.submit(JobSpec {
-            records: &p.records,
+            records: p.store.view(),
             cfg: &p.cfg,
             subtraces: p.job.subtraces.max(1),
             window: p.job.window,
@@ -478,6 +481,12 @@ fn run_cobatch(
     match engine.run() {
         Ok(report) => {
             for (k, p) in prepared.iter().enumerate() {
+                let mut input = p.input;
+                // Streaming members report the residency their cursors
+                // actually reached (bounded by subtraces x window).
+                if input.window_records > 0 {
+                    input.peak_resident_records = p.store.peak_resident_records();
+                }
                 let sim = SimReport {
                     predictor: p.job.predictor.label(),
                     mode: ExecMode::Engine,
@@ -486,7 +495,7 @@ fn run_cobatch(
                     outcome: report.jobs[k].clone(),
                     engine: Some(report.stats.clone()),
                     des_cpi: p.des_cpi,
-                    input: p.input,
+                    input,
                 };
                 shared.table.finish(p.id, sim.to_json_compact());
                 shared.log(&format!("job {} done (co-batched x{})", p.id, prepared.len()));

@@ -25,6 +25,7 @@ mod sys {
 
     const PROT_READ: usize = 1;
     const MAP_PRIVATE: usize = 2;
+    const MADV_SEQUENTIAL: usize = 2;
 
     #[cfg(target_arch = "x86_64")]
     unsafe fn sys_mmap(len: usize, prot: usize, flags: usize, fd: isize) -> isize {
@@ -38,6 +39,22 @@ mod sys {
             in("r10") flags,
             in("r8") fd,
             in("r9") 0usize,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn sys_madvise(addr: usize, len: usize, advice: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 28isize => ret, // SYS_madvise
+            in("rdi") addr,
+            in("rsi") len,
+            in("rdx") advice,
             lateout("rcx") _,
             lateout("r11") _,
             options(nostack)
@@ -72,6 +89,20 @@ mod sys {
             in("x3") flags,
             in("x4") fd,
             in("x5") 0usize,
+            options(nostack)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn sys_madvise(addr: usize, len: usize, advice: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") 233usize, // SYS_madvise
+            inlateout("x0") addr as isize => ret,
+            in("x1") len,
+            in("x2") advice,
             options(nostack)
         );
         ret
@@ -119,6 +150,15 @@ mod sys {
             // bytes, unmapped only in Drop.
             unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
         }
+
+        /// Best-effort `madvise(MADV_SEQUENTIAL)`: trace reads are
+        /// forward scans, so ask the kernel for aggressive readahead
+        /// and early reclaim of pages behind the cursors. Advice only —
+        /// errors are ignored (the mapping stays fully functional).
+        pub fn advise_sequential(&self) {
+            // SAFETY: advising the exact live range mmap returned.
+            unsafe { sys_madvise(self.ptr as usize, self.len, MADV_SEQUENTIAL) };
+        }
     }
 
     impl Drop for Map {
@@ -147,6 +187,8 @@ mod sys {
         pub fn bytes(&self) -> &[u8] {
             &[]
         }
+
+        pub fn advise_sequential(&self) {}
     }
 }
 
@@ -176,6 +218,7 @@ impl MmapTrace {
     /// Map an already-validated trace file of `file_len` bytes.
     pub(crate) fn from_file(file: &File, count: u64, file_len: u64) -> io::Result<MmapTrace> {
         let map = sys::Map::new(file, file_len as usize)?;
+        map.advise_sequential();
         Ok(MmapTrace { map, count })
     }
 

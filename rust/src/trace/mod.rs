@@ -20,6 +20,9 @@ use crate::history::HistoryInfo;
 use crate::isa::{Inst, OpClass, MAX_DST_REGS, MAX_SRC_REGS};
 
 pub mod mmap;
+pub mod store;
+
+pub use store::{RecordCursor, RecordStore, RecordsView, ResidentGauge, DEFAULT_STREAM_WINDOW};
 
 /// Size in bytes of one on-disk trace record.
 pub const RECORD_SIZE: usize = 64;
@@ -245,23 +248,60 @@ pub struct InputStats {
     pub bytes_mapped: u64,
     /// Bytes staged through buffered `read` copies.
     pub bytes_copied: u64,
+    /// Peak decoded records resident at once while reading a trace
+    /// file: the full record count on the full-decode path, the sum of
+    /// per-cursor window maxima on the streaming path (at most
+    /// subtraces × `window_records`). Zero for in-memory and bench
+    /// sources, whose records the caller already holds.
+    pub peak_resident_records: u64,
+    /// Configured streaming decode window in records (0 = the run was
+    /// not streamed: full decode or an in-memory source).
+    pub window_records: u64,
 }
 
-/// Read a whole trace into memory, preferring the zero-copy mmap path.
+/// Open an `.smt` trace as a [`RecordStore`] — THE single validated
+/// open path every consumer (full decode, streaming, buffered) shares.
 ///
 /// `use_mmap: false` — or a target without the syscall shim — takes the
-/// buffered [`TraceReader`] path instead. Both paths share
-/// `open_validated`'s checks (magic, header, mid-record truncation with
-/// byte offsets) and produce identical records; the returned [`InputStats`]
-/// says which path served the bytes.
-pub fn load_trace(path: &Path, use_mmap: bool) -> io::Result<(Vec<TraceRecord>, InputStats)> {
+/// buffered [`TraceReader`]-style path. With `streaming: true` a
+/// successful mapping is returned as a windowed [`RecordStore::Mapped`]
+/// (`window == 0` picks [`DEFAULT_STREAM_WINDOW`]) whose cursors decode
+/// records on demand; every other combination decodes the whole trace
+/// up front. All paths share `open_validated`'s checks (magic, header,
+/// mid-record truncation with byte offsets) and produce bit-identical
+/// records; the returned [`InputStats`] says which path served the
+/// bytes and what the residency bound is. A streaming store's
+/// `peak_resident_records` starts at zero and is read off the store's
+/// gauge after the run that consumed its cursors.
+pub fn open_store(
+    path: &Path,
+    use_mmap: bool,
+    streaming: bool,
+    window: usize,
+) -> io::Result<(RecordStore<'static>, InputStats)> {
     let (file, count, len) = open_validated(path)?;
     if use_mmap {
         // Map failures (unsupported target, exotic filesystem) fall back to
         // the buffered path below; validation already happened above.
         if let Ok(m) = mmap::MmapTrace::from_file(&file, count, len) {
-            let stats = InputStats { bytes_mapped: m.mapped_len() as u64, bytes_copied: 0 };
-            return Ok((m.decode_all(), stats));
+            let mapped = m.mapped_len() as u64;
+            if streaming {
+                let store = RecordStore::mapped(m, window);
+                let stats = InputStats {
+                    bytes_mapped: mapped,
+                    bytes_copied: 0,
+                    peak_resident_records: 0, // read off the gauge post-run
+                    window_records: store.window_records(),
+                };
+                return Ok((store, stats));
+            }
+            let stats = InputStats {
+                bytes_mapped: mapped,
+                bytes_copied: 0,
+                peak_resident_records: count,
+                window_records: 0,
+            };
+            return Ok((RecordStore::from_vec(m.decode_all()), stats));
         }
     }
     let mut r = BufReader::new(file);
@@ -272,10 +312,27 @@ pub fn load_trace(path: &Path, use_mmap: bool) -> io::Result<(Vec<TraceRecord>, 
         recs.push(TraceRecord::decode(&buf));
     }
     let copied = HEADER_SIZE as u64 + count * RECORD_SIZE as u64;
-    Ok((recs, InputStats { bytes_mapped: 0, bytes_copied: copied }))
+    let stats = InputStats {
+        bytes_mapped: 0,
+        bytes_copied: copied,
+        peak_resident_records: count,
+        window_records: 0,
+    };
+    Ok((RecordStore::from_vec(recs), stats))
 }
 
-/// Read a whole trace into memory.
+/// Read a whole trace into memory (full decode), preferring the
+/// zero-copy mmap path. A thin wrapper over [`open_store`] with
+/// streaming off; see there for the validation and fallback rules.
+pub fn load_trace(path: &Path, use_mmap: bool) -> io::Result<(Vec<TraceRecord>, InputStats)> {
+    let (store, stats) = open_store(path, use_mmap, false, 0)?;
+    Ok((store.into_records(), stats))
+}
+
+/// Read a whole trace into memory — the **full decode** convenience
+/// wrapper over [`open_store`]. Every record is materialized up front;
+/// for bounded-memory access open a store and stream through its
+/// cursors instead.
 pub fn read_trace(path: &Path) -> io::Result<Vec<TraceRecord>> {
     Ok(load_trace(path, true)?.0)
 }
@@ -629,9 +686,25 @@ mod tests {
         let (mapped, mstats) = load_trace(&p, true).unwrap();
         let (buffered, bstats) = load_trace(&p, false).unwrap();
         assert_eq!(mapped, buffered);
-        assert_eq!(bstats, InputStats { bytes_mapped: 0, bytes_copied: 12 + 500 * 64 });
+        assert_eq!(
+            bstats,
+            InputStats {
+                bytes_mapped: 0,
+                bytes_copied: 12 + 500 * 64,
+                peak_resident_records: 500,
+                window_records: 0,
+            }
+        );
         if mmap::MmapTrace::supported() {
-            assert_eq!(mstats, InputStats { bytes_mapped: 12 + 500 * 64, bytes_copied: 0 });
+            assert_eq!(
+                mstats,
+                InputStats {
+                    bytes_mapped: 12 + 500 * 64,
+                    bytes_copied: 0,
+                    peak_resident_records: 500,
+                    window_records: 0,
+                }
+            );
             let m = mmap::MmapTrace::open(&p).unwrap();
             assert_eq!(m.count(), 500);
             assert_eq!(m.get(499), buffered[499]);

@@ -1,0 +1,449 @@
+//! Bounded-memory record access: [`RecordStore`], [`RecordsView`], and
+//! [`RecordCursor`].
+//!
+//! PR 7's mmap path still called [`super::mmap::MmapTrace::decode_all`]
+//! and materialized every record before the first batch was encoded, so
+//! a multi-gigabyte `.smt` file cost a multi-gigabyte resident set. The
+//! engine, however, only ever reads each sub-trace *sequentially*: the
+//! record at the read position is encoded, scattered, and never touched
+//! again (context/history features live in
+//! [`crate::features::ContextTracker`], not in past records). A store
+//! can therefore hand each sub-trace a cursor that decodes a small
+//! window of records on demand and drops it when the cursor moves on —
+//! resident memory becomes O(subtraces × window × 64 B) regardless of
+//! trace size, and the decoded values are bit-identical to a full
+//! decode because [`super::TraceRecord::decode`] runs on the same
+//! mapped bytes either way.
+//!
+//! Three layers:
+//!
+//! * [`RecordStore`] — owns the input: a decoded in-memory slice/vec,
+//!   or an [`super::mmap::MmapTrace`] plus the configured window.
+//! * [`RecordsView`] — a cheap, cloneable range of a store. Sub-trace
+//!   splitting (`BatchEngine::submit`, the pool's shards) slices views
+//!   instead of `&[TraceRecord]` slices.
+//! * [`RecordCursor`] — the per-sub-trace reader: zero-cost over
+//!   slices, a windowed decode buffer over mappings.
+//!
+//! Peak-residency accounting is deterministic by construction: each
+//! cursor tracks the largest buffer it ever held and adds *deltas* to a
+//! shared [`ResidentGauge`], so the gauge's total is the sum of
+//! per-cursor maxima — an order-independent quantity no thread
+//! interleaving can change, and an upper bound on true simultaneous
+//! residency (at most subtraces × window).
+
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::mmap::MmapTrace;
+use super::TraceRecord;
+
+/// Default streaming window in records (64 KiB of decoded trace per
+/// sub-trace cursor) when the caller does not configure one.
+pub const DEFAULT_STREAM_WINDOW: usize = 1024;
+
+/// Shared peak-residency counter for every cursor of one store.
+///
+/// Cursors add the *increase* of their own maximum buffer length, so
+/// the total is Σ per-cursor maxima: deterministic under any thread
+/// schedule, and exactly what `peak_resident_records` reports.
+#[derive(Debug, Default)]
+pub struct ResidentGauge {
+    peak_sum: AtomicU64,
+}
+
+impl ResidentGauge {
+    fn add(&self, records: u64) {
+        // Relaxed is enough: the sum is read only after every cursor
+        // has been dropped/joined, and addition is order-independent.
+        self.peak_sum.fetch_add(records, Ordering::Relaxed);
+    }
+
+    /// Sum of per-cursor maximum buffered record counts so far.
+    pub fn peak_sum(&self) -> u64 {
+        self.peak_sum.load(Ordering::Relaxed)
+    }
+}
+
+/// Where a simulation's records live: fully decoded in memory, or
+/// mapped on disk and decoded through bounded windows on demand.
+pub enum RecordStore<'a> {
+    /// Fully decoded records (in-memory sources, bench traces, and the
+    /// full-decode file path).
+    Memory(Cow<'a, [TraceRecord]>),
+    /// A mapped `.smt` trace streamed through per-cursor windows of
+    /// `window` records.
+    Mapped {
+        /// The validated mapping (shared by every view and cursor).
+        map: Arc<MmapTrace>,
+        /// Decode-window size in records for each cursor.
+        window: usize,
+        /// Shared peak-residency accounting across all cursors.
+        gauge: Arc<ResidentGauge>,
+    },
+}
+
+impl<'a> RecordStore<'a> {
+    /// A store over borrowed, already-decoded records.
+    pub fn from_records(records: &'a [TraceRecord]) -> RecordStore<'a> {
+        RecordStore::Memory(Cow::Borrowed(records))
+    }
+
+    /// Records in the store.
+    pub fn len(&self) -> usize {
+        match self {
+            RecordStore::Memory(r) => r.len(),
+            RecordStore::Mapped { map, .. } => map.count() as usize,
+        }
+    }
+
+    /// Whether the store holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The configured streaming window in records (0 when the store is
+    /// fully decoded — there is no window).
+    pub fn window_records(&self) -> u64 {
+        match self {
+            RecordStore::Memory(_) => 0,
+            RecordStore::Mapped { window, .. } => *window as u64,
+        }
+    }
+
+    /// Peak resident decoded records: the full length for in-memory
+    /// stores, the gauge's sum of per-cursor maxima for mapped ones
+    /// (meaningful once the run that consumed the cursors finished).
+    pub fn peak_resident_records(&self) -> u64 {
+        match self {
+            RecordStore::Memory(r) => r.len() as u64,
+            RecordStore::Mapped { gauge, .. } => gauge.peak_sum(),
+        }
+    }
+
+    /// A view of the whole store.
+    pub fn view(&self) -> RecordsView<'_> {
+        match self {
+            RecordStore::Memory(r) => RecordsView::Slice(r),
+            RecordStore::Mapped { map, window, gauge } => RecordsView::Mapped {
+                map: map.clone(),
+                start: 0,
+                len: map.count() as usize,
+                window: *window,
+                gauge: gauge.clone(),
+            },
+        }
+    }
+
+    /// Decode the whole store into an owned `Vec` (the "full decode"
+    /// escape hatch — [`super::read_trace`] and dataset building).
+    pub fn into_records(self) -> Vec<TraceRecord> {
+        match self {
+            RecordStore::Memory(r) => r.into_owned(),
+            RecordStore::Mapped { map, .. } => map.decode_all(),
+        }
+    }
+
+    /// Re-own any borrowed records so the store can outlive its source
+    /// (the job server holds stores across scheduler turns).
+    pub fn into_static(self) -> RecordStore<'static> {
+        match self {
+            RecordStore::Memory(r) => RecordStore::Memory(Cow::Owned(r.into_owned())),
+            RecordStore::Mapped { map, window, gauge } => {
+                RecordStore::Mapped { map, window, gauge }
+            }
+        }
+    }
+}
+
+impl RecordStore<'static> {
+    /// A store over owned, already-decoded records.
+    pub fn from_vec(records: Vec<TraceRecord>) -> RecordStore<'static> {
+        RecordStore::Memory(Cow::Owned(records))
+    }
+
+    /// A streaming store over a validated mapping. `window == 0` picks
+    /// [`DEFAULT_STREAM_WINDOW`].
+    pub fn mapped(map: MmapTrace, window: usize) -> RecordStore<'static> {
+        let window = if window == 0 { DEFAULT_STREAM_WINDOW } else { window };
+        RecordStore::Mapped {
+            map: Arc::new(map),
+            window,
+            gauge: Arc::new(ResidentGauge::default()),
+        }
+    }
+}
+
+impl<'a> From<&'a [TraceRecord]> for RecordStore<'a> {
+    fn from(records: &'a [TraceRecord]) -> RecordStore<'a> {
+        RecordStore::from_records(records)
+    }
+}
+
+/// A contiguous range of a [`RecordStore`]: what the engine's job
+/// specs, the pool's shards, and the sequential loop consume instead of
+/// `&[TraceRecord]`. Cloning and slicing are cheap (Arc bumps); actual
+/// decoding happens in the [`RecordCursor`] each sub-trace opens.
+#[derive(Clone)]
+pub enum RecordsView<'a> {
+    /// A plain slice of decoded records.
+    Slice(&'a [TraceRecord]),
+    /// A range of a mapped trace, decoded through a windowed cursor.
+    Mapped {
+        /// The shared mapping.
+        map: Arc<MmapTrace>,
+        /// First record of this view within the mapping.
+        start: u64,
+        /// Records in this view.
+        len: usize,
+        /// Decode-window size in records.
+        window: usize,
+        /// Shared peak-residency accounting.
+        gauge: Arc<ResidentGauge>,
+    },
+}
+
+impl<'a> RecordsView<'a> {
+    /// Records in the view.
+    pub fn len(&self) -> usize {
+        match self {
+            RecordsView::Slice(s) => s.len(),
+            RecordsView::Mapped { len, .. } => *len,
+        }
+    }
+
+    /// Whether the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The sub-view covering records `lo..hi` of this view.
+    pub fn slice(&self, lo: usize, hi: usize) -> RecordsView<'a> {
+        match self {
+            RecordsView::Slice(s) => RecordsView::Slice(&s[lo..hi]),
+            RecordsView::Mapped { map, start, len, window, gauge } => {
+                assert!(lo <= hi && hi <= *len, "view slice {lo}..{hi} out of 0..{len}");
+                RecordsView::Mapped {
+                    map: map.clone(),
+                    start: start + lo as u64,
+                    len: hi - lo,
+                    window: *window,
+                    gauge: gauge.clone(),
+                }
+            }
+        }
+    }
+
+    /// Open a sequential reader over the view.
+    pub fn cursor(&self) -> RecordCursor<'a> {
+        match self {
+            RecordsView::Slice(s) => RecordCursor::Slice(s),
+            RecordsView::Mapped { map, start, len, window, gauge } => {
+                RecordCursor::Mapped(MappedCursor {
+                    map: map.clone(),
+                    start: *start,
+                    len: *len,
+                    window: (*window).max(1),
+                    buf: Vec::new(),
+                    base: 0,
+                    max_resident: 0,
+                    gauge: gauge.clone(),
+                })
+            }
+        }
+    }
+
+    /// Decode the whole view into an owned `Vec`.
+    pub fn to_vec(&self) -> Vec<TraceRecord> {
+        match self {
+            RecordsView::Slice(s) => s.to_vec(),
+            RecordsView::Mapped { map, start, len, .. } => {
+                (0..*len).map(|i| map.get(start + i as u64)).collect()
+            }
+        }
+    }
+}
+
+impl<'a> From<&'a [TraceRecord]> for RecordsView<'a> {
+    fn from(records: &'a [TraceRecord]) -> RecordsView<'a> {
+        RecordsView::Slice(records)
+    }
+}
+
+/// Per-sub-trace record reader. Over a slice it is a zero-cost
+/// passthrough; over a mapping it keeps a decode buffer of at most
+/// `window` records, refilled forward from the requested index. Access
+/// within the engine is monotonically non-decreasing (each position is
+/// read at encode time and again at scatter time, then advanced), so
+/// each record's bytes are decoded exactly once per cursor.
+pub enum RecordCursor<'a> {
+    /// Zero-cost reads from a decoded slice.
+    Slice(&'a [TraceRecord]),
+    /// Windowed on-demand decoding from a mapping.
+    Mapped(MappedCursor),
+}
+
+/// The mapped variant of [`RecordCursor`]: a bounded decode buffer
+/// covering records `base..base + buf.len()` of the view.
+pub struct MappedCursor {
+    map: Arc<MmapTrace>,
+    start: u64,
+    len: usize,
+    window: usize,
+    buf: Vec<TraceRecord>,
+    base: usize,
+    max_resident: usize,
+    gauge: Arc<ResidentGauge>,
+}
+
+impl RecordCursor<'_> {
+    /// Records reachable through the cursor.
+    pub fn len(&self) -> usize {
+        match self {
+            RecordCursor::Slice(s) => s.len(),
+            RecordCursor::Mapped(c) => c.len,
+        }
+    }
+
+    /// Whether the cursor covers no records.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Record `i` of the view (decoding a fresh window on a miss).
+    pub fn get(&mut self, i: usize) -> TraceRecord {
+        match self {
+            RecordCursor::Slice(s) => s[i],
+            RecordCursor::Mapped(c) => c.get(i),
+        }
+    }
+}
+
+impl MappedCursor {
+    fn get(&mut self, i: usize) -> TraceRecord {
+        assert!(i < self.len, "record {i} out of bounds ({} records)", self.len);
+        if i < self.base || i >= self.base + self.buf.len() {
+            self.refill(i);
+        }
+        self.buf[i - self.base]
+    }
+
+    /// Decode `window` records starting at `i` (clamped to the view's
+    /// end), replacing the buffer, and account any new residency peak.
+    #[cold]
+    fn refill(&mut self, i: usize) {
+        let end = (i + self.window).min(self.len);
+        let map = &self.map;
+        let start = self.start;
+        self.buf.clear();
+        self.buf.extend((i..end).map(|j| map.get(start + j as u64)));
+        self.base = i;
+        if self.buf.len() > self.max_resident {
+            self.gauge.add((self.buf.len() - self.max_resident) as u64);
+            self.max_resident = self.buf.len();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{TraceWriter, HEADER_SIZE, RECORD_SIZE};
+    use super::*;
+    use crate::des::{simulate, SimConfig};
+    use crate::workload::find;
+    use std::path::PathBuf;
+
+    fn write_trace(name: &str, n: u64) -> PathBuf {
+        let dir = std::env::temp_dir().join("simnet_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let cfg = SimConfig::default_o3();
+        let b = find("namd").unwrap();
+        let mut w = TraceWriter::create(&path).unwrap();
+        simulate(&cfg, b.workload(0).stream(), n, |e| {
+            w.write(&TraceRecord::from(e)).unwrap();
+        });
+        assert_eq!(w.finish().unwrap(), n);
+        path
+    }
+
+    #[test]
+    fn slice_store_is_zero_cost_passthrough() {
+        let path = write_trace("slice.smt", 100);
+        let recs = super::super::read_trace(&path).unwrap();
+        let store = RecordStore::from_records(&recs);
+        assert_eq!(store.len(), 100);
+        assert_eq!(store.window_records(), 0);
+        let view = store.view();
+        let mut cur = view.slice(10, 60).cursor();
+        assert_eq!(cur.len(), 50);
+        for i in 0..50 {
+            assert_eq!(cur.get(i), recs[10 + i]);
+        }
+        assert_eq!(view.to_vec(), recs);
+    }
+
+    #[test]
+    fn mapped_cursor_matches_full_decode_and_bounds_residency() {
+        let path = write_trace("mapped.smt", 233);
+        if !MmapTrace::supported() {
+            return;
+        }
+        let full = super::super::read_trace(&path).unwrap();
+        let map = MmapTrace::open(&path).unwrap();
+        let store = RecordStore::mapped(map, 16);
+        assert_eq!(store.len(), 233);
+        assert_eq!(store.window_records(), 16);
+        let view = store.view();
+        // Split into uneven sub-views straddling window boundaries.
+        let bounds = [(0usize, 7usize), (7, 100), (100, 233)];
+        for &(lo, hi) in &bounds {
+            let mut cur = view.slice(lo, hi).cursor();
+            for i in 0..hi - lo {
+                // Each position is read twice (encode + scatter order).
+                assert_eq!(cur.get(i), full[lo + i]);
+                assert_eq!(cur.get(i), full[lo + i]);
+            }
+        }
+        // Gauge holds Σ per-cursor maxima: min(window, sub-view len).
+        let expect: u64 = bounds.iter().map(|&(lo, hi)| (hi - lo).min(16) as u64).sum();
+        assert_eq!(store.peak_resident_records(), expect);
+        assert_eq!(view.to_vec(), full);
+    }
+
+    #[test]
+    fn zero_window_uses_the_default() {
+        let path = write_trace("defwin.smt", 10);
+        if !MmapTrace::supported() {
+            return;
+        }
+        let store = RecordStore::mapped(MmapTrace::open(&path).unwrap(), 0);
+        assert_eq!(store.window_records(), DEFAULT_STREAM_WINDOW as u64);
+        // Window larger than the trace: one refill buffers everything.
+        let mut cur = store.view().cursor();
+        let full = store.view().to_vec();
+        for (i, want) in full.iter().enumerate() {
+            assert_eq!(cur.get(i), *want);
+        }
+        drop(cur);
+        assert_eq!(store.peak_resident_records(), 10);
+    }
+
+    #[test]
+    fn into_records_decodes_mapped_stores() {
+        let n = 37u64;
+        let path = write_trace("intorec.smt", n);
+        let full = super::super::read_trace(&path).unwrap();
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            (HEADER_SIZE + n as usize * RECORD_SIZE) as u64
+        );
+        if MmapTrace::supported() {
+            let store = RecordStore::mapped(MmapTrace::open(&path).unwrap(), 8);
+            assert_eq!(store.into_records(), full);
+        }
+        let store = RecordStore::from_vec(full.clone());
+        assert_eq!(store.into_static().into_records(), full);
+    }
+}

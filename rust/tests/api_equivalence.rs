@@ -7,8 +7,8 @@
 
 use simnet::api::{ExecMode, PredictorSpec, SimReport, Simulation};
 use simnet::coordinator::{
-    simulate_parallel, simulate_pool_report, simulate_sequential, BatchEngine, EngineOptions,
-    EngineStats, JobSpec, PoolOptions, SimOutcome,
+    simulate_parallel_with, simulate_pool_report, simulate_sequential, BatchEngine, EngineOptions,
+    EngineStats, JobSpec, ParallelOptions, PoolOptions, SimOutcome,
 };
 use simnet::des::{simulate, SimConfig};
 use simnet::predictor::TablePredictor;
@@ -52,7 +52,7 @@ fn builder_engine_matches_legacy_batch_engine() {
     let mut p = TablePredictor::new(16);
     let mut engine = BatchEngine::with_options(&mut p, opts);
     let job = JobSpec {
-        records: &recs,
+        records: (&recs[..]).into(),
         cfg: &cfg,
         subtraces: 4,
         window: 500,
@@ -87,11 +87,12 @@ fn builder_engine_matches_legacy_batch_engine() {
 
 #[test]
 fn builder_engine_matches_legacy_parallel() {
-    // The historical `simulate_parallel` entry point (unbounded batch,
-    // serial encode) must also be reproduced exactly.
+    // The one-shot parallel entry point (unbounded batch, serial
+    // encode) must also be reproduced exactly.
     let (recs, cfg) = records("leela", 4_000);
     let mut p = TablePredictor::new(16);
-    let legacy = simulate_parallel(&recs, &cfg, &mut p, 4, 0).unwrap();
+    let opts = ParallelOptions { subtraces: 4, ..ParallelOptions::default() };
+    let legacy = simulate_parallel_with((&recs[..]).into(), &cfg, &mut p, &opts).unwrap();
 
     let report = Simulation::new()
         .records(&recs)
@@ -175,7 +176,12 @@ fn sim_report_to_json_golden() {
             engine_seconds: 0.25,
         }),
         des_cpi: Some(1.25),
-        input: InputStats { bytes_mapped: 640, bytes_copied: 0 },
+        input: InputStats {
+            bytes_mapped: 640,
+            bytes_copied: 0,
+            peak_resident_records: 10,
+            window_records: 0,
+        },
     };
     let expected = concat!(
         "{\n",
@@ -194,6 +200,8 @@ fn sim_report_to_json_golden() {
         "  \"wall_seconds\": 0.250000,\n",
         "  \"bytes_mapped\": 640,\n",
         "  \"bytes_copied\": 0,\n",
+        "  \"peak_resident_records\": 10,\n",
+        "  \"window_records\": 0,\n",
         "  \"windows\": [[500, 700], [500, 800]],\n",
         "  \"engine\": {\"batches\": 250, \"slots\": 1000, \"target_batch\": 4, ",
         "\"starved\": 2, \"filled\": 248, \"subtraces\": 4, \"encode_threads\": 1, ",

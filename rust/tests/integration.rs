@@ -7,7 +7,7 @@
 
 use std::path::Path;
 
-use simnet::coordinator::{simulate_parallel, simulate_sequential};
+use simnet::coordinator::{simulate_parallel_with, simulate_sequential, ParallelOptions};
 use simnet::des::{simulate, SimConfig};
 use simnet::features::{ContextMode, ContextTracker};
 use simnet::predictor::{LatencyPredictor, MlPredictor, TablePredictor};
@@ -120,8 +120,11 @@ fn parallel_error_shrinks_with_subtrace_size() {
     for bench in ["gcc", "mcf", "xalancbmk", "lbm"] {
         let (recs, _) = records(bench, 24_000, 1);
         let seq = simulate_sequential(&recs, &cfg, &mut p, 0).unwrap();
-        let small = simulate_parallel(&recs, &cfg, &mut p, 24_000 / 150, 0).unwrap();
-        let big = simulate_parallel(&recs, &cfg, &mut p, 24_000 / 6_000, 0).unwrap();
+        let subs = |subtraces| ParallelOptions { subtraces, ..ParallelOptions::default() };
+        let small_opts = subs(24_000 / 150);
+        let big_opts = subs(24_000 / 6_000);
+        let small = simulate_parallel_with((&recs[..]).into(), &cfg, &mut p, &small_opts).unwrap();
+        let big = simulate_parallel_with((&recs[..]).into(), &cfg, &mut p, &big_opts).unwrap();
         err_small_sum += cpi_error(small.cpi(), seq.cpi());
         err_big_sum += cpi_error(big.cpi(), seq.cpi());
     }
@@ -138,7 +141,8 @@ fn ml_runtime_smoke_and_accuracy() {
     let cfg = SimConfig::default_o3();
     let mut p = MlPredictor::load(dir, "c3", None).expect("load c3");
     assert_eq!(p.seq_len(), 32);
-    let out = simulate_parallel(&recs, &cfg, &mut p, 16, 0).unwrap();
+    let opts = ParallelOptions { subtraces: 16, ..ParallelOptions::default() };
+    let out = simulate_parallel_with((&recs[..]).into(), &cfg, &mut p, &opts).unwrap();
     assert_eq!(out.instructions, 4_000);
     let err = cpi_error(out.cpi(), stats.cpi());
     // Trained artifact should beat a coin flip by a wide margin; exact

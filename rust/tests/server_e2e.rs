@@ -91,6 +91,7 @@ fn direct_report(job: &JobRequest) -> Value {
         .window(job.window)
         .engine(job.engine)
         .input_seed(job.input_seed)
+        .streaming(job.streaming)
         .source(job.source.to_trace_source(job.mmap));
     Value::parse(&sim.run().expect("direct run").to_json_compact()).expect("direct json")
 }

@@ -1,0 +1,139 @@
+//! Streaming windowed simulation: the bounded-memory trace pull
+//! (`RecordStore` mapped cursors) must be byte-identical to the full
+//! up-front decode through every execution mode and predictor backend,
+//! window edge shapes must stream correctly, and the resident-record
+//! peak must stay within `subtraces x window`.
+
+use std::path::{Path, PathBuf};
+
+use simnet::api::{PredictorSpec, SimReport, Simulation, WeightsSource};
+use simnet::des::{simulate, SimConfig};
+use simnet::trace::mmap::MmapTrace;
+use simnet::trace::{TraceRecord, TraceWriter, DEFAULT_STREAM_WINDOW};
+use simnet::workload::find;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("simnet_streaming");
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir.join(name)
+}
+
+/// Write an `n`-instruction DES trace for `bench` and return its path.
+fn write_trace(name: &str, bench: &str, n: u64) -> PathBuf {
+    let path = tmp(name);
+    let cfg = SimConfig::default_o3();
+    let b = find(bench).unwrap();
+    let mut w = TraceWriter::create(&path).unwrap();
+    simulate(&cfg, b.workload(0).stream(), n, |e| {
+        w.write(&TraceRecord::from(e)).unwrap();
+    });
+    assert_eq!(w.finish().unwrap(), n);
+    path
+}
+
+fn native_fc2() -> PredictorSpec {
+    PredictorSpec::native("artifacts", "fc2", 8).with_weights_source(WeightsSource::Init)
+}
+
+fn run(
+    path: &Path,
+    spec: PredictorSpec,
+    subtraces: usize,
+    workers: usize,
+    stream_window: usize,
+    streaming: bool,
+) -> SimReport {
+    Simulation::new()
+        .trace_file(path)
+        .predictor(spec)
+        .subtraces(subtraces)
+        .workers(workers)
+        .window(1_000)
+        .stream_window(stream_window)
+        .streaming(streaming)
+        .run()
+        .unwrap()
+}
+
+#[test]
+fn streaming_matches_full_decode_across_modes_and_backends() {
+    for (bench, n) in [("gcc", 6_000u64), ("leela", 4_000)] {
+        let path = write_trace(&format!("{bench}_stream.smt"), bench, n);
+        for spec in [PredictorSpec::table(16), native_fc2()] {
+            // The pool row is table-only to keep the native runs cheap;
+            // the streaming/full split happens before any predictor work.
+            let modes: &[(usize, usize)] = if matches!(spec, PredictorSpec::Table { .. }) {
+                &[(1, 1), (4, 1), (8, 2)]
+            } else {
+                &[(1, 1), (4, 1)]
+            };
+            for &(subtraces, workers) in modes {
+                let s = run(&path, spec.clone(), subtraces, workers, 0, true);
+                let f = run(&path, spec.clone(), subtraces, workers, 0, false);
+                let tag = format!("{bench} {} s{subtraces} w{workers}", spec.label());
+                assert_eq!(s.mode, f.mode, "{tag}");
+                assert_eq!(s.outcome.instructions, f.outcome.instructions, "{tag}");
+                assert_eq!(s.outcome.cycles, f.outcome.cycles, "{tag}");
+                assert_eq!(s.outcome.windows, f.outcome.windows, "{tag}");
+                assert_eq!(s.outcome.inferences, f.outcome.inferences, "{tag}");
+                assert_eq!(s.des_cpi, f.des_cpi, "{tag}");
+                // Only the input accounting may differ: the streamed run
+                // reports its window, the full decode holds everything.
+                if MmapTrace::supported() {
+                    assert_eq!(s.input.window_records, DEFAULT_STREAM_WINDOW as u64, "{tag}");
+                    assert!(s.input.peak_resident_records > 0, "{tag}");
+                }
+                assert_eq!(f.input.window_records, 0, "{tag}");
+                assert_eq!(f.input.peak_resident_records, n, "{tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn window_edge_shapes_stream_identically() {
+    // Window smaller than a sub-trace, window larger than the whole
+    // trace, a one-record window, and a single-record trace — over a
+    // 17-record length that divides into nothing.
+    let odd = write_trace("odd17.smt", "xz", 17);
+    let one = write_trace("one1.smt", "xz", 1);
+    for (path, n, stream_window, subtraces) in
+        [(&odd, 17u64, 7usize, 4usize), (&odd, 17, 4_096, 4), (&odd, 17, 1, 2), (&one, 1, 3, 1)]
+    {
+        let s = run(path, PredictorSpec::table(8), subtraces, 1, stream_window, true);
+        let f = run(path, PredictorSpec::table(8), subtraces, 1, stream_window, false);
+        let tag = format!("n={n} win={stream_window} subs={subtraces}");
+        assert_eq!(s.outcome.instructions, n, "{tag}");
+        assert_eq!(s.outcome.cycles, f.outcome.cycles, "{tag}");
+        assert_eq!(s.outcome.windows, f.outcome.windows, "{tag}");
+        if MmapTrace::supported() {
+            assert_eq!(s.input.window_records, stream_window as u64, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn streamed_peak_residency_is_bounded_by_subtraces_times_window() {
+    if !MmapTrace::supported() {
+        return;
+    }
+    // A 10,000-record trace streamed through 8 sub-traces with a
+    // 64-record window: the trace is >= 10x the total window budget, so
+    // the bound is meaningful — a full decode holds all 10,000 records.
+    let path = write_trace("peak10k.smt", "xz", 10_000);
+    let report = run(&path, PredictorSpec::table(8), 8, 1, 64, true);
+    assert_eq!(report.outcome.instructions, 10_000);
+    assert_eq!(report.input.window_records, 64);
+    let peak = report.input.peak_resident_records;
+    assert!(peak > 0, "peak residency must be accounted");
+    assert!(peak <= 8 * 64, "peak {peak} exceeds subtraces x window");
+    // Every sub-trace is longer than the window and fully consumed, so
+    // each cursor peaks at exactly one window of records.
+    assert_eq!(peak, 8 * 64);
+    // Sequential streaming holds at most one window at a time.
+    let seq = run(&path, PredictorSpec::table(8), 1, 1, 64, true);
+    let full = run(&path, PredictorSpec::table(8), 1, 1, 64, false);
+    assert_eq!(seq.outcome.cycles, full.outcome.cycles);
+    assert_eq!(seq.input.peak_resident_records, 64);
+    assert_eq!(full.input.peak_resident_records, 10_000);
+}

@@ -11,7 +11,8 @@ use simnet::api::{ExecMode, PredictorSpec, Simulation, WeightsSource};
 use simnet::des::{simulate, SimConfig};
 use simnet::trace::mmap::MmapTrace;
 use simnet::trace::{
-    load_trace, InputStats, TraceRecord, TraceSource, TraceWriter, HEADER_SIZE, RECORD_SIZE,
+    load_trace, InputStats, TraceRecord, TraceSource, TraceWriter, DEFAULT_STREAM_WINDOW,
+    HEADER_SIZE, RECORD_SIZE,
 };
 use simnet::workload::find;
 
@@ -56,6 +57,9 @@ fn mmap_and_buffered_runs_are_byte_identical_across_modes() {
                     &[(1, 1, ExecMode::Sequential), (4, 1, ExecMode::Engine)]
                 };
             for &(subtraces, workers, mode) in modes {
+                // Streaming off: this test pins the mmap/buffered split
+                // under FULL decode (streaming identity has its own
+                // matrix in tests/streaming.rs).
                 let run = |mmap: bool| {
                     Simulation::new()
                         .trace_file(&path)
@@ -64,6 +68,7 @@ fn mmap_and_buffered_runs_are_byte_identical_across_modes() {
                         .workers(workers)
                         .window(1_000)
                         .mmap(mmap)
+                        .streaming(false)
                         .run()
                         .unwrap()
                 };
@@ -77,19 +82,18 @@ fn mmap_and_buffered_runs_are_byte_identical_across_modes() {
                 assert_eq!(m.outcome.windows, b.outcome.windows, "{tag}");
                 assert_eq!(m.outcome.inferences, b.outcome.inferences, "{tag}");
                 assert_eq!(m.des_cpi, b.des_cpi, "{tag}");
-                // Each path reports its bytes in its own column.
+                // Each path reports its bytes in its own column; a
+                // full-decode run holds every record resident.
                 let total = file_bytes(n);
-                assert_eq!(
-                    b.input,
-                    InputStats { bytes_mapped: 0, bytes_copied: total },
-                    "{tag}"
-                );
+                let full = |mapped: u64, copied: u64| InputStats {
+                    bytes_mapped: mapped,
+                    bytes_copied: copied,
+                    peak_resident_records: n,
+                    window_records: 0,
+                };
+                assert_eq!(b.input, full(0, total), "{tag}");
                 if MmapTrace::supported() {
-                    assert_eq!(
-                        m.input,
-                        InputStats { bytes_mapped: total, bytes_copied: 0 },
-                        "{tag}"
-                    );
+                    assert_eq!(m.input, full(total, 0), "{tag}");
                 } else {
                     assert_eq!(m.input, b.input, "{tag}");
                 }
@@ -102,7 +106,12 @@ fn mmap_and_buffered_runs_are_byte_identical_across_modes() {
 fn per_source_and_per_session_mmap_switches_compose() {
     let path = write_trace("compose.smt", "xz", 300);
     let total = file_bytes(300);
-    let buffered = InputStats { bytes_mapped: 0, bytes_copied: total };
+    let buffered = InputStats {
+        bytes_mapped: 0,
+        bytes_copied: total,
+        peak_resident_records: 300,
+        window_records: 0,
+    };
     let run = |source: TraceSource<'static>, session_mmap: bool| {
         Simulation::new()
             .source(source)
@@ -115,9 +124,19 @@ fn per_source_and_per_session_mmap_switches_compose() {
     assert_eq!(run(TraceSource::file_buffered(&path), true).input, buffered);
     assert_eq!(run(TraceSource::file(&path), false).input, buffered);
     // Both allowing: the zero-copy path, where the target supports it.
+    // Streaming defaults on for mapped files, so the run reports the
+    // default window, and a 300-record trace fits inside one window.
     let both = run(TraceSource::file(&path), true);
     if MmapTrace::supported() {
-        assert_eq!(both.input, InputStats { bytes_mapped: total, bytes_copied: 0 });
+        assert_eq!(
+            both.input,
+            InputStats {
+                bytes_mapped: total,
+                bytes_copied: 0,
+                peak_resident_records: 300,
+                window_records: DEFAULT_STREAM_WINDOW as u64,
+            }
+        );
     } else {
         assert_eq!(both.input, buffered);
     }
@@ -167,9 +186,15 @@ fn edge_shaped_traces_load_identically_on_both_paths() {
         let (b, bstats) = load_trace(path, false).unwrap();
         assert_eq!(m.len() as u64, n, "{}", path.display());
         assert_eq!(m, b, "{}", path.display());
-        assert_eq!(bstats, InputStats { bytes_mapped: 0, bytes_copied: file_bytes(n) });
+        let full = |mapped: u64, copied: u64| InputStats {
+            bytes_mapped: mapped,
+            bytes_copied: copied,
+            peak_resident_records: n,
+            window_records: 0,
+        };
+        assert_eq!(bstats, full(0, file_bytes(n)));
         if MmapTrace::supported() {
-            assert_eq!(mstats, InputStats { bytes_mapped: file_bytes(n), bytes_copied: 0 });
+            assert_eq!(mstats, full(file_bytes(n), 0));
         } else {
             assert_eq!(mstats, bstats);
         }
